@@ -1,0 +1,108 @@
+"""HLO inspection for the perf loop: top collectives by (bytes x trip count).
+
+  PYTHONPATH=src python -m benchmarks.hlo_tools --arch granite-moe-1b-a400m \
+      --shape train_4k --mesh single --top 15
+"""
+from __future__ import annotations
+
+import argparse
+import re
+
+
+def top_collectives(hlo_text: str, top: int = 15):
+    """Rank collective ops by bytes * trip-multiplicity."""
+    from repro.launch.dryrun import (_COLLECTIVES, _shape_bytes,
+                                     _split_computations, _trip_count)
+    comps = _split_computations(hlo_text)
+
+    # compute multiplicity of each computation (product of loop trip counts)
+    calls = {}
+    for name, lines in comps.items():
+        sub = []
+        for line in lines:
+            m = re.match(r"^[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", line)
+            if not m:
+                continue
+            op = m.group(2).split(".")[0]
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                trips = _trip_count(comps.get(mc.group(1), [])) if mc else 1
+                if mb:
+                    sub.append((mb.group(1), trips))
+            elif op in ("call", "fusion", "conditional"):
+                for mm in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", line):
+                    sub.append((mm.group(1), 1))
+        calls[name] = sub
+
+    mult = {"ENTRY": 1}
+    changed = True
+    while changed:
+        changed = False
+        for name, sub in calls.items():
+            if name not in mult:
+                continue
+            for child, trips in sub:
+                m2 = mult[name] * trips
+                if mult.get(child, 0) < m2:
+                    mult[child] = m2
+                    changed = True
+
+    entries = []
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 0)
+        if m_comp == 0:
+            continue
+        for line in lines:
+            m = re.match(r"^([%\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)",
+                         line)
+            if not m:
+                continue
+            var, type_str, op, rest = m.groups()
+            base = op.split(".")[0].removesuffix("-start")
+            if base in _COLLECTIVES:
+                b = _shape_bytes(type_str)
+                entries.append((b * m_comp, base, b, m_comp, type_str[:60],
+                                name[:40]))
+    entries.sort(reverse=True)
+    return entries[:top]
+
+
+def main():
+    from repro.launch.dryrun import dryrun_one  # sets XLA_FLAGS on import
+    import repro.launch.dryrun as dr
+    import jax
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--mix", default=None)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    multi = args.mesh == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    bundle = get_config(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    if shape.kind == "train":
+        step, sds, out_sh = dr.build_train_step(bundle, shape, mesh, multi,
+                                                args.mix)
+    elif shape.kind == "prefill":
+        step, sds, out_sh = dr.build_prefill_step(bundle, shape, mesh, multi)
+    else:
+        step, sds, out_sh = dr.build_decode_step(bundle, shape, mesh, multi)
+    with mesh:
+        jitted = jax.jit(step, out_shardings=out_sh) if out_sh else jax.jit(step)
+        compiled = jitted.lower(*sds).compile()
+    text = compiled.as_text()
+    print(f"{'bytes*trips':>14s} {'op':>18s} {'bytes':>12s} {'trips':>7s} "
+          f"shape / computation")
+    for tot, op, b, m, tstr, comp in top_collectives(text, args.top):
+        print(f"{tot:14.3e} {op:>18s} {b:12.3e} {m:7d} {tstr}  [{comp}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape) on the single-pod mesh (256 x TPU v5e):
+
+    compute    = FLOPs / (chips * 197 TFLOP/s)
+    memory     = bytes / (chips * 819 GB/s)
+    collective = collective_bytes_per_device / 50 GB/s per-link ICI
+
+Methodology notes (also in EXPERIMENTS.md):
+  * XLA:CPU ``cost_analysis`` counts while-loop (lax.scan) bodies ONCE, so
+    its raw flops/bytes under-count scanned programs (layers x local steps).
+    We therefore derive compute/memory from analytic workload formulas
+    (standard 6ND MFU accounting + attention/SSD terms) and report the raw
+    HLO numbers alongside for reference.
+  * Collective bytes ARE trip-count corrected (launch.dryrun parses the
+    post-SPMD HLO call graph and multiplies loop bodies by trip count), and
+    are per-device (the partitioned module is the per-device program).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+CHIPS = {"single": 256, "multi": 512}
+
+
+def analytic_flops(arch: str, shape_name: str) -> dict:
+    """Global useful FLOPs per compiled step (train: one block iteration)."""
+    bundle = get_config(arch)
+    cfg = bundle.model
+    shape = INPUT_SHAPES[shape_name]
+    T = bundle.parallel.local_steps
+    L_attn = sum(1 for t in cfg.block_types() if t in ("attn", "moe"))
+    L_mamba = sum(1 for t in cfg.block_types() if t == "mamba")
+    N_active = cfg.active_params()
+
+    H, Dh = cfg.num_heads, cfg.head_dim
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len      # per local step
+        W = min(shape.seq_len, cfg.attention_window or shape.seq_len)
+        dense = 6 * N_active * tokens
+        attn = 6 * L_attn * shape.global_batch * H * Dh * shape.seq_len * W
+        ssm = 6 * L_mamba * tokens * (2 * cfg.ssm_expand * cfg.d_model) * (
+            cfg.ssm_chunk + cfg.ssm_state) // max(cfg.ssm_head_dim, 1) \
+            if L_mamba else 0
+        total = T * (dense + attn + ssm)
+        model_flops = T * 6 * N_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        W = min(shape.seq_len, cfg.attention_window or shape.seq_len)
+        dense = 2 * N_active * tokens
+        attn = 2 * L_attn * shape.global_batch * H * Dh * shape.seq_len * W
+        ssm = 2 * L_mamba * tokens * (2 * cfg.ssm_expand * cfg.d_model) * (
+            cfg.ssm_chunk + cfg.ssm_state) // max(cfg.ssm_head_dim, 1) \
+            if L_mamba else 0
+        total = dense + attn + ssm
+        model_flops = 2 * N_active * tokens
+    else:  # decode: ONE token per sequence
+        B = shape.global_batch
+        if shape.name == "long_500k" and cfg.family != "ssm":
+            C = min(cfg.long_context_window, shape.seq_len)
+        elif cfg.attention_window:
+            C = min(cfg.attention_window, shape.seq_len)
+        else:
+            C = shape.seq_len
+        dense = 2 * N_active * B
+        attn = 4 * L_attn * B * H * Dh * C
+        ssm = 6 * L_mamba * B * (cfg.ssm_expand * cfg.d_model) * cfg.ssm_state
+        total = dense + attn + ssm
+        model_flops = 2 * N_active * B
+    return {"analytic_flops": float(total), "model_flops": float(model_flops)}
+
+
+def analytic_bytes(arch: str, shape_name: str) -> float:
+    """Global HBM traffic estimate per step (params + caches + activations)."""
+    bundle = get_config(arch)
+    cfg = bundle.model
+    shape = INPUT_SHAPES[shape_name]
+    T = bundle.parallel.local_steps
+    K = (bundle.parallel.num_agents_single, )[0]
+    p_bytes = cfg.total_params() * 2                      # bf16
+    d = cfg.d_model
+    L = cfg.num_layers
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        act = 16 * tokens * d * L * 2                     # rough activation traffic
+        # per local step: read params + write params (+grad); mixing reads K copies
+        return float(T * (3 * p_bytes + act) + 2 * K * p_bytes)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return float(p_bytes + 8 * tokens * d * L * 2)
+    # decode
+    B = shape.global_batch
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        C = min(cfg.long_context_window, shape.seq_len)
+    elif cfg.attention_window:
+        C = min(cfg.attention_window, shape.seq_len)
+    else:
+        C = shape.seq_len
+    L_attn = sum(1 for t in cfg.block_types() if t in ("attn", "moe"))
+    L_mamba = sum(1 for t in cfg.block_types() if t == "mamba")
+    kv = 2 * L_attn * B * C * cfg.num_kv_heads * cfg.head_dim * 2
+    ssm_state = L_mamba * B * (cfg.ssm_expand * d) * cfg.ssm_state * 4
+    return float(p_bytes + kv + ssm_state)
+
+
+def load_results(dry_dir: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_row(res: dict) -> dict:
+    arch = res["arch"].replace("-", "_").replace(".", "p")
+    # normalize alias ids back to module ids
+    from repro.configs.base import _ALIASES
+    arch = _ALIASES.get(res["arch"], arch)
+    shape = res["shape"]
+    chips = CHIPS[res["mesh"]]
+    af = analytic_flops(arch, shape)
+    ab = analytic_bytes(arch, shape)
+    coll_dev = res["collectives"]["total_bytes"]          # per device
+    t_compute = af["analytic_flops"] / (chips * PEAK_FLOPS)
+    t_memory = ab / (chips * HBM_BW)
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    useful = af["model_flops"] / max(af["analytic_flops"], 1.0)
+    return {
+        "arch": arch, "shape": shape, "mesh": res["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": af["model_flops"],
+        "analytic_flops": af["analytic_flops"],
+        "useful_ratio": useful,
+        "hlo_flops_raw": res["flops"],
+        "hlo_bytes_raw": res["bytes_accessed"],
+        "coll_bytes_per_dev": coll_dev,
+        "coll_breakdown": {k: v["bytes"] for k, v in res["collectives"].items()
+                           if isinstance(v, dict)},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = [roofline_row(r) for r in load_results(args.dry_dir)
+            if r.get("mix", "default") == "default"]
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    sel = [r for r in rows if r["mesh"] == args.mesh]
+    sel.sort(key=lambda r: (r["arch"], r["shape"]))
+    print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "useful_ratio")
+    for r in sel:
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['t_compute_s']:.4e},"
+              f"{r['t_memory_s']:.4e},{r['t_collective_s']:.4e},"
+              f"{r['dominant']},{r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

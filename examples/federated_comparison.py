@@ -1,0 +1,41 @@
+"""Section IV in action: one engine, four known algorithms.
+
+Runs FedAvg (full + partial), vanilla diffusion, and decentralized FedAvg as
+*configurations* of Algorithm 1 on the same non-IID regression problem and
+compares their steady-state errors — reproducing the paper's claim that its
+MSD analysis covers all of them.
+
+    PYTHONPATH=src python examples/federated_comparison.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import variants
+from repro.core.diffusion import DiffusionEngine
+from repro.data.synthetic import make_block_sampler, make_regression_problem
+
+K = 12
+data = make_regression_problem(K=K, N=100, M=2, rho=0.1, seed=0)
+prob = data.problem()
+w_orig = prob.w_opt(None)
+
+ALGOS = {
+    "fedavg_full(T=5)": variants.fedavg_full(K, T=5, mu=0.01),
+    "fedavg_partial(q=0.5,T=5)": variants.fedavg_partial_uniform(K, T=5,
+                                                                 mu=0.01, q=0.5),
+    "vanilla_diffusion(ring)": variants.vanilla_diffusion(K, mu=0.01),
+    "async_diffusion(q=0.5)": variants.asynchronous_diffusion(K, mu=0.01, q=0.5),
+    "decentralized_fedavg(T=5)": variants.decentralized_fedavg(K, T=5, mu=0.01),
+}
+
+print(f"{'algorithm':30s} {'steady MSD':>12s}  {'vs w_orig':>10s}")
+for name, cfg in ALGOS.items():
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    w_star = prob.w_opt(cfg.q_vector())
+    sampler = make_block_sampler(data, T=cfg.local_steps, batch=1)
+    params = jnp.zeros((K, 2))
+    params, _, hist = eng.run(params, sampler, 1500, seed=0,
+                              w_star=jnp.asarray(w_star))
+    msd = float(np.mean(hist[-300:]))
+    d = float(np.linalg.norm(np.asarray(params).mean(0) - w_orig))
+    print(f"{name:30s} {msd:12.4e}  {d:10.4f}")

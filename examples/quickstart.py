@@ -1,0 +1,41 @@
+"""Quickstart: diffusion learning with local updates + partial participation
+on the paper's linear-regression setting (§VII), validated against the
+closed-form Theorem 5 MSD.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.diffusion import DiffusionConfig, DiffusionEngine
+from repro.core.msd import theoretical_msd
+from repro.data.synthetic import make_block_sampler, make_regression_problem
+
+K, T, MU = 10, 5, 0.01
+
+# 1. non-IID data across K agents (paper eq. 80-81)
+data = make_regression_problem(K=K, N=100, M=2, rho=0.1, seed=0)
+
+# 2. Algorithm 1 configuration: ring network, 5 local steps, random q_k
+rng = np.random.default_rng(1)
+q = rng.uniform(0.3, 0.9, K)
+cfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=MU,
+                      topology="ring", participation=tuple(q))
+
+# 3. theory first: Theorem 5 closed-form steady-state MSD
+topo = cfg.make_topology()
+theory = theoretical_msd(data.problem(), A=topo.A, q=q, mu=MU, T=T)
+print(f"theoretical MSD (eq. 77): {theory['msd']:.4e}")
+
+# 4. run the algorithm
+engine = DiffusionEngine(cfg, data.loss_fn())
+sampler = make_block_sampler(data, T=T, batch=1)
+params = jnp.zeros((K, 2))
+params, _, hist = engine.run(params, sampler, num_blocks=3000, seed=0,
+                             w_star=jnp.asarray(theory["w_opt"]))
+
+sim = float(np.mean(hist[-800:]))
+print(f"simulated MSD:            {sim:.4e}")
+print(f"sim / theory:             {sim / theory['msd']:.3f}")
+print(f"learning curve (every 300 blocks): "
+      f"{[f'{hist[i]:.1e}' for i in range(0, 3000, 300)]}")

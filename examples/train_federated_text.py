@@ -1,0 +1,79 @@
+"""Federated-style text training with a real data pipeline.
+
+Non-IID corpus partitioning (contiguous document shards) + Algorithm 1 with
+partial participation and local updates, end to end:
+
+    corpus -> per-agent partitions -> deterministic block batches ->
+    T local steps -> eq.(20) masked combination -> loss tracking.
+
+    PYTHONPATH=src python examples/train_federated_text.py --blocks 40
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.diffusion import DiffusionConfig
+from repro.core.sharded import make_block_step
+from repro.data.pipeline import BlockIterator, TokenDataset, \
+    contiguous_partition
+from repro.models import transformer as tf
+from repro.optim import adam
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--participation", type=float, default=0.8)
+    ap.add_argument("--blocks", type=int, default=40)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--corpus-tokens", type=int, default=200_000)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke
+    K, T = args.agents, args.local_steps
+
+    # 1. corpus + non-IID partition (each agent owns a contiguous region —
+    #    document-locality heterogeneity)
+    ds = TokenDataset.synthetic(vocab=cfg.vocab_size,
+                                n_tokens=args.corpus_tokens,
+                                seq_len=args.seq, seed=0)
+    parts = contiguous_partition(ds.num_windows, K)
+    data = BlockIterator(ds, parts, local_steps=T,
+                         per_agent_batch=args.batch, seed=0)
+
+    # 2. Algorithm 1
+    dcfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=args.lr,
+                           topology="ring", participation=args.participation)
+    topo = dcfg.make_topology()
+    opt = adam()
+    step = jax.jit(make_block_step(
+        lambda p, b, r: tf.train_loss(p, cfg, b, remat=False), dcfg,
+        jnp.asarray(topo.A, jnp.float32), mix="sparse",
+        offsets=topo.neighbor_offsets_ring(), grad_transform=opt.update))
+
+    key = jax.random.PRNGKey(0)
+    params = jax.vmap(lambda k: tf.init_params(k, cfg))(jax.random.split(key, K))
+    state = opt.init(params)
+    eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b,
+                                                            remat=False)))
+    t0 = time.time()
+    for i in range(args.blocks):
+        key, ks = jax.random.split(key)
+        batch = data.block(i)
+        params, state, active = step(params, state, ks, batch)
+        if i % 10 == 0 or i == args.blocks - 1:
+            per_agent = eval_loss(params, jax.tree.map(lambda x: x[0], batch))
+            print(f"block {i:4d} active={int(active.sum())}/{K} "
+                  f"loss/agent={[f'{float(l):.3f}' for l in per_agent]} "
+                  f"t={time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""npz-based checkpointing for pytrees (agent-stacked or plain).
+
+Leaves are flattened with their tree paths as archive keys, so restoring
+validates structure as well as shapes.  Host-local: for sharded trees the
+caller gathers (small models) or saves per-process shards (addressable data).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    meta = {"step": step, "keys": sorted(arrays), **(metadata or {})}
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shapes validated)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, v in flat:
+            key = _path_str(p)
+            if key not in z:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = z[key]
+            if hasattr(v, "shape") and tuple(arr.shape) != tuple(v.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {v.shape}")
+            leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, meta

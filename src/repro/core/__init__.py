@@ -1,0 +1,16 @@
+"""Core — the paper's contribution: Algorithm 1 and its theory."""
+from repro.core.diffusion import (  # noqa: F401
+    DiffusionConfig,
+    DiffusionEngine,
+    mix_stacked,
+    network_msd,
+)
+from repro.core.topology import Topology, make_topology  # noqa: F401
+from repro.core.participation import (  # noqa: F401
+    sample_active,
+    masked_combination,
+    expected_combination,
+    expected_A_M,
+)
+from repro.core.msd import QuadraticProblem, theoretical_msd  # noqa: F401
+from repro.core.sharded import make_block_step, mix_dense, mix_sparse  # noqa: F401

@@ -1,0 +1,241 @@
+"""Network topologies and combination matrices (paper §II, Assumption 1).
+
+A combination matrix ``A = [a_{lk}]`` scales information sent from agent l to
+agent k.  Assumption 1 requires A symmetric, left-stochastic (hence doubly
+stochastic) and primitive.  We provide the standard constructions used in the
+diffusion literature plus validation helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "ring_adjacency",
+    "grid_adjacency",
+    "full_adjacency",
+    "erdos_renyi_adjacency",
+    "metropolis_weights",
+    "averaging_matrix",
+    "laplacian_weights",
+    "is_doubly_stochastic",
+    "is_symmetric",
+    "is_primitive",
+    "perron_vector",
+    "spectral_gap",
+    "Topology",
+    "make_topology",
+]
+
+
+# ---------------------------------------------------------------------------
+# adjacency constructions (boolean, self-loops always included)
+# ---------------------------------------------------------------------------
+
+def ring_adjacency(K: int, hops: int = 1) -> np.ndarray:
+    """Ring lattice: each agent connects to ``hops`` neighbors on each side."""
+    if K < 1:
+        raise ValueError("K must be >= 1")
+    adj = np.eye(K, dtype=bool)
+    for h in range(1, hops + 1):
+        idx = np.arange(K)
+        adj[idx, (idx + h) % K] = True
+        adj[idx, (idx - h) % K] = True
+    return adj
+
+
+def grid_adjacency(rows: int, cols: int) -> np.ndarray:
+    """2-D grid (torus-free) with 4-neighborhood."""
+    K = rows * cols
+    adj = np.eye(K, dtype=bool)
+    for r in range(rows):
+        for c in range(cols):
+            k = r * cols + c
+            if r + 1 < rows:
+                adj[k, k + cols] = adj[k + cols, k] = True
+            if c + 1 < cols:
+                adj[k, k + 1] = adj[k + 1, k] = True
+    return adj
+
+
+def full_adjacency(K: int) -> np.ndarray:
+    return np.ones((K, K), dtype=bool)
+
+
+def erdos_renyi_adjacency(K: int, p: float, seed: int = 0,
+                          ensure_connected: bool = True) -> np.ndarray:
+    """Erdős–Rényi G(K, p), symmetrized, self-loops added.
+
+    When ``ensure_connected`` we overlay a ring so the graph is always
+    strongly connected (the paper assumes primitivity).
+    """
+    rng = np.random.default_rng(seed)
+    upper = rng.random((K, K)) < p
+    adj = np.triu(upper, 1)
+    adj = adj | adj.T | np.eye(K, dtype=bool)
+    if ensure_connected:
+        adj = adj | ring_adjacency(K, 1)
+    return adj
+
+
+# ---------------------------------------------------------------------------
+# weight rules
+# ---------------------------------------------------------------------------
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings rule: symmetric doubly stochastic for any graph.
+
+    a_lk = 1 / max(deg_l, deg_k) for neighbors l != k; self weight completes
+    the column to one.  Degrees exclude the self-loop.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    K = adj.shape[0]
+    deg = adj.sum(axis=1) - 1  # exclude self
+    A = np.zeros((K, K), dtype=np.float64)
+    for k in range(K):
+        for l in range(K):
+            if l != k and adj[l, k]:
+                A[l, k] = 1.0 / (1.0 + max(deg[l], deg[k]))
+    np.fill_diagonal(A, 1.0 - A.sum(axis=0))
+    return A
+
+
+def averaging_matrix(K: int) -> np.ndarray:
+    """(1/K) 11^T — the FedAvg server in matrix form (paper eq. 39-40)."""
+    return np.full((K, K), 1.0 / K, dtype=np.float64)
+
+
+def laplacian_weights(adj: np.ndarray, eps: float | None = None) -> np.ndarray:
+    """A = I - eps * L with L the graph Laplacian; eps < 1/deg_max."""
+    adj = np.asarray(adj, dtype=bool)
+    K = adj.shape[0]
+    off = adj & ~np.eye(K, dtype=bool)
+    deg = off.sum(axis=1)
+    if eps is None:
+        eps = 1.0 / (deg.max() + 1.0)
+    L = np.diag(deg).astype(np.float64) - off.astype(np.float64)
+    return np.eye(K) - eps * L
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def is_symmetric(A: np.ndarray, tol: float = 1e-10) -> bool:
+    return bool(np.allclose(A, A.T, atol=tol))
+
+
+def is_doubly_stochastic(A: np.ndarray, tol: float = 1e-8) -> bool:
+    A = np.asarray(A)
+    ok_nonneg = bool((A >= -tol).all())
+    ok_cols = bool(np.allclose(A.sum(axis=0), 1.0, atol=tol))
+    ok_rows = bool(np.allclose(A.sum(axis=1), 1.0, atol=tol))
+    return ok_nonneg and ok_cols and ok_rows
+
+
+def is_primitive(A: np.ndarray, max_power: int | None = None) -> bool:
+    """A^m > 0 entrywise for some m (Assumption 1)."""
+    A = np.asarray(A, dtype=np.float64)
+    K = A.shape[0]
+    if max_power is None:
+        max_power = K * K + 1
+    P = (A > 0).astype(np.float64)
+    M = np.eye(K)
+    for _ in range(max_power):
+        M = np.minimum(M @ P + P, 1.0)
+        if (M > 0).all():
+            return True
+    return False
+
+
+def perron_vector(A: np.ndarray) -> np.ndarray:
+    """Right Perron eigenvector, normalized to sum 1.
+
+    For doubly-stochastic A this is (1/K) 1 (paper, after Assumption 1).
+    """
+    vals, vecs = np.linalg.eig(np.asarray(A, dtype=np.float64))
+    idx = int(np.argmax(vals.real))
+    p = np.abs(vecs[:, idx].real)
+    return p / p.sum()
+
+
+def spectral_gap(A: np.ndarray) -> float:
+    """1 - |lambda_2(A)| — mixing rate of the network."""
+    vals = np.linalg.eigvals(np.asarray(A, dtype=np.float64))
+    mags = np.sort(np.abs(vals))[::-1]
+    return float(1.0 - (mags[1] if len(mags) > 1 else 0.0))
+
+
+# ---------------------------------------------------------------------------
+# high-level factory
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A validated combination matrix plus its adjacency."""
+
+    name: str
+    A: np.ndarray          # (K, K) float64, symmetric doubly stochastic
+    adjacency: np.ndarray  # (K, K) bool
+
+    @property
+    def num_agents(self) -> int:
+        return int(self.A.shape[0])
+
+    @property
+    def max_degree(self) -> int:
+        off = self.adjacency & ~np.eye(self.num_agents, dtype=bool)
+        return int(off.sum(axis=1).max()) if self.num_agents > 1 else 0
+
+    def neighbor_offsets_ring(self) -> Sequence[int]:
+        """For ring-like topologies: signed hop offsets with nonzero weight.
+
+        Used by the sparse ppermute mixing path (core/sharded.py).
+        """
+        K = self.num_agents
+        offsets = set()
+        for l in range(K):
+            for k in range(K):
+                if self.adjacency[l, k] and l != k:
+                    d = (l - k) % K
+                    offsets.add(d if d <= K // 2 else d - K)
+        return tuple(sorted(offsets))
+
+    def validate(self) -> None:
+        if not is_symmetric(self.A):
+            raise ValueError(f"{self.name}: A not symmetric")
+        if not is_doubly_stochastic(self.A):
+            raise ValueError(f"{self.name}: A not doubly stochastic")
+        if self.num_agents > 1 and not is_primitive(self.A):
+            raise ValueError(f"{self.name}: A not primitive")
+
+
+def make_topology(kind: str, K: int, *, seed: int = 0, p: float = 0.3,
+                  hops: int = 1, rows: int | None = None) -> Topology:
+    """Factory: ``kind`` in {ring, grid, full, erdos, fedavg}."""
+    if kind == "ring":
+        adj = ring_adjacency(K, hops=hops)
+        A = metropolis_weights(adj)
+    elif kind == "grid":
+        r = rows if rows is not None else int(np.floor(np.sqrt(K)))
+        c = K // r
+        if r * c != K:
+            raise ValueError(f"grid: K={K} not divisible into {r} rows")
+        adj = grid_adjacency(r, c)
+        A = metropolis_weights(adj)
+    elif kind == "full":
+        adj = full_adjacency(K)
+        A = metropolis_weights(adj)
+    elif kind == "fedavg":
+        adj = full_adjacency(K)
+        A = averaging_matrix(K)
+    elif kind == "erdos":
+        adj = erdos_renyi_adjacency(K, p, seed=seed)
+        A = metropolis_weights(adj)
+    else:
+        raise ValueError(f"unknown topology kind: {kind!r}")
+    topo = Topology(name=f"{kind}(K={K})", A=A, adjacency=adj)
+    topo.validate()
+    return topo

@@ -1,0 +1,121 @@
+"""Section IV — existing algorithms as special cases of Algorithm 1.
+
+Each factory returns a :class:`DiffusionConfig` (plus any extra structure)
+whose block recursion reduces *exactly* to the named algorithm.  The
+equivalences are asserted bit-for-bit in ``tests/test_variants.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.diffusion import DiffusionConfig
+
+__all__ = [
+    "fedavg_full",
+    "fedavg_partial_uniform",
+    "vanilla_diffusion",
+    "asynchronous_diffusion",
+    "decentralized_fedavg",
+]
+
+
+def fedavg_full(K: int, T: int, mu: float) -> DiffusionConfig:
+    """FedAvg with full participation (paper eq. 39-40):
+    q_k = 1, A_{iT} = (1/K) 11^T."""
+    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                           topology="fedavg", participation=1.0)
+
+
+def fedavg_partial_uniform(K: int, T: int, mu: float, q: float) -> DiffusionConfig:
+    """FedAvg with partial participation (paper eq. 42-43).
+
+    The paper's eq. (41) uses weights 1/S over the realized active set S_i.
+    With the i.i.d.-Bernoulli activation model of Algorithm 1 the closest
+    member of the family is the fedavg topology (a_lk = 1/K) with q_k = q and
+    eq. (20) re-normalization — active agents average over active peers with
+    weight 1/K and keep the remaining mass on themselves.  For |S_i| = S this
+    matches eq. (41) up to the self-weight redistribution, and exactly in
+    expectation.  (Exact eq. (41) sampling — fixed-size uniform subsets — is
+    provided by tests via explicit masks.)
+    """
+    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                           topology="fedavg", participation=q)
+
+
+def vanilla_diffusion(K: int, mu: float, topology: str = "ring") -> DiffusionConfig:
+    """Standard diffusion (paper eq. 44-45): q_k = 1, T = 1."""
+    return DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
+                           topology=topology, participation=1.0)
+
+
+def asynchronous_diffusion(K: int, mu: float, q, topology: str = "ring") -> DiffusionConfig:
+    """Asynchronous diffusion (paper eq. 46-47): T = 1, Bernoulli q_k."""
+    part = tuple(np.asarray(q, dtype=float).reshape(-1)) if np.ndim(q) else float(q)
+    return DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
+                           topology=topology, participation=part)
+
+
+def decentralized_fedavg(K: int, T: int, mu: float,
+                         topology: str = "ring") -> DiffusionConfig:
+    """Decentralized FedAvg (paper eq. 48-49): q_k = 1, local updates, A."""
+    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                           topology=topology, participation=1.0)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: exact diffusion (bias-corrected ATC, the paper's ref. [39])
+# ---------------------------------------------------------------------------
+
+class ExactDiffusionEngine:
+    """Exact diffusion / ED-ATC (Yuan, Alghunaim, Ying, Sayed, 2020).
+
+    Removes the O(mu^2) heterogeneity bias of standard diffusion under
+    *full* participation via the correction step
+
+        psi_i  = w_{i-1} - mu grad(w_{i-1})
+        phi_i  = psi_i + w_{i-1} - psi_{i-1}
+        w_i    = bar-A phi_i ,          bar-A = (A + I)/2
+
+    Implemented here for the T = 1, q = 1 regime the original analysis
+    covers; used by ``benchmarks.run.bench_exact_diffusion`` to show the
+    framework hosts bias-corrected members of the same family.  (Combining
+    exact diffusion with partial participation is open research — the
+    correction state of an inactive agent would stale; we deliberately do
+    not claim it.)
+    """
+
+    def __init__(self, config: DiffusionConfig, loss_fn):
+        import jax
+        import jax.numpy as jnp
+        if config.local_steps != 1:
+            raise ValueError("exact diffusion is defined for T = 1")
+        self.config = config
+        self.topology = config.make_topology()
+        A_bar = (self.topology.A + np.eye(config.num_agents)) / 2.0
+        self._A_bar = jnp.asarray(A_bar, jnp.float32)
+        self.loss_fn = loss_fn
+        self._grad_fn = jax.vmap(jax.grad(loss_fn))
+        self._jit_step = jax.jit(self._step)
+
+    def _step(self, w, psi_prev, batch):
+        from repro.core.diffusion import mix_stacked
+        g = self._grad_fn(w, batch)
+        psi = w - self.config.step_size * g           # adapt
+        phi = psi + w - psi_prev                      # correct
+        w_new = mix_stacked(self._A_bar, phi)         # combine
+        return w_new, psi
+
+    def run(self, w0, sampler, num_blocks: int, seed: int = 0,
+            w_star=None):
+        import jax
+        key = jax.random.PRNGKey(seed)
+        w, psi_prev = w0, w0
+        hist = []
+        from repro.core.diffusion import network_msd
+        for _ in range(num_blocks):
+            key, kb = jax.random.split(key)
+            batch = jax.tree.map(lambda x: x[0], sampler(kb))  # T=1
+            w, psi_prev = self._jit_step(w, psi_prev, batch)
+            if w_star is not None:
+                hist.append(float(network_msd(w, w_star)))
+        return w, hist

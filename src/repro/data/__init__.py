@@ -1,0 +1,12 @@
+from repro.data.synthetic import (  # noqa: F401
+    RegressionData,
+    make_regression_problem,
+    make_block_sampler,
+    lm_token_batch,
+)
+from repro.data.pipeline import (  # noqa: F401
+    BlockIterator,
+    TokenDataset,
+    contiguous_partition,
+    dirichlet_partition,
+)

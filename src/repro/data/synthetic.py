@@ -1,0 +1,105 @@
+"""Synthetic data: the paper's non-IID linear regression (§VII) and token
+streams for the LM-scale drivers.
+
+Paper setting (eq. 80-81): K agents, each with N inputs u_{k,n} ~ N(m_k, R_u)
+with *varying means* m_k and noise variances sigma_{k,v}^2 (non-IID), outputs
+d_k(n) = u_{k,n}^T w* + v_k(n).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.msd import QuadraticProblem
+
+__all__ = ["RegressionData", "make_regression_problem", "make_block_sampler",
+           "lm_token_batch"]
+
+
+@dataclasses.dataclass
+class RegressionData:
+    """Stacked per-agent regression dataset."""
+
+    U: np.ndarray        # (K, N, M)
+    d: np.ndarray        # (K, N)
+    w_star: np.ndarray   # (M,) generative model
+    rho: float
+    noise_std: np.ndarray  # (K,)
+
+    @property
+    def num_agents(self) -> int:
+        return int(self.U.shape[0])
+
+    def problem(self) -> QuadraticProblem:
+        return QuadraticProblem(U=list(self.U), d=list(self.d), rho=self.rho)
+
+    def loss_fn(self):
+        """Per-agent loss matching eq. (81): mean squared error + rho||w||^2.
+
+        batch = (u, d) with u (B, M), d (B,).
+        """
+        rho = self.rho
+
+        def loss(w, batch):
+            u, d = batch
+            resid = d - u @ w
+            return jnp.mean(resid ** 2) + rho * jnp.sum(w ** 2)
+
+        return loss
+
+
+def make_regression_problem(K: int = 20, N: int = 100, M: int = 2,
+                            rho: float = 0.1, seed: int = 0,
+                            mean_scale: float = 1.0,
+                            noise_low: float = 0.05,
+                            noise_high: float = 0.5,
+                            w_star_spread: float = 0.0) -> RegressionData:
+    """Generate the paper's §VII dataset (non-IID means and noise levels).
+
+    ``w_star_spread > 0`` gives each agent its own generative model
+    ``w*_k = w* + spread * delta_k`` — stronger objective heterogeneity,
+    used to make the participation drift (eq. 27) clearly measurable.
+    """
+    rng = np.random.default_rng(seed)
+    w_star = rng.normal(size=(M,))
+    # shared input covariance, per-agent means (non-IID)
+    L = rng.normal(size=(M, M)) * 0.3
+    R_u = L @ L.T + np.eye(M)
+    chol = np.linalg.cholesky(R_u)
+    means = rng.normal(size=(K, M)) * mean_scale
+    noise_std = rng.uniform(noise_low, noise_high, size=(K,))
+    U = rng.normal(size=(K, N, M)) @ chol.T + means[:, None, :]
+    v = rng.normal(size=(K, N)) * noise_std[:, None]
+    w_k = w_star[None, :] + w_star_spread * rng.normal(size=(K, M))
+    d = np.einsum("knm,km->kn", U, w_k) + v
+    return RegressionData(U=U, d=d, w_star=w_star, rho=rho,
+                          noise_std=noise_std)
+
+
+def make_block_sampler(data: RegressionData, T: int, batch: int = 1):
+    """Return sampler(key) -> ((T, K, B, M), (T, K, B)) uniform with
+    replacement — matches the paper's 'sample n uniformly' model."""
+    U = jnp.asarray(data.U)
+    d = jnp.asarray(data.d)
+    K, N, M = U.shape
+
+    def sampler(key: jax.Array):
+        idx = jax.random.randint(key, (T, K, batch), 0, N)
+        u_b = jnp.take_along_axis(U[None, :, :, :],
+                                  idx[..., None].repeat(M, -1), axis=2)
+        d_b = jnp.take_along_axis(d[None, :, :], idx, axis=2)
+        return (u_b, d_b)
+
+    return sampler
+
+
+def lm_token_batch(key: jax.Array, shape: tuple[int, ...], vocab: int,
+                   dtype=jnp.int32) -> dict:
+    """Synthetic next-token-prediction batch: tokens + shifted labels."""
+    tokens = jax.random.randint(key, shape, 0, vocab, dtype=dtype)
+    labels = jnp.concatenate([tokens[..., 1:],
+                              jnp.zeros_like(tokens[..., :1])], axis=-1)
+    return {"tokens": tokens, "labels": labels}

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships a jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py);
+all are validated in interpret mode on CPU (tests/test_kernels.py) and are
+selectable in the model stack via ModelConfig.use_kernels.
+"""
+from repro.kernels.ops import attention_op, mix_op, ssd_op  # noqa: F401

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for the paper's combination step (eq. 20 + mixing).
+
+Fuses the per-sample-path masking of the combination matrix (eq. 20) with
+the parameter mix  W'_k = sum_l a_lk W_l , so the masked (K, K) matrix is
+(re)built in VMEM registers per tile and never round-trips to HBM, and the
+stacked parameter matrix is streamed exactly once.
+
+Layout: the agent-stacked parameter tree is flattened to (K, M); the grid
+tiles M.  K is small (<= 64 agents), so the (K, K) mix lives comfortably in
+VMEM next to a (K, tile_m) parameter tile; tile_m is a multiple of 128 for
+lane alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(a_ref, m_ref, w_ref, o_ref, *, K: int):
+    A = a_ref[...].astype(jnp.float32)                  # (K, K)
+    m = m_ref[...].astype(jnp.float32)[:, 0]            # (K,)
+    W = w_ref[...].astype(jnp.float32)                  # (K, TM)
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (K, K), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
+    eye = (row == col).astype(jnp.float32)
+
+    off = A * (1.0 - eye) * (m[:, None] * m[None, :])   # both endpoints active
+    col_off = off.sum(axis=0)                           # (K,)
+    diag = m * (1.0 - col_off) + (1.0 - m)              # eq. (20) self-weights
+    A_eff = off + diag[None, :] * eye
+
+    # W'_k = sum_l A_eff[l, k] W[l]  ==  A_eff^T @ W
+    out = jax.lax.dot_general(A_eff, W, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def diffusion_mix(A: jax.Array, active: jax.Array, W: jax.Array, *,
+                  tile_m: int = 512, interpret: bool = False) -> jax.Array:
+    """Masked combination step over flattened stacked parameters.
+
+    Args:
+      A: (K, K) base combination matrix.
+      active: (K,) activation mask in {0, 1}.
+      W: (K, M) stacked flattened parameters; M % tile_m == 0 (pad upstream).
+    Returns:
+      (K, M) mixed parameters, dtype of W.
+    """
+    K, M = W.shape
+    if M % tile_m:
+        raise ValueError(f"M={M} not divisible by tile_m={tile_m}")
+    nm = M // tile_m
+    kernel = functools.partial(_mix_kernel, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((K, K), lambda mi: (0, 0)),
+            pl.BlockSpec((K, 1), lambda mi: (0, 0)),
+            pl.BlockSpec((K, tile_m), lambda mi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((K, tile_m), lambda mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((K, M), W.dtype),
+        interpret=interpret,
+    )(A, active.reshape(K, 1), W)

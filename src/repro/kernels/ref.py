@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose).
+
+These are deliberately *naive* implementations — full score matrices,
+sequential SSM recurrence — so the kernels are validated against the math,
+not against another optimized implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref", "ssd_ref", "mix_ref"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None) -> jax.Array:
+    """Naive GQA attention.  q: (B, Sq, H, D); k/v: (B, Skv, Kv, D)."""
+    B, Sq, H, D = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Sq, Kv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kf) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, *, initial_state: jax.Array | None = None):
+    """Sequential SSD recurrence (ground truth).
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, n).
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T ;  y_t = h_t C_t.
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+    init = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+            else initial_state.astype(f32))
+
+    def step(carry, t):
+        decay = jnp.exp(dt[:, t].astype(f32) * A.astype(f32))       # (b, h)
+        xd = x[:, t].astype(f32) * dt[:, t].astype(f32)[..., None]  # (b, h, p)
+        carry = (carry * decay[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xd, B[:, t].astype(f32)))
+        y = jnp.einsum("bhpn,bn->bhp", carry, C[:, t].astype(f32))
+        return carry, y
+
+    final, ys = jax.lax.scan(step, init, jnp.arange(s))
+    y = ys.transpose(1, 0, 2, 3)                                    # (b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def mix_ref(A: jax.Array, active: jax.Array, W: jax.Array) -> jax.Array:
+    """Masked diffusion combination: W'_k = sum_l a_lk(mask) W_l.
+
+    A: (K, K) base matrix; active: (K,) in {0,1}; W: (K, M).
+    Applies the eq. (20) masking then mixes.
+    """
+    from repro.core.participation import masked_combination
+    A_eff = masked_combination(A.astype(jnp.float32), active)
+    return jnp.einsum("lk,lm->km", A_eff,
+                      W.astype(jnp.float32)).astype(W.dtype)

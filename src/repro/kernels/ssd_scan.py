@@ -1,0 +1,136 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+The SSD dual form splits into (i) an embarrassingly parallel intra-chunk
+quadratic part — the compute hot-spot, done here — and (ii) a tiny
+inter-chunk linear recurrence over per-chunk states (O(S/chunk) elements),
+which stays in jnp (memory-bound, negligible).
+
+Per grid cell (batch b, head h, chunk c) the kernel computes, entirely in
+VMEM / fp32:
+    L       = exp(segsum(dA_c))                      (chunk, chunk) lower-tri
+    Y_diag  = ((C_c B_c^T) * L) (dt*x)_c             (chunk, P)
+    state_c = (dt*x)_c^T (B_c * exp(dA_sum - cumsum))  (P, N)
+
+TPU adaptation vs the paper's GPU kernel [arXiv:2405.21060]: chunk length is
+chosen so the (chunk x chunk) decay matrix and the (chunk, P) tile fit VMEM
+with MXU-aligned dims (128); the inter-chunk recurrence is not fused (the
+GPU kernel fuses it into the same launch) because on TPU the cross-chunk
+dependency would serialize the grid — we let XLA overlap it instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(xd_ref, dA_ref, b_ref, c_ref, ydiag_ref, state_ref,
+                      dacs_ref, *, chunk: int):
+    xd = xd_ref[0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    dA = dA_ref[0, :, 0].astype(jnp.float32)          # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                 # (Q, N)
+
+    dA_cs = jnp.cumsum(dA)                            # (Q,)
+    seg = dA_cs[:, None] - dA_cs[None, :]             # sum_{j<t<=i}
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(row >= col, jnp.exp(seg), 0.0)      # (Q, Q)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    ydiag_ref[0, :, 0, :] = jax.lax.dot_general(
+        scores, xd, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(ydiag_ref.dtype)
+
+    decay_states = jnp.exp(dA_cs[-1] - dA_cs)         # (Q,)
+    state = jax.lax.dot_general(xd, Bm * decay_states[:, None],
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[0, 0, 0] = state.astype(state_ref.dtype)
+    dacs_ref[0, :, 0] = dA_cs.astype(dacs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk(xd: jax.Array, dA: jax.Array, B: jax.Array, C: jax.Array,
+                    *, chunk: int, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    Args:
+      xd: (b, s, h, p) — dt-scaled inputs.
+      dA: (b, s, h) — dt * A.
+      B, C: (b, s, n).
+    Returns:
+      (Y_diag (b, s, h, p) fp32, states (b, nc, h, p, n) fp32,
+       dA_cumsum (b, s, h) fp32)  — seq must divide chunk.
+    """
+    b, s, h, p = xd.shape
+    n = B.shape[-1]
+    if s % chunk:
+        raise ValueError(f"s={s} not divisible by chunk={chunk}")
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bi, hi, ci: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xd, dA, B, C)
+
+
+def ssd_chunked_kernel(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       B: jax.Array, C: jax.Array, *, chunk: int,
+                       initial_state: jax.Array | None = None,
+                       interpret: bool = False):
+    """Full SSD using the Pallas intra-chunk kernel + jnp inter-chunk scan.
+
+    Same contract as repro.models.ssm.ssd_chunked (and validated against
+    kernels.ref.ssd_ref).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    f32 = jnp.float32
+    xd = x.astype(f32) * dt.astype(f32)[..., None]
+    dA = dt.astype(f32) * A.astype(f32)[None, None, :]
+
+    y_diag, states, dA_cs = ssd_intra_chunk(xd, dA, B, C, chunk=chunk,
+                                            interpret=interpret)
+    nc = s // chunk
+    dA_cs_c = dA_cs.reshape(b, nc, chunk, h)
+    chunk_decay = jnp.exp(dA_cs_c[:, :, -1, :])                  # (b, nc, h)
+
+    init = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+            else initial_state.astype(f32))
+
+    def step(carry, xs):
+        st_in, decay = xs                                        # (b,h,p,n),(b,h)
+        new = carry * decay[..., None, None] + st_in
+        return new, carry
+
+    final, states_in = jax.lax.scan(
+        step, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    states_in = states_in.swapaxes(0, 1)                         # (b, nc, h, p, n)
+
+    out_decay = jnp.exp(dA_cs_c)                                 # (b, nc, Q, h)
+    Cc = C.astype(f32).reshape(b, nc, chunk, n)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, states_in, out_decay)
+    y = y_diag.reshape(b, nc, chunk, h, p) + y_off
+    return y.reshape(b, s, h, p).astype(x.dtype), final

@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run driver must set XLA_FLAGS *before*
+any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
+
+SINGLE_POD_SHAPE = (16, 16)            # 256 chips / pod (TPU v5e)
+MULTI_POD_SHAPE = (2, 16, 16)          # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,11 @@
+from repro.models.transformer import (  # noqa: F401
+    Cache,
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_specs,
+    prefill,
+    train_loss,
+)

@@ -1,0 +1,263 @@
+"""Transformer building blocks, pure-JAX (no flax).
+
+Parameters are plain dicts of arrays; every function takes (params, inputs)
+and is shape-polymorphic over batch/sequence.  The attention here is the
+flash-style *streaming* implementation (chunked online softmax via lax.scan)
+that compiles everywhere — the Pallas kernel in repro.kernels.flash_attention
+is the TPU-targeted twin validated against repro.kernels.ref.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def init_rms_norm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (full / partial — chatglm-style "2d" applies to half)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, rotary_pct: float, theta: float) -> np.ndarray:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    return 1.0 / (theta ** (np.arange(0, rot_dim, 2, dtype=np.float64) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, rotary_pct: float = 1.0,
+               theta: float = 1e4) -> jax.Array:
+    """Rotate the first ``rotary_pct`` fraction of the head dim.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S).
+    chatglm3's 2d-RoPE degenerates to rotary_pct = 0.5 for pure decoding
+    (the second position channel is constant for causal LM use).
+    """
+    D = x.shape[-1]
+    inv_freq = jnp.asarray(rope_frequencies(D, rotary_pct, theta),
+                           dtype=jnp.float32)
+    rot_dim = inv_freq.shape[0] * 2
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    ang = ang[..., None, :]                                    # broadcast heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+    @property
+    def group(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+def init_attention(key, d_model: int, dims: AttnDims, qk_norm: bool,
+                   dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    H, Kv, D = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    s = 1.0 / np.sqrt(d_model)
+    p = {
+        "wq": (jax.random.normal(kq, (d_model, H * D)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, Kv * D)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, Kv * D)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (H * D, d_model)) * s).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rms_norm(D, dtype)
+        p["k_norm"] = init_rms_norm(D, dtype)
+    return p
+
+
+def attention_specs(d_model: int, dims: AttnDims, qk_norm: bool, dtype) -> dict:
+    H, Kv, D = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    sds = jax.ShapeDtypeStruct
+    p = {
+        "wq": sds((d_model, H * D), dtype),
+        "wk": sds((d_model, Kv * D), dtype),
+        "wv": sds((d_model, Kv * D), dtype),
+        "wo": sds((H * D, d_model), dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": sds((D,), dtype)}
+        p["k_norm"] = {"scale": sds((D,), dtype)}
+    return p
+
+
+def qkv_project(params: dict, x: jax.Array, dims: AttnDims, *,
+                positions: jax.Array, rotary_pct: float, theta: float,
+                qk_norm: bool, norm_eps: float = 1e-5):
+    """Project hidden states to (q, k, v) with qk-norm + RoPE applied."""
+    B, S, _ = x.shape
+    H, Kv, D = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, D)
+    k = (x @ params["wk"]).reshape(B, S, Kv, D)
+    v = (x @ params["wv"]).reshape(B, S, Kv, D)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], norm_eps)
+    q = apply_rope(q, positions, rotary_pct=rotary_pct, theta=theta)
+    k = apply_rope(k, positions, rotary_pct=rotary_pct, theta=theta)
+    return q, k, v
+
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        q_offset: int | jax.Array = 0,
+                        q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    """Streaming (online-softmax) GQA attention, pure JAX.
+
+    q: (B, Sq, H, D);  k, v: (B, Skv, Kv, D)  with H % Kv == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill = 0;
+    decode uses the direct path below instead).
+    Memory is O(q_chunk * kv_chunk) per (batch, head) — never S^2.
+    """
+    B, Sq, H, D = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = 1.0 / np.sqrt(D)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad to multiples
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nkv = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+
+    # (B, nq, Cq, Kv, G, D)
+    qc = qp.reshape(B, nq, q_chunk, Kv, G, D)
+    kc = kp.reshape(B, nkv, kv_chunk, Kv, D)
+    vc = vp.reshape(B, nkv, kv_chunk, Kv, D)
+
+    q_pos = (jnp.arange(nq * q_chunk).reshape(nq, q_chunk) + q_offset)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+    kv_valid = kv_pos < Skv  # padding mask
+
+    def one_q_chunk(qi, q_blk):
+        # q_blk: (B, Cq, Kv, G, D)
+        qpos = q_pos[qi]                               # (Cq,)
+
+        def kv_step(carry, xs):
+            acc, m, denom = carry
+            k_blk, v_blk, kpos, kval = xs              # (B,Ck,Kv,D),(B,Ck,Kv,D),(Ck,),(Ck,)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            denom = denom * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p, v_blk.astype(jnp.float32))
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((B, Kv, G, q_chunk, D), jnp.float32)
+        m0 = jnp.full((B, Kv, G, q_chunk), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, Kv, G, q_chunk), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kv_pos, kv_valid))
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)            # (B, Cq, Kv, G, D)
+
+    out = jax.lax.map(lambda i: one_q_chunk(i, qc[:, i]), jnp.arange(nq))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention_jnp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         valid: jax.Array) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, D); caches: (B, C, Kv, D); valid: (C,) or (B, C) bool.
+    """
+    B, _, H, D = q.shape
+    C, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Kv, G, D)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if valid.ndim == 1:
+        valid = valid[None, :]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU and plain GELU variants)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / np.sqrt(d_model), 1.0 / np.sqrt(d_ff)
+    if act == "silu":  # gated
+        return {
+            "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+        }
+    return {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def mlp_specs(d_model: int, d_ff: int, act: str, dtype) -> dict:
+    sds = jax.ShapeDtypeStruct
+    if act == "silu":
+        return {"w_gate": sds((d_model, d_ff), dtype),
+                "w_up": sds((d_model, d_ff), dtype),
+                "w_down": sds((d_ff, d_model), dtype)}
+    return {"w_up": sds((d_model, d_ff), dtype),
+            "w_down": sds((d_ff, d_model), dtype)}
+
+
+def mlp_forward(params: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]

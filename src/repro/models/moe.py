@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-dropping sorted dispatch.
+
+Dispatch strategy (compile-friendly at 384 experts / 1M tokens):
+  1. top-k routing per token,
+  2. stable argsort of the flat (N*k,) expert assignment vector,
+  3. position-in-expert via bincount prefix sums (no (N, E) one-hot ever
+     materialized),
+  4. scatter into an (E, capacity, D) buffer (overflow tokens dropped — the
+     standard capacity-factor policy), grouped einsum against stacked expert
+     weights (expert-parallel over the `model` mesh axis),
+  5. weighted scatter-add back to token order.
+
+Also returns the switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["init_moe", "moe_specs", "moe_forward", "moe_capacity"]
+
+
+def moe_capacity(num_tokens: int, num_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    cap = int(np.ceil(num_tokens * top_k / num_experts * capacity_factor))
+    return max(cap, top_k)
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int,
+             dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / np.sqrt(d_model), 1.0 / np.sqrt(d_ff)
+    E = num_experts
+    return {
+        "router": (jax.random.normal(kr, (d_model, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (E, d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def moe_specs(d_model: int, d_ff: int, num_experts: int, dtype) -> dict:
+    sds = jax.ShapeDtypeStruct
+    E = num_experts
+    return {
+        "router": sds((d_model, E), jnp.float32),
+        "w_gate": sds((E, d_model, d_ff), dtype),
+        "w_up": sds((E, d_model, d_ff), dtype),
+        "w_down": sds((E, d_ff, d_model), dtype),
+    }
+
+
+def moe_forward(params: dict, x: jax.Array, *, top_k: int,
+                capacity_factor: float = 1.25,
+                router_in_fp32: bool = True,
+                impl: str = "gather",
+                cap_shard_axis: str | None = None):
+    """Apply the MoE FFN.
+
+    Two dispatch implementations with identical semantics:
+
+    * ``impl="scatter"`` — the textbook sorted dispatch: ``.at[].set`` into
+      the (E, cap, D) buffer and ``.at[].add`` combine.  Under GSPMD these
+      scatters lower to masked updates with *replicated index tensors that
+      get all-reduced at fp32/u32 across the expert axis* — measured as the
+      dominant collective of every MoE train step (EXPERIMENTS.md §Perf).
+    * ``impl="gather"``  — scatter-free: expert segment starts come from
+      ``searchsorted`` on the sorted assignment vector, the dispatch buffer
+      is a *gather* ``x[token_for_slot(e, c)]``, and the combine un-sorts
+      with a second argsort and reduces the per-token top-k axis locally.
+      This is the beyond-paper optimization; semantics verified equal in
+      tests/test_models_units.py.
+
+    Args:
+      x: (B, S, D) hidden states.
+    Returns:
+      (y, aux) with y (B, S, D) and aux the load-balance loss (scalar).
+    """
+    B, S, D = x.shape
+    E = params["router"].shape[1]
+    N = B * S
+    NK = N * top_k
+    xf = x.reshape(N, D)
+
+    r_in = xf.astype(jnp.float32) if router_in_fp32 else xf
+    logits = r_in @ params["router"].astype(r_in.dtype)        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, top_k)               # (N, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    cap = moe_capacity(N, E, top_k, capacity_factor)
+    flat_e = gate_e.reshape(-1)                                # (N*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+
+    if impl == "scatter":
+        counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+        starts = jnp.cumsum(counts) - counts
+    else:
+        # scatter-free: segment boundaries via binary search on sorted ids
+        bounds = jnp.searchsorted(sorted_e, jnp.arange(E + 1, dtype=sorted_e.dtype),
+                                  side="left")
+        starts, counts = bounds[:-1], jnp.diff(bounds)
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    aux = E * jnp.sum(me * counts.astype(jnp.float32) / NK)
+
+    pos = jnp.arange(NK, dtype=jnp.int32) - starts[sorted_e]   # pos in expert
+    keep = pos < cap
+    tok_idx = order // top_k                                   # source token
+
+    if impl == "scatter":
+        slot = jnp.where(keep, pos, cap)
+        gathered = xf[tok_idx]
+        buf = jnp.zeros((E, cap + 1, D), x.dtype).at[sorted_e, slot].set(gathered)
+        buf = buf[:, :cap]
+    else:
+        # dispatch as a gather: slot (e, c) is filled by sorted index
+        # starts[e] + c when c < counts[e]
+        slot_src = starts[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+        slot_valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < counts[:, None]
+        slot_src = jnp.clip(slot_src, 0, NK - 1)
+        tok_for_slot = tok_idx[slot_src]                       # (E, cap)
+        buf = jnp.where(slot_valid[..., None], xf[tok_for_slot], 0)
+        if cap_shard_axis is not None:
+            # pin the dispatch buffer layout: experts over `model`, capacity
+            # over the data axis — turns the gather-from-token-sharded x into
+            # an all-to-all-shaped exchange instead of broadcast+reduce
+            from jax.sharding import PartitionSpec as _P
+            buf = jax.lax.with_sharding_constraint(
+                buf, _P("model", cap_shard_axis, None))
+
+    # ---- expert computation (grouped einsum, expert-parallel) --------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])      # (E, cap, D)
+
+    # ---- combine ------------------------------------------------------------
+    w_sorted = gate_w.reshape(-1)[order]
+    if impl == "scatter":
+        out = jnp.concatenate([out, jnp.zeros((E, 1, D), out.dtype)], axis=1)
+        slot = jnp.where(keep, pos, cap)
+        back = out[sorted_e, slot]
+        back = back * jnp.where(keep, w_sorted, 0.0).astype(back.dtype)[:, None]
+        y = jnp.zeros((N, D), x.dtype).at[tok_idx].add(back)
+    else:
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        # cast to activation dtype BEFORE the cross-expert-shard gather: the
+        # gather from the model-sharded (E, cap, D) buffer lowers to a masked
+        # all-reduce, so its operand width is on the wire (§Perf iteration 2)
+        back = out.astype(x.dtype)[sorted_e, pos_c]            # (N*k, D) gather
+        back = back * jnp.where(keep, w_sorted, 0.0).astype(back.dtype)[:, None]
+        inv = jnp.argsort(order)                               # unsort permutation
+        y = back[inv].reshape(N, top_k, D).sum(axis=1).astype(x.dtype)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,260 @@
+"""Mamba2 — state-space duality (SSD) mixer [arXiv:2405.21060].
+
+Implements the chunked SSD dual form for training/prefill (quadratic within
+chunks, linear recurrence across chunks) and the O(1)-state recurrent step
+for decode.  The pure-jnp chunk computation here doubles as the oracle for
+the Pallas kernel in repro.kernels.ssd_scan.
+
+Single group (G = 1) for B/C projections; heads H = d_inner / head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["init_ssm", "ssm_specs", "ssm_forward", "ssm_decode_step",
+           "ssd_chunked", "ssm_state_shapes"]
+
+
+def _dims(d_model: int, expand: int, head_dim: int, state: int):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    conv_dim = d_inner + 2 * state          # conv over [x, B, C]
+    proj_out = 2 * d_inner + 2 * state + H  # [z, x, B, C, dt]
+    return d_inner, H, conv_dim, proj_out
+
+
+def init_ssm(key, d_model: int, *, expand: int, head_dim: int, state: int,
+             conv_kernel: int, dtype=jnp.float32) -> dict:
+    d_inner, H, conv_dim, proj_out = _dims(d_model, expand, head_dim, state)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / np.sqrt(d_model)
+    dt = jnp.exp(jax.random.uniform(k3, (H,)) * (np.log(0.1) - np.log(0.001))
+                 + np.log(0.001))
+    return {
+        "in_proj": (jax.random.normal(k1, (d_model, proj_out)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (conv_kernel, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "out_proj": (jax.random.normal(k4, (d_inner, d_model))
+                     / np.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def ssm_specs(d_model: int, *, expand: int, head_dim: int, state: int,
+              conv_kernel: int, dtype) -> dict:
+    d_inner, H, conv_dim, proj_out = _dims(d_model, expand, head_dim, state)
+    sds = jax.ShapeDtypeStruct
+    return {
+        "in_proj": sds((d_model, proj_out), dtype),
+        "conv_w": sds((conv_kernel, conv_dim), dtype),
+        "conv_b": sds((conv_dim,), dtype),
+        "A_log": sds((H,), jnp.float32),
+        "D": sds((H,), jnp.float32),
+        "dt_bias": sds((H,), jnp.float32),
+        "norm": {"scale": sds((d_inner,), dtype)},
+        "out_proj": sds((d_inner, d_model), dtype),
+    }
+
+
+def ssm_state_shapes(batch: int, d_model: int, *, expand: int, head_dim: int,
+                     state: int, conv_kernel: int, dtype):
+    """(ssm_state, conv_state) shapes for the decode cache."""
+    d_inner, H, conv_dim, _ = _dims(d_model, expand, head_dim, state)
+    return ((batch, H, head_dim, state), (batch, conv_kernel - 1, conv_dim))
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j < t <= i} x_t."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, *, chunk: int, initial_state: jax.Array | None = None):
+    """SSD dual form.
+
+    Args:
+      x:  (b, s, h, p) inputs (pre-activation, *not* yet dt-scaled).
+      dt: (b, s, h) positive step sizes.
+      A:  (h,) negative decay rates.
+      B, C: (b, s, n) single-group projections.
+      chunk: chunk length (s % chunk == 0 required; pad upstream).
+      initial_state: optional (b, h, p, n).
+    Returns:
+      (y, final_state): y (b, s, h, p), final_state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, "sequence must be chunk-padded"
+    c = s // chunk
+    f32 = jnp.float32
+
+    xd = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, c, chunk, h, p)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(b, c, chunk, h)
+    dA = dA.transpose(0, 3, 1, 2)                      # (b, h, c, l)
+    Bc = B.astype(f32).reshape(b, c, chunk, n)
+    Cc = C.astype(f32).reshape(b, c, chunk, n)
+
+    dA_cs = jnp.cumsum(dA, axis=-1)                    # (b, h, c, l)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA))                           # (b, h, c, l, l)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xd)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)    # (b, h, c, l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xd)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[..., -1])              # (b, h, c)
+    init = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+            else initial_state.astype(f32))
+
+    def chunk_step(carry, xs):
+        st_in, decay = xs                              # (b,h,p,n), (b,h)
+        new = carry * decay[..., None, None] + st_in
+        return new, carry                              # emit state *entering* chunk
+
+    final_state, states_in = jax.lax.scan(
+        chunk_step, init,
+        (states.swapaxes(0, 1), chunk_decay.transpose(2, 0, 1)))
+    states_in = states_in.swapaxes(0, 1)               # (b, c, h, p, n)
+
+    # 4. state -> output within chunk
+    out_decay = jnp.exp(dA_cs)                         # (b, h, c, l)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, states_in, out_decay)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# full block forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _split_zxbcdt(zxbcdt, d_inner, state, H):
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * state:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, bias: jax.Array,
+                 conv_state: jax.Array | None = None):
+    """Depthwise causal conv1d + SiLU.  xBC: (b, s, c); w: (k, c)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad[:, :0]
+    return jax.nn.silu(out + bias[None, None, :]), new_state
+
+
+def ssm_forward(params: dict, u: jax.Array, *, expand: int, head_dim: int,
+                state: int, chunk: int, conv_kernel: int = 4,
+                norm_eps: float = 1e-5,
+                conv_state: jax.Array | None = None,
+                ssm_state: jax.Array | None = None,
+                return_state: bool = False,
+                use_kernel: bool = False):
+    """Full Mamba2 mixer. u: (b, s, d_model) -> (b, s, d_model)."""
+    d_model = u.shape[-1]
+    d_inner, H, conv_dim, _ = _dims(d_model, expand, head_dim, state)
+    b, s, _ = u.shape
+
+    zxbcdt = u @ params["in_proj"]
+    z, xBC, dt = _split_zxbcdt(zxbcdt, d_inner, state, H)
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    x = xBC[..., :d_inner].reshape(b, s, H, head_dim)
+    B = xBC[..., d_inner:d_inner + state]
+    C = xBC[..., d_inner + state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    pad = (-s) % chunk
+    if pad:
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xp, dtp, Bp, Cp = x, dt, B, C
+    if use_kernel:
+        from repro.kernels.ops import ssd_op  # auto-interpret off-TPU
+        y, final_state = ssd_op(xp, dtp, A, Bp, Cp, chunk=chunk,
+                                initial_state=ssm_state)
+    else:
+        y, final_state = ssd_chunked(xp, dtp, A, Bp, Cp, chunk=chunk,
+                                     initial_state=ssm_state)
+    y = y[:, :s].astype(jnp.float32)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner)
+
+    # gated RMSNorm (mamba2's RMSNormGated), fp32 internals, output in u.dtype
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + norm_eps)
+         * params["norm"]["scale"].astype(jnp.float32)).astype(u.dtype)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, (final_state, new_conv)
+    return out
+
+
+def ssm_decode_step(params: dict, u: jax.Array, ssm_state: jax.Array,
+                    conv_state: jax.Array, *, expand: int, head_dim: int,
+                    state: int, conv_kernel: int = 4, norm_eps: float = 1e-5):
+    """Single-token recurrent step.
+
+    u: (b, 1, d_model); ssm_state: (b, H, P, N); conv_state: (b, k-1, conv_dim).
+    Returns (out (b, 1, d_model), new_ssm_state, new_conv_state).
+    """
+    d_model = u.shape[-1]
+    d_inner, H, conv_dim, _ = _dims(d_model, expand, head_dim, state)
+    b = u.shape[0]
+
+    zxbcdt = u @ params["in_proj"]                       # (b, 1, proj)
+    z, xBC, dt = _split_zxbcdt(zxbcdt, d_inner, state, H)
+    # conv: window = [conv_state, xBC_t]
+    k = params["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    out_c = jnp.einsum("bkc,kc->bc", window[:, -k:], params["conv_w"])
+    xBC_t = jax.nn.silu(out_c + params["conv_b"])        # (b, conv_dim)
+    new_conv = window[:, -(k - 1):] if k > 1 else conv_state
+
+    x = xBC_t[:, :d_inner].reshape(b, H, head_dim)
+    B = xBC_t[:, d_inner:d_inner + state]                # (b, n)
+    C = xBC_t[:, d_inner + state:]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (b, H)
+    A = -jnp.exp(params["A_log"])                        # (H,)
+    decay = jnp.exp(dt * A[None, :])                     # (b, H)
+    xd = x.astype(jnp.float32) * dt[..., None]
+    new_state = (ssm_state * decay[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xd, B.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, d_inner)
+
+    y = y * jax.nn.silu(z[:, 0]).astype(jnp.float32)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + norm_eps) * params["norm"]["scale"].astype(jnp.float32)
+    out = (y.astype(u.dtype) @ params["out_proj"])[:, None, :]
+    return out, new_state, new_conv

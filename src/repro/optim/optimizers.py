@@ -1,0 +1,63 @@
+"""Gradient transformations for the diffusion engines.
+
+The paper's Algorithm 1 is plain SGD (the step size is applied by the engine
+itself, masked by agent activation), so each transform maps raw gradients to
+*updates*; the engine multiplies by the random step-size matrix M_i.
+
+All transforms operate leaf-wise, so they work unchanged for stacked-agent
+trees (leading K axis) — each agent carries its own state slice, which is
+*not* mixed in the combination step (the paper mixes only the iterates w).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradTransform(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def sgd() -> GradTransform:
+    """Identity transform — exact Algorithm 1."""
+    return GradTransform(init=lambda params: None,
+                         update=lambda g, s, p: (g, s))
+
+
+def momentum(beta: float = 0.9) -> GradTransform:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(g, s, p):
+        s = jax.tree.map(lambda m, gi: beta * m + gi.astype(m.dtype), s, g)
+        return s, s
+
+    return GradTransform(init=init, update=update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradTransform:
+    def init(params):
+        zeros = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(g, s, p):
+        t = s["t"] + 1
+        m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi.astype(jnp.float32),
+                         s["m"], g)
+        v = jax.tree.map(lambda vi, gi: b2 * vi + (1 - b2)
+                         * jnp.square(gi.astype(jnp.float32)), s["v"], g)
+        tf = t.astype(jnp.float32)
+        c1, c2 = 1 - b1 ** tf, 1 - b2 ** tf
+        upd = jax.tree.map(
+            lambda mi, vi, pi: ((mi / c1) / (jnp.sqrt(vi / c2) + eps)).astype(pi.dtype),
+            m, v, p)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return GradTransform(init=init, update=update)

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    param_pspecs,
+    add_agent_axis,
+    batch_pspec,
+    serve_batch_pspec,
+    cache_pspecs,
+    named,
+)

@@ -1,0 +1,194 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for the mesh.
+
+Conventions (Megatron-style TP over the ``model`` axis):
+  * attention qkv projections — output dim over model
+  * attention output projection — input dim over model
+  * MLP up/gate — output dim over model; down — input dim over model
+  * MoE expert weights — expert dim over model (expert parallelism)
+  * embeddings / lm head — vocab dim over model
+  * SSM in/out projections — inner dim over model
+  * FSDP (kimi-scale): additionally shard the non-TP dim of 2D+ weights over
+    the ``data`` axis (only legal when the agent axis is not ``data``).
+
+Every axis assignment is divisibility-guarded: if a dim doesn't divide the
+mesh axis, that dim falls back to replicated (correct, just less sharded).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+__all__ = ["param_pspecs", "add_agent_axis", "batch_pspec", "cache_pspecs",
+           "named"]
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _maybe(mesh: Mesh, axis, dim: int):
+    """Use ``axis`` only if ``dim`` divides the axis size."""
+    if axis is None:
+        return None
+    return axis if dim % _axsize(mesh, axis) == 0 else None
+
+
+def _leaf_rule(path: str, shape: tuple[int, ...], mesh: Mesh,
+               fsdp_axis, tp_enabled: bool = True) -> P:
+    """Inner (agent-free) spec for a parameter leaf."""
+    name = path.split("/")[-1]
+    stacked = "segments/" in path  # leading layer dim from scan stacking
+    off = 1 if stacked else 0
+    dims = shape[off:]
+
+    def spec(*entries):
+        return P(*([None] * off + list(entries)))
+
+    tp = "model" if tp_enabled else None
+    if name in ("scale", "A_log", "D", "dt_bias", "conv_b", "b"):
+        return spec(*([None] * len(dims)))
+    if path.endswith("embed") or name == "embed":
+        if len(dims) == 3:     # (nq, V, D) audio codebooks
+            return spec(None, _maybe(mesh, tp, dims[1]),
+                        _maybe(mesh, fsdp_axis, dims[2]))
+        return spec(_maybe(mesh, tp, dims[0]), _maybe(mesh, fsdp_axis, dims[1]))
+    if name == "lm_head":
+        if len(dims) == 3:     # (nq, D, V)
+            return spec(None, _maybe(mesh, fsdp_axis, dims[1]),
+                        _maybe(mesh, tp, dims[2]))
+        return spec(_maybe(mesh, fsdp_axis, dims[0]), _maybe(mesh, tp, dims[1]))
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "router", "w"):
+        if len(dims) == 3:
+            # MoE (E, D, F): experts over model, FSDP on D.  We also tried
+            # FSDP on F (output dim) to avoid the (E, cap, F) partial-sum
+            # all-reduce — measured 2x WORSE on kimi (the w_down contraction
+            # then produces an unsharded (E, cap, D) reduce with D >> F);
+            # see EXPERIMENTS.md §Perf (refuted hypothesis, kimi iter 3).
+            return spec(_maybe(mesh, tp, dims[0]),
+                        _maybe(mesh, fsdp_axis, dims[1]), None)
+        return spec(_maybe(mesh, fsdp_axis, dims[0]), _maybe(mesh, tp, dims[1]))
+    if name in ("wo", "w_down", "out_proj"):
+        if len(dims) == 3:     # MoE (E, F, D)
+            return spec(_maybe(mesh, tp, dims[0]), None,
+                        _maybe(mesh, fsdp_axis, dims[1]))
+        return spec(_maybe(mesh, tp, dims[0]), _maybe(mesh, fsdp_axis, dims[1]))
+    if name == "conv_w":       # (k, conv_dim)
+        return spec(None, _maybe(mesh, tp, dims[1]))
+    return spec(*([None] * len(dims)))
+
+
+def _flatten_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = []
+    for p, v in flat:
+        parts = []
+        for e in p:
+            parts.append(str(e.key) if hasattr(e, "key") else str(getattr(e, "idx", e)))
+        paths.append(("/".join(parts), v))
+    return paths, treedef
+
+
+def param_pspecs(specs: PyTree, mesh: Mesh, *, fsdp: bool = False,
+                 tp: bool = True) -> PyTree:
+    """PartitionSpec tree for an (agent-free) parameter tree.
+
+    ``tp=False`` replicates parameters over the ``model`` axis (pure data
+    parallelism) — the right scheme for models whose d_model is too small to
+    amortize TP activation all-reduces (see EXPERIMENTS.md §Perf).
+    """
+    fsdp_axis = "data" if (fsdp and "data" in mesh.shape) else None
+    flat, treedef = _flatten_paths(specs)
+    out = [_leaf_rule(path, v.shape, mesh, fsdp_axis, tp) for path, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def add_agent_axis(pspecs: PyTree, agent_axis: str | None) -> PyTree:
+    """Prepend the agent axis to every leaf spec (stacked-agent layout)."""
+    return jax.tree.map(lambda s: P(agent_axis, *tuple(s)), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, *, agent_axis: str | None, ndim: int,
+                leading_T: bool = True, tp: bool = True,
+                batch: int | None = None) -> P:
+    """Spec for block-batch leaves (T, K, B, ...): agent over agent_axis,
+    per-agent batch over the remaining data-like axes.  With ``tp=False``
+    the ``model`` axis also carries batch (pure DP).  When ``batch`` is
+    given, axes are dropped greedily until the product divides it."""
+    data_axes = [a for a in ("pod", "data") if a in mesh.shape
+                 and a != agent_axis]
+    if not tp and "model" in mesh.shape:
+        data_axes.append("model")
+    while batch is not None and data_axes and \
+            batch % int(np.prod([mesh.shape[a] for a in data_axes])):
+        data_axes.pop()
+    b_axis = tuple(data_axes) if data_axes else None
+    entries = ([None] if leading_T else []) + [agent_axis, b_axis]
+    entries += [None] * (ndim - len(entries))
+    return P(*entries)
+
+
+def serve_batch_pspec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Spec for serving inputs (B, ...): batch over all data-like axes."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n = 1
+    for a in data_axes:
+        n *= mesh.shape[a]
+    b_axis = data_axes if (data_axes and batch % n == 0) else None
+    return P(b_axis, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache_spec: PyTree, mesh: Mesh, batch: int) -> PyTree:
+    """Specs for the decode cache.
+
+    KV leaves (L, B, C, Kv, Dh): batch over data axes when divisible,
+    otherwise the cache length C is sharded over ``data`` (long-context,
+    batch=1).  SSM state (L, B, H, P, N): heads over model.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n = 1
+    for a in data_axes:
+        n *= mesh.shape[a]
+    shard_batch = batch % n == 0 and n > 1
+
+    def rule(pathvals):
+        path, v = pathvals
+        name = path.split("/")[-1]
+        if name in ("k", "v"):
+            L, B, C, Kv, Dh = v.shape
+            if shard_batch:
+                return P(None, data_axes, None, _maybe(mesh, "model", Kv), None)
+            return P(None, None, _maybe(mesh, "data", C),
+                     _maybe(mesh, "model", Kv), None)
+        if name == "ssm":
+            L, B, H, Pd, N = v.shape
+            if shard_batch:
+                return P(None, data_axes, _maybe(mesh, "model", H), None, None)
+            return P(None, None, _maybe(mesh, "model", H), None, None)
+        if name == "conv":
+            L, B, K1, Cd = v.shape
+            if shard_batch:
+                return P(None, data_axes, None, _maybe(mesh, "model", Cd))
+            return P(None, None, None, _maybe(mesh, "model", Cd))
+        return P(*([None] * v.ndim))
+
+    flat, treedef = _flatten_paths(cache_spec)
+    return jax.tree_util.tree_unflatten(treedef, [rule(pv) for pv in flat])
+
+
+def named(pspecs: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

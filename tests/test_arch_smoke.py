@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.synthetic import lm_token_batch
+from repro.models import transformer as tf
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    shape = (B, S) if not cfg.num_codebooks else (B, S, cfg.num_codebooks)
+    batch = lm_token_batch(KEY, shape, cfg.vocab_size)
+    if cfg.img_tokens:
+        batch["img_embeds"] = jax.random.normal(
+            KEY, (B, cfg.img_tokens, tf.VISION_DIM), jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_nans(arch):
+    cfg = get_config(arch).smoke
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    params = tf.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    logits, aux, n_prefix = tf.forward(params, cfg, batch["tokens"],
+                                       img_embeds=batch.get("img_embeds"),
+                                       remat=False)
+    exp_seq = S + (cfg.img_tokens if cfg.img_tokens else 0)
+    if cfg.num_codebooks:
+        assert logits.shape == (B, exp_seq, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, exp_seq, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One SGD train step: loss finite, params move, no NaNs after."""
+    cfg = get_config(arch).smoke
+    params = tf.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.train_loss(p, cfg, batch, remat=False))(params)
+    assert np.isfinite(float(loss))
+    new = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+    loss2 = tf.train_loss(new, cfg, batch, remat=False)
+    assert np.isfinite(float(loss2))
+    moved = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new)))
+    assert moved > 0
+    for leaf in jax.tree.leaves(new):
+        assert not bool(jnp.isnan(leaf).any())
+
+
+@pytest.mark.parametrize("arch", ["smollm_360m", "mamba2_2p7b", "zamba2_1p2b",
+                                  "granite_moe_1b_a400m", "musicgen_medium"])
+def test_smoke_decode_matches_forward(arch):
+    cfg = get_config(arch).smoke
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    params = tf.init_params(KEY, cfg)
+    n_dec = 3
+    shape = ((B, S + n_dec) if not cfg.num_codebooks
+             else (B, S + n_dec, cfg.num_codebooks))
+    toks = jax.random.randint(KEY, shape, 0, cfg.vocab_size)
+    full, _, _ = tf.forward(params, cfg, toks, remat=False)
+    lg, cache = tf.prefill(params, cfg, toks[:, :S], max_len=S + n_dec)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]), np.asarray(full[:, S - 1]),
+                               atol=2e-3, rtol=2e-3)
+    for t in range(n_dec):
+        lg_t, cache = tf.decode_step(params, cfg, cache, toks[:, S + t:S + t + 1])
+        np.testing.assert_allclose(np.asarray(lg_t[:, 0]),
+                                   np.asarray(full[:, S + t]),
+                                   atol=5e-3, rtol=5e-3)
+
+
+def test_remat_matches_no_remat():
+    cfg = get_config("smollm_360m").smoke
+    params = tf.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    l1 = tf.train_loss(params, cfg, batch, remat=False)
+    l2 = tf.train_loss(params, cfg, batch, remat=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    g1 = jax.grad(lambda p: tf.train_loss(p, cfg, batch, remat=False))(params)
+    g2 = jax.grad(lambda p: tf.train_loss(p, cfg, batch, remat=True))(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_param_specs_match_init():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).smoke
+        params = tf.init_params(KEY, cfg)
+        specs = tf.param_specs(cfg)
+        ps, ss = jax.tree.leaves(params), jax.tree.leaves(specs)
+        assert len(ps) == len(ss)
+        for p, s in zip(ps, ss):
+            assert p.shape == s.shape, (arch, p.shape, s.shape)
+            assert p.dtype == s.dtype
+
+
+def test_full_config_param_counts():
+    """Sanity: total/active parameter counts in the published ballpark."""
+    approx = {
+        "chatglm3_6b": (6e9, 0.4),
+        "kimi_k2_1t_a32b": (1.0e12, 0.3),
+        "mamba2_2p7b": (2.7e9, 0.4),
+        "smollm_360m": (3.6e8, 0.4),
+        "starcoder2_15b": (15e9, 0.4),
+        "qwen3_32b": (32e9, 0.4),
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).model.total_params()
+        assert abs(n - target) / target < tol, (arch, n, target)
+    k = get_config("kimi_k2_1t_a32b").model
+    active = k.active_params()
+    assert abs(active - 32e9) / 32e9 < 0.35, active

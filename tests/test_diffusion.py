@@ -1,0 +1,170 @@
+"""Algorithm 1 engine: stability, drift, drift correction, mixing paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_topology, masked_combination
+from repro.core.diffusion import (DiffusionConfig, DiffusionEngine,
+                                  mix_stacked, network_msd)
+from repro.core.sharded import make_block_step, mix_dense, mix_sparse
+from repro.data.synthetic import make_block_sampler, make_regression_problem
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_regression_problem(K=8, N=60, M=2, rho=0.1, seed=0)
+
+
+def _engine(data, **kw):
+    defaults = dict(num_agents=8, local_steps=3, step_size=0.02,
+                    topology="ring", participation=0.8)
+    defaults.update(kw)
+    cfg = DiffusionConfig(**defaults)
+    return cfg, DiffusionEngine(cfg, data.loss_fn())
+
+
+def test_converges_to_neighborhood(data):
+    """Theorem 1: iterates reach an O(mu) neighborhood of w^o (eq. 27)."""
+    cfg, eng = _engine(data)
+    prob = data.problem()
+    w_o = prob.w_opt(cfg.q_vector())
+    params = jnp.full((8, 2), 3.0)  # start far from w^o
+    sampler = make_block_sampler(data, T=3, batch=1)
+    params, _, hist = eng.run(params, sampler, 800, seed=0,
+                              w_star=jnp.asarray(w_o))
+    assert np.mean(hist[-100:]) < 0.01 * hist[0]
+    assert np.mean(hist[-100:]) < 0.02  # O(mu) neighborhood
+
+
+def test_drift_without_correction(data):
+    """With heterogeneous q, the mean limit is w^o of the DRIFTED problem."""
+    q = (0.9, 0.2, 0.9, 0.2, 0.9, 0.2, 0.9, 0.2)
+    cfg, eng = _engine(data, participation=q, step_size=0.01, local_steps=2)
+    prob = data.problem()
+    w_drift = prob.w_opt(np.asarray(q))
+    w_orig = prob.w_opt(None)
+    assert np.linalg.norm(w_drift - w_orig) > 1e-3  # drift is non-trivial
+    params = jnp.zeros((8, 2))
+    sampler = make_block_sampler(data, T=2, batch=4)
+    params, _, _ = eng.run(params, sampler, 2500, seed=1)
+    w_bar = np.asarray(params).mean(axis=0)
+    # closer to the drifted optimum than to the original one
+    assert (np.linalg.norm(w_bar - w_drift)
+            < np.linalg.norm(w_bar - w_orig))
+
+
+def test_drift_correction_restores_original(data):
+    """Eq. (31): mu/q_k step sizes restore the ORIGINAL optimum (eq. 38)."""
+    q = (0.9, 0.3, 0.9, 0.3, 0.9, 0.3, 0.9, 0.3)
+    cfg, eng = _engine(data, participation=q, drift_correction=True,
+                       step_size=0.01, local_steps=2)
+    prob = data.problem()
+    w_orig = prob.w_opt(None)
+    w_drift = prob.w_opt(np.asarray(q))
+    params = jnp.zeros((8, 2))
+    sampler = make_block_sampler(data, T=2, batch=4)
+    params, _, _ = eng.run(params, sampler, 2500, seed=2)
+    w_bar = np.asarray(params).mean(axis=0)
+    assert (np.linalg.norm(w_bar - w_orig)
+            < np.linalg.norm(w_bar - w_drift))
+
+
+def test_inactive_agents_do_not_move(data):
+    cfg = DiffusionConfig(num_agents=8, local_steps=3, step_size=0.05,
+                          topology="ring", participation=0.0)
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    params = jnp.ones((8, 2)) * 3.0
+    sampler = make_block_sampler(data, T=3, batch=1)
+    out, _, _ = eng.run(params, sampler, 5, seed=0)
+    np.testing.assert_allclose(np.asarray(out), 3.0)
+
+
+def test_mean_preservation_under_mixing():
+    """Doubly-stochastic mixing preserves the network average exactly."""
+    K = 10
+    topo = make_topology("erdos", K, seed=5)
+    A = jnp.asarray(topo.A, jnp.float32)
+    p = {"w": jax.random.normal(jax.random.PRNGKey(0), (K, 4, 3))}
+    for seed in range(5):
+        m = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.6, (K,))
+        Ae = masked_combination(A, m.astype(jnp.float32))
+        mixed = mix_stacked(Ae, p)
+        np.testing.assert_allclose(np.asarray(mixed["w"].mean(0)),
+                                   np.asarray(p["w"].mean(0)), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_sparse_equals_dense_mixing(seed):
+    K = 8
+    topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    m = jax.random.bernoulli(key, 0.5, (K,)).astype(jnp.float32)
+    Ae = masked_combination(A, m)
+    p = {"a": jax.random.normal(key, (K, 6, 2)), "b": jax.random.normal(key, (K, 3))}
+    d = mix_dense(Ae, p)
+    s = mix_sparse(Ae, p, topo.neighbor_offsets_ring())
+    for k in p:
+        np.testing.assert_allclose(np.asarray(d[k]), np.asarray(s[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_block_step_builder_matches_engine(data):
+    """core.sharded.make_block_step == DiffusionEngine.block_step."""
+    cfg = DiffusionConfig(num_agents=8, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.7)
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    loss3 = lambda p, b, rng: data.loss_fn()(p, b)
+    topo = cfg.make_topology()
+    step = make_block_step(loss3, cfg, jnp.asarray(topo.A, jnp.float32),
+                           mix="dense")
+    params = jax.random.normal(jax.random.PRNGKey(0), (8, 2))
+    sampler = make_block_sampler(data, T=2, batch=2)
+    key = jax.random.PRNGKey(42)
+    batch = sampler(jax.random.PRNGKey(7))
+    p1, _, a1 = eng.block_step(params, None, key, batch)
+    p2, _, a2 = step(params, None, key, batch)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_higher_participation_better_msd(data):
+    """Paper Fig. 6: higher q => lower steady-state MSD."""
+    prob = data.problem()
+    results = {}
+    for q in (0.2, 0.9):
+        cfg, eng = _engine(data, participation=q, local_steps=1,
+                           step_size=0.02)
+        w_o = prob.w_opt(cfg.q_vector())
+        params = jnp.zeros((8, 2))
+        sampler = make_block_sampler(data, T=1, batch=1)
+        msds = []
+        for rep in range(3):
+            _, _, hist = eng.run(params, sampler, 1200, seed=rep,
+                                 w_star=jnp.asarray(w_o))
+            msds.append(np.mean(hist[-200:]))
+        results[q] = np.mean(msds)
+    assert results[0.9] < results[0.2]
+
+
+def test_more_local_steps_worse_msd(data):
+    """Paper Fig. 7: larger T converges to a worse error."""
+    prob = data.problem()
+    w_o = prob.w_opt(np.full(8, 1.0))
+    results = {}
+    for T in (1, 8):
+        cfg, eng = _engine(data, participation=1.0, local_steps=T,
+                           step_size=0.02)
+        params = jnp.zeros((8, 2))
+        sampler = make_block_sampler(data, T=T, batch=1)
+        msds = []
+        for rep in range(3):
+            _, _, hist = eng.run(params, sampler, 1000, seed=rep,
+                                 w_star=jnp.asarray(w_o))
+            msds.append(np.mean(hist[-200:]))
+        results[T] = np.mean(msds)
+    assert results[8] > results[1]

@@ -1,0 +1,114 @@
+"""Units for the dry-run analysis layer: HLO collective parser (trip-count
+awareness) and roofline analytic formulas.  No compilation involved."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import (_shape_bytes, _split_computations,
+                                 _trip_count, collective_stats)
+
+SAMPLE_HLO = """
+HloModule jit_step, entry_computation_layout={()->()}
+
+%body.1 (arg: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %ar.1 = f32[128,64]{1,0} all-reduce(f32[128,64] %x), replica_groups={}
+  %cp.1 = f32[64]{0} collective-permute(f32[64] %y), source_target_pairs={{0,1}}
+}
+
+%cond.1 (arg: (s32[], f32[128,64])) -> pred[] {
+  %c4 = s32[] constant(4)
+  %cmp = pred[] compare(s32[] %i, s32[] %c4), direction=LT
+}
+
+%inner_body.2 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ag.2 = f32[8,8]{1,0} all-gather(f32[8] %z), dimensions={0}
+}
+
+%inner_cond.2 (arg: (s32[], f32[8])) -> pred[] {
+  %c3 = s32[] constant(3)
+  %cmp2 = pred[] compare(s32[] %j, s32[] %c3), direction=LT
+}
+
+ENTRY %main.9 (p0: f32[128,64]) -> f32[128,64] {
+  %w.1 = (s32[], f32[128,64]) while((s32[], f32[128,64]) %t), condition=%cond.1, body=%body.1
+  %w.2 = (s32[], f32[8]) while((s32[], f32[8]) %t2), condition=%inner_cond.2, body=%inner_body.2
+  %ar.root = f32[128,64]{1,0} all-reduce(f32[128,64] %p0), replica_groups={}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,64]") == 128 * 64 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _shape_bytes("u32[1,8388608,448]") == 8388608 * 448 * 4
+
+
+def test_split_computations():
+    comps = _split_computations(SAMPLE_HLO)
+    assert "ENTRY" in comps
+    assert any("body.1" in k for k in comps)
+    assert any("cond.1" in k for k in comps)
+
+
+def test_trip_count():
+    comps = _split_computations(SAMPLE_HLO)
+    cond = next(v for k, v in comps.items() if k.startswith("cond.1"))
+    assert _trip_count(cond) == 4
+
+
+def test_collective_stats_trip_aware():
+    stats = collective_stats(SAMPLE_HLO)
+    # all-reduce: 4x inside the loop (128*64*4) + 1x at root
+    assert stats["all-reduce"]["count"] == 4 + 1
+    assert stats["all-reduce"]["bytes"] == 5 * 128 * 64 * 4
+    # permute: 4x inside loop
+    assert stats["collective-permute"]["count"] == 4
+    assert stats["collective-permute"]["bytes"] == 4 * 64 * 4
+    # inner all-gather: 3x
+    assert stats["all-gather"]["count"] == 3
+    assert stats["all-gather"]["bytes"] == 3 * 64 * 4
+
+
+def test_analytic_flops_sane():
+    from benchmarks.roofline import analytic_flops
+    f_train = analytic_flops("smollm_360m", "train_4k")
+    # 6ND * T: 6 * ~360e6 * (256*4096) * 4 local steps ~ 9e15
+    assert 3e15 < f_train["model_flops"] < 3e16
+    assert f_train["analytic_flops"] >= f_train["model_flops"]
+    f_dec = analytic_flops("smollm_360m", "decode_32k")
+    assert f_dec["model_flops"] < 1e13  # one token x batch 128
+    # ssm arch covered
+    f_ssm = analytic_flops("mamba2_2p7b", "train_4k")
+    assert f_ssm["analytic_flops"] > 0
+
+
+def test_input_specs_no_allocation():
+    """input_specs returns abstract values only (no device arrays)."""
+    import jax
+    from repro.launch import dryrun as dr
+    # use the default (single-real-device) mesh context by monkeypatching a
+    # tiny mesh — specs are layout objects regardless of mesh size
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices() * 32)[:32].reshape(16, 2)
+    mesh = Mesh(devs, ("data", "model"))
+    specs = dr.input_specs("smollm-360m", "train_4k", mesh=mesh)
+    for leaf in jax.tree.leaves(specs["batch"]):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    assert specs["batch"]["tokens"].shape[0] == 4       # T
+    assert specs["batch"]["tokens"].shape[1] == 16      # K agents
+    assert specs["batch"]["tokens"].shape[1] * specs["batch"]["tokens"].shape[2] == 256
+
+
+def test_serve_window_rules():
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.dryrun import serve_window
+    # dense arch at 500k MUST be sub-quadratic => window
+    cfg = get_config("qwen3_32b").model
+    assert serve_window(cfg, INPUT_SHAPES["long_500k"]) == 8192
+    # ssm: native, no window
+    cfg = get_config("mamba2_2p7b").model
+    assert serve_window(cfg, INPUT_SHAPES["long_500k"]) is None
+    # starcoder2 uses its published 4k window everywhere
+    cfg = get_config("starcoder2_15b").model
+    assert serve_window(cfg, INPUT_SHAPES["decode_32k"]) == 4096

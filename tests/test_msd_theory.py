@@ -1,0 +1,100 @@
+"""Theorem 5: closed-form MSD matches simulation (the paper's Fig. 5 claim)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.diffusion import DiffusionConfig, DiffusionEngine
+from repro.core.msd import theoretical_msd
+from repro.data.synthetic import make_block_sampler, make_regression_problem
+
+
+@pytest.mark.slow
+def test_msd_matches_simulation():
+    K, T, mu = 10, 5, 0.01
+    data = make_regression_problem(K=K, N=100, M=2, rho=0.1, seed=0)
+    rng = np.random.default_rng(1)
+    q = rng.uniform(0.3, 0.9, size=K)
+    cfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                          topology="ring", participation=tuple(q))
+    topo = cfg.make_topology()
+    theory = theoretical_msd(data.problem(), A=topo.A, q=q, mu=mu, T=T)
+    assert theory["rho_EFF"] < 1.0  # stability of the Lyapunov recursion
+
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    sampler = make_block_sampler(data, T=T, batch=1)
+    msds = []
+    for rep in range(3):
+        params = jnp.zeros((K, 2))
+        _, _, hist = eng.run(params, sampler, 2500, seed=rep,
+                             w_star=jnp.asarray(theory["w_opt"]))
+        msds.append(np.mean(hist[-600:]))
+    sim = float(np.mean(msds))
+    # Theorem 5 is exact up to O(mu^{3/2}); 20% tolerance is conservative
+    assert abs(sim - theory["msd"]) / theory["msd"] < 0.20, (sim, theory["msd"])
+
+
+def test_msd_monotone_in_T():
+    """Remark 1: larger T => larger steady-state MSD (all else fixed)."""
+    data = make_regression_problem(K=6, N=80, M=2, rho=0.1, seed=3)
+    q = np.full(6, 0.8)
+    cfg = DiffusionConfig(num_agents=6, topology="ring", participation=0.8)
+    topo = cfg.make_topology()
+    msds = [theoretical_msd(data.problem(), A=topo.A, q=q, mu=0.01, T=T)["msd"]
+            for T in (1, 4, 10)]
+    assert msds[0] < msds[1] < msds[2]
+
+
+def test_msd_monotone_in_q():
+    """Remark 1: higher activation probability => smaller MSD (T = 1)."""
+    data = make_regression_problem(K=6, N=80, M=2, rho=0.1, seed=4)
+    cfg = DiffusionConfig(num_agents=6, topology="ring")
+    topo = cfg.make_topology()
+    msds = []
+    for qv in (0.2, 0.5, 0.9):
+        q = np.full(6, qv)
+        msds.append(theoretical_msd(data.problem(), A=topo.A, q=q,
+                                    mu=0.01, T=1)["msd"])
+    assert msds[0] > msds[1] > msds[2]
+
+
+def test_msd_scales_with_mu():
+    """Theorem 1: steady-state error is O(mu)."""
+    data = make_regression_problem(K=5, N=80, M=2, rho=0.1, seed=5)
+    q = np.full(5, 0.7)
+    cfg = DiffusionConfig(num_agents=5, topology="ring", participation=0.7)
+    topo = cfg.make_topology()
+    m1 = theoretical_msd(data.problem(), A=topo.A, q=q, mu=0.005, T=2)["msd"]
+    m2 = theoretical_msd(data.problem(), A=topo.A, q=q, mu=0.02, T=2)["msd"]
+    ratio = m2 / m1
+    assert 2.0 < ratio < 8.0  # ~linear in mu (4x expected)
+
+
+def test_transient_curve_tracks_simulation():
+    """Beyond-paper: the Theorem-5 operators iterated from t=0 predict the
+    full learning curve, not just the fixed point."""
+    from repro.core.msd import theoretical_curve
+    from repro.core.diffusion import DiffusionEngine
+    from repro.data.synthetic import make_block_sampler
+    import jax.numpy as jnp
+    K, T, mu = 6, 3, 0.01
+    data = make_regression_problem(K=K, N=80, M=2, rho=0.1, seed=6)
+    q = np.full(K, 0.7)
+    cfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                          topology="ring", participation=0.7)
+    topo = cfg.make_topology()
+    th = theoretical_msd(data.problem(), A=topo.A, q=q, mu=mu, T=T)
+    curve = theoretical_curve(th, np.zeros(2), 600)
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    sampler = make_block_sampler(data, T=T, batch=1)
+    hists = []
+    for rep in range(4):
+        p = jnp.zeros((K, 2))
+        _, _, h = eng.run(p, sampler, 600, seed=rep,
+                          w_star=jnp.asarray(th["w_opt"]))
+        hists.append(h)
+    sim = np.mean(hists, axis=0)
+    # early transient and mid-trajectory within 40% (MC noise over 4 reps)
+    for i in (5, 30, 150, 500):
+        assert 0.5 < sim[i - 1] / curve[i] < 1.6, (i, sim[i - 1], curve[i])
+    # monotone decreasing early phase
+    assert curve[1] > curve[50] > curve[500] * 0.9

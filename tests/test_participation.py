@@ -1,0 +1,85 @@
+"""Partial participation: eq. (20) masking and Lemma 1 expectations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import participation as P
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("kind", ["ring", "erdos", "fedavg"])
+def test_masked_matrix_doubly_stochastic(kind):
+    topo = T.make_topology(kind, 10)
+    A = jnp.asarray(topo.A, jnp.float32)
+    for seed in range(25):
+        m = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.5, (10,))
+        Ae = np.asarray(P.masked_combination(A, m.astype(jnp.float32)))
+        assert np.allclose(Ae.sum(0), 1, atol=1e-5)
+        assert np.allclose(Ae.sum(1), 1, atol=1e-5)
+        assert (Ae >= -1e-6).all()
+
+
+def test_inactive_agents_frozen():
+    topo = T.make_topology("ring", 6)
+    m = np.array([1, 0, 1, 1, 0, 1], dtype=np.float64)
+    Ae = P.masked_combination_np(topo.A, m)
+    for k in (1, 4):  # inactive: identity column
+        expected = np.zeros(6)
+        expected[k] = 1.0
+        np.testing.assert_allclose(Ae[:, k], expected)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 2 ** 12 - 1))
+def test_masking_doubly_stochastic_property(K, bits):
+    """Property: eq. (20) preserves double stochasticity for EVERY mask."""
+    topo = T.make_topology("ring", K) if K > 2 else T.make_topology("full", K)
+    mask = np.array([(bits >> i) & 1 for i in range(K)], dtype=np.float64)
+    Ae = P.masked_combination_np(topo.A, mask)
+    assert np.allclose(Ae.sum(0), 1, atol=1e-9)
+    assert np.allclose(Ae.sum(1), 1, atol=1e-9)
+    assert (Ae >= -1e-12).all()
+
+
+def test_lemma1_expected_combination_monte_carlo():
+    """E[A_i] from sampling matches the Lemma 1 closed form (eq. 22)."""
+    K = 8
+    topo = T.make_topology("erdos", K, seed=2)
+    rng = np.random.default_rng(0)
+    q = rng.uniform(0.2, 0.9, K)
+    n = 40000
+    acc = np.zeros((K, K))
+    for i in range(n):
+        m = (rng.random(K) < q).astype(np.float64)
+        acc += P.masked_combination_np(topo.A, m)
+    emp = acc / n
+    theory = P.expected_combination(topo.A, q)
+    np.testing.assert_allclose(emp, theory, atol=0.01)
+
+
+def test_lemma1_expected_A_M_monte_carlo():
+    """E[A_i M_i] matches eq. (24)."""
+    K = 6
+    mu = 0.05
+    topo = T.make_topology("ring", K)
+    rng = np.random.default_rng(1)
+    q = rng.uniform(0.3, 0.9, K)
+    n = 40000
+    acc = np.zeros((K, K))
+    for i in range(n):
+        m = (rng.random(K) < q).astype(np.float64)
+        acc += P.masked_combination_np(topo.A, m) @ np.diag(mu * m)
+    emp = acc / n
+    theory = P.expected_A_M(topo.A, q, mu)
+    np.testing.assert_allclose(emp, theory, atol=2e-3)
+
+
+def test_step_size_matrix_drift_correction():
+    q = jnp.array([0.5, 0.25, 1.0])
+    active = jnp.array([1.0, 1.0, 0.0])
+    mus = P.step_size_matrix(0.1, active, q, drift_correction=True)
+    np.testing.assert_allclose(np.asarray(mus), [0.2, 0.4, 0.0], rtol=1e-6)
+    mus = P.step_size_matrix(0.1, active, q, drift_correction=False)
+    np.testing.assert_allclose(np.asarray(mus), [0.1, 0.1, 0.0], rtol=1e-6)

@@ -1,0 +1,100 @@
+"""Data pipeline: partitioners + deterministic block iteration."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import (BlockIterator, TokenDataset,
+                                 contiguous_partition, dirichlet_partition)
+
+
+def test_dirichlet_partition_covers_everything():
+    labels = np.repeat(np.arange(10), 100)
+    parts = dirichlet_partition(labels, K=8, alpha=0.5, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)  # exact partition
+    assert all(len(p) >= 1 for p in parts)
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    labels = np.repeat(np.arange(10), 200)
+
+    def label_entropy(parts):
+        ents = []
+        for p in parts:
+            counts = np.bincount(labels[p], minlength=10) + 1e-9
+            pr = counts / counts.sum()
+            ents.append(-(pr * np.log(pr)).sum())
+        return np.mean(ents)
+
+    iid_ent = label_entropy(dirichlet_partition(labels, 8, alpha=100.0, seed=1))
+    skew_ent = label_entropy(dirichlet_partition(labels, 8, alpha=0.05, seed=1))
+    assert skew_ent < iid_ent  # small alpha => agents see fewer classes
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(10, 300))
+def test_contiguous_partition_property(K, n):
+    parts = contiguous_partition(n, K)
+    assert len(parts) == K
+    cat = np.concatenate(parts)
+    np.testing.assert_array_equal(cat, np.arange(n))
+
+
+def test_block_iterator_shapes_and_determinism():
+    ds = TokenDataset.synthetic(vocab=256, n_tokens=10_000, seq_len=32, seed=0)
+    parts = contiguous_partition(ds.num_windows, 4)
+    it = BlockIterator(ds, parts, local_steps=3, per_agent_batch=2, seed=7)
+    b1 = it.block(5)
+    b2 = it.block(5)
+    assert b1["tokens"].shape == (3, 4, 2, 32)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b1["tokens"])[..., 1:],
+                                  np.asarray(b1["labels"])[..., :-1])
+    # different blocks differ
+    b3 = it.block(6)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_block_iterator_respects_partitions():
+    """Agent k's tokens must come from agent k's windows only."""
+    ds = TokenDataset.synthetic(vocab=256, n_tokens=5_000, seq_len=16, seed=1)
+    parts = contiguous_partition(ds.num_windows, 2)
+    it = BlockIterator(ds, parts, local_steps=2, per_agent_batch=4, seed=0)
+    batch = np.asarray(it.block(0)["tokens"])
+    windows = {k: {ds.window(int(w))[0].tobytes() for w in parts[k]}
+               for k in range(2)}
+    for k in range(2):
+        for t in range(2):
+            for b in range(4):
+                assert batch[t, k, b].tobytes() in windows[k]
+
+
+def test_pipeline_feeds_engine():
+    """End-to-end: pipeline -> sharded block step on an LM."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.diffusion import DiffusionConfig
+    from repro.core.sharded import make_block_step
+    from repro.models import transformer as tf
+
+    cfg = get_config("smollm-360m").smoke
+    K, T = 4, 2
+    ds = TokenDataset.synthetic(vocab=cfg.vocab_size, n_tokens=20_000,
+                                seq_len=32, seed=0)
+    parts = contiguous_partition(ds.num_windows, K)
+    it = BlockIterator(ds, parts, local_steps=T, per_agent_batch=2, seed=0)
+    dcfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=1e-2,
+                           topology="ring", participation=0.9)
+    topo = dcfg.make_topology()
+    step = jax.jit(make_block_step(
+        lambda p, b, r: tf.train_loss(p, cfg, b, remat=False), dcfg,
+        jnp.asarray(topo.A, jnp.float32), mix="dense"))
+    params = jax.vmap(lambda k: tf.init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), K))
+    params, _, active = step(params, None, jax.random.PRNGKey(1), it.block(0))
+    for leaf in jax.tree.leaves(params):
+        assert not bool(jnp.isnan(leaf).any())

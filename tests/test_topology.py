@@ -1,0 +1,52 @@
+"""Combination-matrix constructions satisfy Assumption 1."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("kind,K", [
+    ("ring", 5), ("ring", 20), ("full", 8), ("fedavg", 8),
+    ("erdos", 12), ("grid", 12),
+])
+def test_assumption1(kind, K):
+    topo = T.make_topology(kind, K)
+    assert T.is_symmetric(topo.A)
+    assert T.is_doubly_stochastic(topo.A)
+    assert T.is_primitive(topo.A)
+
+
+def test_perron_vector_uniform():
+    # doubly stochastic => Perron eigenvector is (1/K) 1 (paper §II)
+    topo = T.make_topology("erdos", 10, seed=3)
+    p = T.perron_vector(topo.A)
+    np.testing.assert_allclose(p, np.full(10, 0.1), atol=1e-8)
+
+
+def test_fedavg_matrix_is_uniform():
+    topo = T.make_topology("fedavg", 6)
+    np.testing.assert_allclose(topo.A, np.full((6, 6), 1 / 6))
+
+
+def test_spectral_gap_orders():
+    # denser graphs mix faster
+    ring = T.make_topology("ring", 16)
+    full = T.make_topology("fedavg", 16)
+    assert T.spectral_gap(full.A) > T.spectral_gap(ring.A)
+
+
+def test_ring_offsets():
+    topo = T.make_topology("ring", 8, hops=2)
+    assert set(topo.neighbor_offsets_ring()) == {-2, -1, 1, 2}
+
+
+def test_metropolis_on_irregular_graph():
+    adj = T.erdos_renyi_adjacency(15, 0.2, seed=7)
+    A = T.metropolis_weights(adj)
+    assert T.is_doubly_stochastic(A)
+    assert T.is_symmetric(A)
+
+
+def test_grid_requires_divisible():
+    with pytest.raises(ValueError):
+        T.make_topology("grid", 7)
