@@ -5,6 +5,7 @@ figure-specific quantity: MSD values, theory/sim ratios, orderings).
 
   PYTHONPATH=src python -m benchmarks.run            # full (paper-scale)
   REPRO_BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run   # CI-scale
+  PYTHONPATH=src python -m benchmarks.run bench_mix_backends   # one bench
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import paper_regression as paper
+from repro.core import schedules
 from repro.core.diffusion import DiffusionConfig, DiffusionEngine
 from repro.core.msd import theoretical_msd
 from repro.data.synthetic import make_block_sampler, make_regression_problem
@@ -197,8 +199,8 @@ def bench_topology_ablation():
 def bench_markov_participation():
     """Beyond-paper ablation: the paper assumes i.i.d. Bernoulli activation
     (eq. 18).  Real device availability is bursty.  We drive Algorithm 1
-    with a 2-state Markov availability chain (same stationary probability q,
-    varying correlation) and measure the steady-state MSD against the
+    with a schedules.MarkovAvailability process (same stationary probability
+    q, varying correlation) and measure the steady-state MSD against the
     i.i.d. Theorem 5 value.  Expectation: positive temporal correlation
     degrades MSD (longer outages => larger excursions) while leaving the
     limit point unchanged."""
@@ -213,29 +215,25 @@ def bench_markov_participation():
     qv = np.full(K, q)
     th = theoretical_msd(prob, A=topo.A, q=qv, mu=0.01, T=3)["msd"]
     w_o = jnp.asarray(prob.w_opt(qv))
-    eng = DiffusionEngine(cfg, data.loss_fn())
     sampler = make_block_sampler(data, T=3, batch=1)
     from repro.core.diffusion import network_msd
 
     for corr in (0.0, 0.5, 0.9):
-        # 2-state Markov chain with stationary prob q and autocorrelation
-        # `corr`: P(stay active) = q + corr*(1-q), P(stay inactive) = 1-q+corr*q
-        rng = np.random.default_rng(0)
-        state = (rng.random(K) < q).astype(np.float32)
+        process = schedules.MarkovAvailability(q, corr, num_agents=K)
+        eng = DiffusionEngine(cfg, data.loss_fn(), participation=process)
+        state = process.init_state(jax.random.PRNGKey(1))
+        params = jnp.zeros((K, 2))
+        # warm the jit cache (fresh engine per corr = fresh static-arg entry)
+        # outside the timed region; discard the outputs
+        eng.block_step_stateful(params, None, state, jax.random.PRNGKey(9),
+                                sampler(jax.random.PRNGKey(8)))
         t0 = time.time()
         msds = []
         key = jax.random.PRNGKey(0)
-        params = jnp.zeros((K, 2))
-        p_stay_a = q + corr * (1 - q)
-        p_stay_i = (1 - q) + corr * q
         for i in range(blocks):
-            key, kb = jax.random.split(key)
-            u = rng.random(K)
-            state = np.where(state > 0.5,
-                             (u < p_stay_a).astype(np.float32),
-                             (u >= p_stay_i).astype(np.float32))
-            params, _ = eng.block_step_with_mask(
-                params, None, jnp.asarray(state), sampler(kb))
+            key, kb, ks = jax.random.split(key, 3)
+            params, _, state, _ = eng.block_step_stateful(
+                params, None, state, ks, sampler(kb))
             if i >= blocks * 3 // 4:
                 msds.append(float(network_msd(params, w_o)))
         us = (time.time() - t0) / blocks * 1e6
@@ -326,13 +324,64 @@ def bench_transient_curve():
     _row("transient_curve", us, deriv)
 
 
+def bench_mix_backends():
+    """Mixer-backend head-to-head (EXPERIMENTS.md §Perf): the SAME block
+    step — transformer smoke model, T local updates, eq.-20 combination —
+    with only the combination backend swapped via core.mixing.make_mixer
+    (dense all-gather einsum vs sparse circulant permute vs fused Pallas
+    kernel).  Reports per-backend block-step wall-clock and the max
+    divergence from the dense baseline."""
+    from repro.configs import get_config
+    from repro.core.sharded import make_block_step
+    from repro.data.synthetic import lm_token_batch
+    from repro.models import transformer as tf
+
+    K, T, batch, seq = 4, 1, 2, 32
+    cfg = get_config("smollm_360m").smoke
+    dcfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=1e-2,
+                           topology="ring", participation=0.9)
+    topo = dcfg.make_topology()
+
+    def loss_fn(p, b, rng):
+        return tf.train_loss(p, cfg, b, remat=False)
+
+    params = jax.vmap(lambda k: tf.init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), K))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    data = lm_token_batch(jax.random.PRNGKey(1), (T, K, batch, seq),
+                          cfg.vocab_size)
+    key = jax.random.PRNGKey(2)
+    reps = 2 if FAST else 5
+
+    flat = {}
+    for name in ("dense", "sparse", "pallas"):
+        step = jax.jit(make_block_step(loss_fn, dcfg, mix=name,
+                                       topology=topo, tile_m=2048))
+        p, _, _ = step(params, None, key, data)     # compile + warm
+        jax.block_until_ready(p)
+        t0 = time.time()
+        for _ in range(reps):
+            p, _, _ = step(params, None, key, data)
+            jax.block_until_ready(p)
+        us = (time.time() - t0) / reps * 1e6
+        flat[name] = np.concatenate(
+            [np.asarray(l, np.float32).reshape(K, -1)
+             for l in jax.tree.leaves(p)], axis=1)
+        _row(f"mix_backend_{name}", us, f"K={K};params={n_params}")
+    err_s = float(np.abs(flat["sparse"] - flat["dense"]).max())
+    err_p = float(np.abs(flat["pallas"] - flat["dense"]).max())
+    _row("mix_backend_agree", 0.0,
+         f"sparse_maxerr={err_s:.2e};pallas_maxerr={err_p:.2e};"
+         f"ok={err_s < 1e-5 and err_p < 1e-5}")
+
+
 def bench_kernel_micro():
     """Kernel wall-time micro-benches (jnp streaming paths; CPU numbers are
     structural only — TPU perf comes from the roofline analysis)."""
     from repro.models.layers import flash_attention_jnp
     from repro.models.ssm import ssd_chunked
-    from repro.core.sharded import mix_dense, mix_sparse
-    from repro.core import make_topology, masked_combination
+    from repro.core import make_topology
+    from repro.core.mixing import make_mixer
 
     key = jax.random.PRNGKey(0)
     B, S, H, Kv, D = 1, 2048, 8, 2, 64
@@ -361,33 +410,52 @@ def bench_kernel_micro():
 
     K = 16
     topo = make_topology("ring", K)
-    A = jnp.asarray(topo.A, jnp.float32)
     W = {"w": jax.random.normal(key, (K, 1024, 512))}
     m = jnp.ones((K,))
-    for name, fn in (("dense", lambda: mix_dense(masked_combination(A, m), W)),
-                     ("sparse", lambda: mix_sparse(
-                         masked_combination(A, m), W,
-                         topo.neighbor_offsets_ring()))):
-        jf = jax.jit(fn)
-        jf()["w"].block_until_ready()
+    for name in ("dense", "sparse", "pallas"):
+        mixer = make_mixer(name, topo, tile_m=4096)
+        jf = jax.jit(lambda W_, m_, mx=mixer: mx(W_, m_))
+        jf(W, m)["w"].block_until_ready()
         t0 = time.time()
         for _ in range(10):
-            jf()["w"].block_until_ready()
+            jf(W, m)["w"].block_until_ready()
         _row(f"kernel_mix_{name}_8M", (time.time() - t0) / 10 * 1e6, f"K={K}")
 
 
-def main() -> None:
+ALL_BENCHES = (
+    bench_fig5_msd_vs_theory,
+    bench_fig6_participation,
+    bench_fig7_local_updates,
+    bench_drift_correction,
+    bench_fedavg_msd,
+    bench_topology_ablation,
+    bench_markov_participation,
+    bench_exact_diffusion,
+    bench_transient_curve,
+    bench_mix_backends,
+    bench_kernel_micro,
+)
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("benches", nargs="*",
+                    help="benchmark names to run (default: all); e.g. "
+                         "bench_mix_backends")
+    args = ap.parse_args(argv)
+    by_name = {f.__name__: f for f in ALL_BENCHES}
+    if args.benches:
+        unknown = [b for b in args.benches if b not in by_name]
+        if unknown:
+            raise SystemExit(f"unknown benches {unknown}; "
+                             f"available: {sorted(by_name)}")
+        selected = [by_name[b] for b in args.benches]
+    else:
+        selected = list(ALL_BENCHES)
     print("name,us_per_call,derived")
-    bench_fig5_msd_vs_theory()
-    bench_fig6_participation()
-    bench_fig7_local_updates()
-    bench_drift_correction()
-    bench_fedavg_msd()
-    bench_topology_ablation()
-    bench_markov_participation()
-    bench_exact_diffusion()
-    bench_transient_curve()
-    bench_kernel_micro()
+    for bench in selected:
+        bench()
 
 
 if __name__ == "__main__":

@@ -1,7 +1,15 @@
-"""Core — the paper's contribution: Algorithm 1 and its theory."""
+"""Core — the paper's contribution: Algorithm 1 and its theory.
+
+The execution stack is layered: one local-update scan + pluggable
+combination-step backends (:mod:`repro.core.mixing`) + pluggable
+agent-availability processes (:mod:`repro.core.schedules`), consumed by two
+engines (stacked :mod:`repro.core.diffusion`, mesh-sharded
+:mod:`repro.core.sharded`) with identical semantics.
+"""
 from repro.core.diffusion import (  # noqa: F401
     DiffusionConfig,
     DiffusionEngine,
+    local_update_scan,
     mix_stacked,
     network_msd,
 )
@@ -11,6 +19,20 @@ from repro.core.participation import (  # noqa: F401
     masked_combination,
     expected_combination,
     expected_A_M,
+)
+from repro.core.mixing import (  # noqa: F401
+    DenseMixer,
+    Mixer,
+    NullMixer,
+    PallasFusedMixer,
+    SparseCirculantMixer,
+    make_mixer,
+)
+from repro.core.schedules import (  # noqa: F401
+    CyclicGroups,
+    IIDBernoulli,
+    MarkovAvailability,
+    ParticipationProcess,
 )
 from repro.core.msd import QuadraticProblem, theoretical_msd  # noqa: F401
 from repro.core.sharded import make_block_step, mix_dense, mix_sparse  # noqa: F401

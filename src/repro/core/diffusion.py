@@ -4,15 +4,21 @@ participation (paper eq. 25) — stacked-agent execution engine.
 All K agents live on the leading axis of every parameter leaf.  One *block
 step* performs:
 
-  1. sample the activation mask (eq. 18) and realized step sizes
-     (eq. 18 / eq. 31 with drift correction),
-  2. ``T`` local stochastic-gradient updates via ``lax.scan`` (eq. 17 with
-     A_{iT+t} = I for t != T),
-  3. one combination step with the per-sample-path masked matrix (eq. 20).
+  1. sample the activation mask from the participation process (eq. 18 by
+     default) and realized step sizes (eq. 18 / eq. 31 with drift
+     correction),
+  2. ``T`` local stochastic-gradient updates via the shared
+     :func:`local_update_scan` (eq. 17 with A_{iT+t} = I for t != T),
+  3. one combination step through the engine's :class:`~repro.core.mixing`
+     backend (eq. 20).
 
-This engine is exact Algorithm 1 and is what the paper-reproduction
-benchmarks and theory-validation tests run.  The mesh-sharded engine with
-identical semantics lives in :mod:`repro.core.sharded`.
+Steps 1 and 3 are pluggable: the activation model is any
+:class:`repro.core.schedules.ParticipationProcess` and the combination step
+any :class:`repro.core.mixing.Mixer` (dense einsum, sparse circulant, or the
+fused Pallas kernel).  This engine is exact Algorithm 1 and is what the
+paper-reproduction benchmarks and theory-validation tests run.  The
+mesh-sharded engine with identical semantics lives in
+:mod:`repro.core.sharded`; both consume the same scan/mixer/process layers.
 """
 from __future__ import annotations
 
@@ -24,13 +30,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mixing
 from repro.core import participation as part
+from repro.core import schedules
 from repro.core import topology as topo_lib
+from repro.core.mixing import mix_dense as mix_stacked  # noqa: F401 (compat)
 
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jax.Array]   # (agent_params, agent_batch) -> scalar
 
-__all__ = ["DiffusionConfig", "DiffusionEngine", "mix_stacked"]
+__all__ = ["DiffusionConfig", "DiffusionEngine", "local_update_scan",
+           "mix_stacked", "network_msd"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +54,7 @@ class DiffusionConfig:
     topology_kwargs: tuple = ()          # extra kwargs as sorted (k, v) pairs
     participation: Any = 1.0             # scalar or length-K sequence of q_k
     drift_correction: bool = False       # eq. (31): mu/q_k for active agents
+    mix: str = "dense"                   # dense|sparse|pallas|auto|none
 
     def q_vector(self) -> np.ndarray:
         q = np.asarray(self.participation, dtype=np.float64)
@@ -67,16 +78,60 @@ def _bshape(v: jax.Array, leaf: jax.Array) -> jax.Array:
     return v.reshape((v.shape[0],) + (1,) * (leaf.ndim - 1))
 
 
-def mix_stacked(A_eff: jax.Array, params: PyTree) -> PyTree:
-    """Combination step  w_k <- sum_l a_lk psi_l  over stacked agents.
+def local_update_scan(grad_fn, params: PyTree, opt_state: PyTree,
+                      mus: jax.Array, block_batch: PyTree, *,
+                      local_steps: int, grad_transform=None,
+                      loss_key: jax.Array | None = None,
+                      num_agents: int | None = None):
+    """The T local stochastic-gradient updates of Algorithm 1 (eq. 17).
 
-    In stacked form with leaves (K, ...), this is ``w' = A_eff^T w``.
+    The single scan body shared by BOTH execution engines (stacked and
+    mesh-sharded) — any change to the local-update semantics lands here once.
+
+    Args:
+      grad_fn: vmapped per-agent gradient.  Two calling conventions:
+        ``grad_fn(params, batch_t)`` when ``loss_key`` is None, or
+        ``grad_fn(params, batch_t, rngs)`` with per-agent rng keys folded
+        from ``loss_key`` at each local step (stochastic losses: dropout,
+        remat policies, ...).
+      params / opt_state: stacked (K, ...) pytrees.
+      mus: (K,) realized per-agent step sizes (already activation-masked).
+      block_batch: pytree with leaves (T, K, ...).
+      local_steps: T.
+      grad_transform: optional ``(grads, state, params) -> (updates, state)``.
+      loss_key: enables the 3-arg grad_fn convention.
+      num_agents: K, required when ``loss_key`` is given.
+    Returns:
+      (params, opt_state) after T updates.
     """
-    def mix_leaf(p: jax.Array) -> jax.Array:
-        flat = p.reshape(p.shape[0], -1)
-        mixed = jnp.einsum("lk,lm->km", A_eff.astype(flat.dtype), flat)
-        return mixed.reshape(p.shape)
-    return jax.tree.map(mix_leaf, params)
+    def local_step(carry, xs):
+        p, s = carry
+        if loss_key is None:
+            batch_t = xs
+            grads = grad_fn(p, batch_t)
+        else:
+            batch_t, t = xs
+            rngs = jax.random.split(jax.random.fold_in(loss_key, t),
+                                    num_agents)
+            grads = grad_fn(p, batch_t, rngs)
+        if grad_transform is not None:
+            updates, s = grad_transform(grads, s, p)
+        else:
+            updates = grads
+        p = jax.tree.map(
+            lambda w, g: w - _bshape(mus, w).astype(w.dtype) * g.astype(w.dtype),
+            p, updates)
+        return (p, s), None
+
+    if loss_key is None:
+        xs = block_batch
+    else:
+        if num_agents is None:
+            raise ValueError("loss_key requires num_agents")
+        xs = (block_batch, jnp.arange(local_steps))
+    (params, opt_state), _ = jax.lax.scan(
+        local_step, (params, opt_state), xs, length=local_steps)
+    return params, opt_state
 
 
 class DiffusionEngine:
@@ -91,23 +146,45 @@ class DiffusionEngine:
         *before* the step-size mask (e.g. momentum).  Signature
         ``(grads, opt_state, params) -> (updates, opt_state)``; default
         identity (plain SGD, as in the paper).
+      mixer: combination-step backend — a mixing.Mixer instance or a name
+        for :func:`repro.core.mixing.make_mixer`; defaults to ``config.mix``
+        ("dense": exact paper baseline).
+      participation: activation model — a schedules.ParticipationProcess;
+        defaults to the paper's i.i.d. Bernoulli with the config's q vector.
+        Stateful processes require :meth:`block_step_stateful` (``run``
+        threads the state automatically).
     """
 
     def __init__(self, config: DiffusionConfig, loss_fn: LossFn,
-                 grad_transform=None):
+                 grad_transform=None, *, mixer=None, participation=None):
         self.config = config
         self.loss_fn = loss_fn
         self.grad_transform = grad_transform
         self.topology = config.make_topology()
-        self._A = jnp.asarray(self.topology.A, dtype=jnp.float32)
-        self._q = jnp.asarray(config.q_vector(), dtype=jnp.float32)
+        self.process, q = schedules.resolve(config, participation)
+        self._q = jnp.asarray(q, dtype=jnp.float32)
+        self.mixer = mixing.make_mixer(
+            mixer if mixer is not None else config.mix, self.topology,
+            num_agents=config.num_agents)
         self._grad_fn = jax.vmap(jax.grad(loss_fn))
+
+    # -- shared block body (local updates + combination) --------------------
+    def _apply_block(self, params: PyTree, opt_state: PyTree,
+                     active: jax.Array, block_batch: PyTree):
+        cfg = self.config
+        mus = part.step_size_matrix(cfg.step_size, active, self._q,
+                                    cfg.drift_correction)       # (K,)
+        params, opt_state = local_update_scan(
+            self._grad_fn, params, opt_state, mus, block_batch,
+            local_steps=cfg.local_steps, grad_transform=self.grad_transform)
+        params = self.mixer(params, active)                     # eq. (20)
+        return params, opt_state
 
     # -- single block iteration (jit-compatible) ---------------------------
     @partial(jax.jit, static_argnums=0)
     def block_step(self, params: PyTree, opt_state: PyTree, key: jax.Array,
                    block_batch: PyTree):
-        """One block iteration of Algorithm 1.
+        """One block iteration of Algorithm 1 (stateless participation).
 
         Args:
           params: pytree with leaves (K, ...).
@@ -118,60 +195,31 @@ class DiffusionEngine:
         Returns:
           (params, opt_state, active_mask)
         """
-        cfg = self.config
+        if self.process.stateful:
+            raise ValueError(
+                f"{type(self.process).__name__} carries state; use "
+                "block_step_stateful (or run(), which threads it for you)")
         key_act, _ = jax.random.split(key)
-        active = part.sample_active(key_act, self._q)           # eq. (18)
-        mus = part.step_size_matrix(cfg.step_size, active, self._q,
-                                    cfg.drift_correction)       # (K,)
-
-        def local_step(carry, batch_t):
-            p, s = carry
-            grads = self._grad_fn(p, batch_t)
-            if self.grad_transform is not None:
-                updates, s = self.grad_transform(grads, s, p)
-            else:
-                updates = grads
-            p = jax.tree.map(lambda w, g: w - _bshape(mus, w) * g.astype(w.dtype),
-                             p, updates)
-            return (p, s), None
-
-        (params, opt_state), _ = jax.lax.scan(
-            local_step, (params, opt_state), block_batch, length=cfg.local_steps)
-
-        A_eff = part.masked_combination(self._A, active)        # eq. (20)
-        params = mix_stacked(A_eff, params)                     # combine
+        active, _ = self.process.sample((), key_act)            # eq. (18)
+        params, opt_state = self._apply_block(params, opt_state, active,
+                                              block_batch)
         return params, opt_state, active
 
-    # -- externally-driven activation (ablations: correlated participation) --
     @partial(jax.jit, static_argnums=0)
-    def block_step_with_mask(self, params: PyTree, opt_state: PyTree,
-                             active: jax.Array, block_batch: PyTree):
-        """Like block_step but with a caller-supplied activation mask (K,).
+    def block_step_stateful(self, params: PyTree, opt_state: PyTree,
+                            part_state: PyTree, key: jax.Array,
+                            block_batch: PyTree):
+        """Block iteration threading the participation-process state.
 
-        Used by ablations that replace the paper's i.i.d. Bernoulli model
-        with correlated (e.g. Markov) availability processes.
+        Works for every process; for stateless ones it is bit-identical to
+        :meth:`block_step` given the same key.  Returns
+        ``(params, opt_state, part_state, active)``.
         """
-        cfg = self.config
-        mus = part.step_size_matrix(cfg.step_size, active, self._q,
-                                    cfg.drift_correction)
-
-        def local_step(carry, batch_t):
-            p, s = carry
-            grads = self._grad_fn(p, batch_t)
-            if self.grad_transform is not None:
-                updates, s = self.grad_transform(grads, s, p)
-            else:
-                updates = grads
-            p = jax.tree.map(lambda w, g: w - _bshape(mus, w) * g.astype(w.dtype),
-                             p, updates)
-            return (p, s), None
-
-        (params, opt_state), _ = jax.lax.scan(
-            local_step, (params, opt_state), block_batch,
-            length=cfg.local_steps)
-        A_eff = part.masked_combination(self._A, active)
-        params = mix_stacked(A_eff, params)
-        return params, opt_state
+        key_act, _ = jax.random.split(key)
+        active, part_state = self.process.sample(part_state, key_act)
+        params, opt_state = self._apply_block(params, opt_state, active,
+                                              block_batch)
+        return params, opt_state, part_state, active
 
     # -- convenience runner -------------------------------------------------
     def run(self, params: PyTree, sampler: Callable[[jax.Array], PyTree],
@@ -185,11 +233,13 @@ class DiffusionEngine:
         Returns (params, opt_state, msd_history list).
         """
         key = jax.random.PRNGKey(seed)
+        part_state = self.process.init_state(jax.random.fold_in(key, 0x5EED))
         history = []
         for _ in range(num_blocks):
             key, k_batch, k_step = jax.random.split(key, 3)
             batch = sampler(k_batch)
-            params, opt_state, _ = self.block_step(params, opt_state, k_step, batch)
+            params, opt_state, part_state, _ = self.block_step_stateful(
+                params, opt_state, part_state, k_step, batch)
             if w_star is not None:
                 history.append(float(network_msd(params, w_star)))
         return params, opt_state, history

@@ -1,0 +1,292 @@
+"""Pluggable mixing backends for the combination step (paper eq. 20).
+
+Every backend implements the same contract: given an agent-stacked parameter
+pytree with leaves ``(K, ...)`` and an activation mask ``(K,)``, apply the
+per-sample-path masked combination matrix
+
+    w_k  <-  sum_l  a_lk(mask)  psi_l .
+
+Backends differ only in *how* the contraction is executed:
+
+* :class:`DenseMixer` — einsum against the realized (K, K) matrix.  GSPMD
+  lowers this to an all-gather over the agent axis.  Paper-faithful baseline,
+  valid for any topology.
+* :class:`SparseCirculantMixer` — decompose the masked matrix into circulant
+  offsets and use ``jnp.roll`` along the agent axis (collective-permute under
+  GSPMD).  Communication drops from O(K |w|) to O(deg |w|) bytes.
+* :class:`PallasFusedMixer` — flatten the pytree to one padded (K, M) buffer
+  and run the fused Pallas kernel (:mod:`repro.kernels.diffusion_mix`) that
+  rebuilds the eq.-20 mask in VMEM and streams the parameters exactly once.
+  The flatten/unflatten layout is computed once per (treedef, shapes) and
+  cached across steps.
+* :class:`NullMixer` — identity (K = 1, or mixing disabled).
+
+Use :func:`make_mixer` to construct one; ``"auto"`` picks the Pallas kernel
+on TPU and the sparse path for bounded-degree topologies on other backends.
+Benchmarked head-to-head by ``benchmarks.run bench_mix_backends`` (see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import participation as part
+from repro.core import topology as topo_lib
+
+PyTree = Any
+
+__all__ = [
+    "Mixer",
+    "NullMixer",
+    "DenseMixer",
+    "SparseCirculantMixer",
+    "PallasFusedMixer",
+    "make_mixer",
+    "mix_dense",
+    "mix_sparse",
+]
+
+# sparse cost is one full-parameter roll+multiply PER DISTINCT CIRCULANT
+# OFFSET (not per neighbor): beyond this many offsets the decomposition moves
+# as many bytes as the dense all-gather, so "auto" falls back to dense
+_AUTO_SPARSE_MAX_OFFSETS = 8
+
+
+# ---------------------------------------------------------------------------
+# functional primitives (shared by the Mixer classes and legacy call sites)
+# ---------------------------------------------------------------------------
+
+def mix_dense(A_eff: jax.Array, params: PyTree) -> PyTree:
+    """Combination step  w_k <- sum_l a_lk psi_l  over stacked agents.
+
+    In stacked form with leaves (K, ...), this is ``w' = A_eff^T w``.
+    """
+    def mix_leaf(p: jax.Array) -> jax.Array:
+        flat = p.reshape(p.shape[0], -1)
+        mixed = jnp.einsum("lk,lm->km", A_eff.astype(flat.dtype), flat)
+        return mixed.reshape(p.shape)
+    return jax.tree.map(mix_leaf, params)
+
+
+def mix_sparse(A_eff: jax.Array, params: PyTree,
+               offsets: Sequence[int]) -> PyTree:
+    """Circulant-offset mixing: w'_k = sum_o c_o[k] * w_{(k+o) mod K}.
+
+    Valid whenever every nonzero off-diagonal of the base topology lies on a
+    circulant offset in ``offsets`` (ring, ring-with-hops; grids flattened
+    row-major with offsets {±1, ±cols}).  Entries of A_eff that fall outside
+    the true neighborhood are zero, so wrap-around reads are annihilated.
+
+    ``jnp.roll`` along the (sharded) agent axis lowers to collective-permute
+    under GSPMD, replacing the dense path's all-gather.
+    """
+    K = A_eff.shape[0]
+    idx = jnp.arange(K)
+    # c_o[k] = A_eff[(k + o) % K, k]
+    coeffs = {o: A_eff[(idx + o) % K, idx] for o in (0, *offsets)}
+
+    def mix_leaf(p: jax.Array) -> jax.Array:
+        out = coeffs[0].reshape((K,) + (1,) * (p.ndim - 1)).astype(p.dtype) * p
+        for o in offsets:
+            c = coeffs[o].reshape((K,) + (1,) * (p.ndim - 1)).astype(p.dtype)
+            out = out + c * jnp.roll(p, shift=-o, axis=0)
+        return out
+
+    return jax.tree.map(mix_leaf, params)
+
+
+# ---------------------------------------------------------------------------
+# Mixer interface
+# ---------------------------------------------------------------------------
+
+class Mixer:
+    """Combination-step backend: ``mixer(params, active) -> params``.
+
+    ``params`` has leaves (K, ...); ``active`` is the (K,) activation mask in
+    {0, 1}.  Implementations must be jit-compatible (mask as data) and
+    semantically equal to
+    ``mix_dense(masked_combination(A, active), params)``.
+    """
+
+    name = "base"
+
+    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}()"
+
+
+class NullMixer(Mixer):
+    """Identity combination step (K = 1 or mixing disabled)."""
+
+    name = "none"
+
+    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+        return params
+
+
+class DenseMixer(Mixer):
+    """Dense einsum against the realized (K, K) matrix (baseline)."""
+
+    name = "dense"
+
+    def __init__(self, A):
+        self.A = jnp.asarray(A, jnp.float32)
+
+    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+        A_eff = part.masked_combination(self.A, active)
+        return mix_dense(A_eff, params)
+
+
+class SparseCirculantMixer(Mixer):
+    """Circulant roll/collective-permute path for bounded-degree topologies."""
+
+    name = "sparse"
+
+    def __init__(self, A, offsets: Sequence[int]):
+        self.A = jnp.asarray(A, jnp.float32)
+        self.offsets = tuple(int(o) for o in offsets)
+
+    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+        A_eff = part.masked_combination(self.A, active)
+        return mix_sparse(A_eff, params, self.offsets)
+
+
+class _Layout(NamedTuple):
+    """Cached flatten/unflatten spec for one (treedef, shapes) combination."""
+
+    sizes: tuple[int, ...]   # per-leaf inner size (leaf.size // K)
+    M: int                   # total inner size
+    M_padded: int            # M rounded up so tile_m divides it
+    tile_m: int              # effective tile (<= requested, lane-aligned)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+class PallasFusedMixer(Mixer):
+    """Fused mask+mix Pallas kernel over the flattened parameter pytree.
+
+    The agent-stacked pytree is flattened to one (K, M) float32 buffer padded
+    to a tile multiple; the kernel rebuilds the eq.-20 masked matrix in VMEM
+    per tile and streams the buffer exactly once.  The layout (leaf sizes,
+    padding, effective tile) is computed on first use per pytree structure
+    and cached, so repeated block steps pay zero layout overhead.
+
+    ``interpret=None`` resolves per call: native on TPU, interpret elsewhere.
+    """
+
+    name = "pallas"
+
+    def __init__(self, A, *, tile_m: int = 512, interpret: bool | None = None):
+        self.A = jnp.asarray(A, jnp.float32)
+        if tile_m % 128:
+            raise ValueError(f"tile_m={tile_m} must be a multiple of 128")
+        self.tile_m = int(tile_m)
+        self.interpret = interpret
+        self._layouts: dict = {}
+
+    def _layout(self, leaves, treedef) -> _Layout:
+        key = (treedef, tuple(l.shape for l in leaves),
+               tuple(str(l.dtype) for l in leaves))
+        lay = self._layouts.get(key)
+        if lay is None:
+            K = leaves[0].shape[0]
+            sizes = tuple(int(np.prod(l.shape[1:], dtype=np.int64))
+                          for l in leaves)
+            M = int(sum(sizes))
+            tile = min(self.tile_m, _round_up(max(M, 1), 128))
+            lay = _Layout(sizes=sizes, M=M,
+                          M_padded=_round_up(max(M, 1), tile), tile_m=tile)
+            self._layouts[key] = lay
+        return lay
+
+    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+        from repro.kernels.diffusion_mix import diffusion_mix
+
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        K = leaves[0].shape[0]
+        lay = self._layout(leaves, treedef)
+        flat = jnp.concatenate(
+            [l.reshape(K, -1).astype(jnp.float32) for l in leaves], axis=1)
+        if lay.M_padded != lay.M:
+            flat = jnp.pad(flat, ((0, 0), (0, lay.M_padded - lay.M)))
+        interpret = (jax.default_backend() != "tpu"
+                     if self.interpret is None else self.interpret)
+        mixed = diffusion_mix(self.A, active, flat, tile_m=lay.tile_m,
+                              interpret=interpret)
+        outs, off = [], 0
+        for leaf, n in zip(leaves, lay.sizes):
+            outs.append(mixed[:, off:off + n].reshape(leaf.shape)
+                        .astype(leaf.dtype))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+def _resolve_auto(topology: topo_lib.Topology | None,
+                  offsets: Sequence[int] | None):
+    """Pick a backend name; returns (name, offsets) so the sparse branch is
+    built with exactly the offsets the decision was based on."""
+    if jax.default_backend() == "tpu":
+        return "pallas", offsets
+    if topology is not None and topology.max_degree < topology.num_agents - 1:
+        # irregular graphs (e.g. Erdős–Rényi) can have low degree but many
+        # distinct offsets, making sparse slower than dense — count offsets
+        offsets = topology.neighbor_offsets_ring()
+    if offsets and 0 < len(offsets) <= _AUTO_SPARSE_MAX_OFFSETS:
+        return "sparse", offsets
+    return "dense", offsets
+
+
+def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
+               *, A=None, offsets: Sequence[int] | None = None,
+               num_agents: int | None = None, tile_m: int = 512,
+               interpret: bool | None = None) -> Mixer:
+    """Build a mixing backend.
+
+    Args:
+      name: "dense" | "sparse" | "pallas" | "auto" | "none", or an existing
+        :class:`Mixer` (returned unchanged).
+      topology: source of the base matrix A and of the circulant offsets for
+        the sparse path; optional if ``A`` (and, for sparse, ``offsets``) are
+        given directly.
+      A: (K, K) base combination matrix override.
+      offsets: circulant offsets override for the sparse path.
+      num_agents: disables mixing when 1 (returns :class:`NullMixer`).
+      tile_m / interpret: Pallas kernel knobs (see :class:`PallasFusedMixer`).
+    """
+    if isinstance(name, Mixer):
+        return name
+    if A is None and topology is not None:
+        A = topology.A
+    if num_agents is None and A is not None:
+        num_agents = int(np.asarray(A).shape[0])
+    if name == "none" or (num_agents is not None and num_agents <= 1):
+        return NullMixer()
+    if A is None:
+        raise ValueError("make_mixer needs a topology or an explicit A")
+    if name == "auto":
+        name, offsets = _resolve_auto(topology, offsets)
+    if name == "dense":
+        return DenseMixer(A)
+    if name == "sparse":
+        if offsets is None:
+            if topology is None:
+                raise ValueError("sparse mixer needs circulant offsets "
+                                 "(pass offsets= or a topology)")
+            offsets = topology.neighbor_offsets_ring()
+        return SparseCirculantMixer(A, offsets)
+    if name == "pallas":
+        return PallasFusedMixer(A, tile_m=tile_m, interpret=interpret)
+    raise ValueError(f"unknown mixer {name!r} "
+                     "(expected dense|sparse|pallas|auto|none)")

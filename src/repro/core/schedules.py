@@ -1,0 +1,197 @@
+"""Agent-availability processes (participation models) for Algorithm 1.
+
+The paper analyzes i.i.d. Bernoulli activation (eq. 18).  Real device
+availability is bursty and correlated, so the engines accept any
+:class:`ParticipationProcess` — the activation mask becomes data flowing
+through one compiled program, exactly like the Bernoulli case.
+
+Processes are *state machines* with a jit-compatible interface:
+
+  state  = process.init_state(key)              # pytree of arrays (or ())
+  active, state = process.sample(state, key)    # (K,) float32 mask in {0,1}
+
+``process.q_vector()`` returns the stationary per-agent activation
+probabilities; the engines use it for the eq.-31 drift correction and the
+theory module uses it for the Lemma-1 closed forms, which remain *exact* for
+the i.i.d. case (:class:`IIDBernoulli` is the paper's model, unchanged).
+
+Correlated availability follows the asynchronous-diffusion line of Rizk,
+Yuan & Sayed (arXiv:2402.05529): :class:`MarkovAvailability` is the
+two-state-per-agent chain used by the Markov ablation benchmark, and
+:class:`CyclicGroups` is deterministic round-robin participation
+(cyclic client sampling in the FL literature).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import participation as part
+
+PyTree = Any
+
+__all__ = [
+    "ParticipationProcess",
+    "IIDBernoulli",
+    "MarkovAvailability",
+    "CyclicGroups",
+    "from_config",
+]
+
+
+def _as_q(q, num_agents: int | None) -> np.ndarray:
+    q = np.asarray(q, dtype=np.float64)
+    if q.ndim == 0:
+        if num_agents is None:
+            raise ValueError("scalar q needs num_agents")
+        q = np.full((num_agents,), float(q))
+    if num_agents is not None and q.shape != (num_agents,):
+        raise ValueError(f"q shape {q.shape} != ({num_agents},)")
+    if ((q < 0) | (q > 1)).any():
+        raise ValueError("activation probabilities must lie in [0, 1]")
+    return q
+
+
+class ParticipationProcess:
+    """Availability model driving the activation mask of Algorithm 1.
+
+    ``stateful`` processes (Markov, cyclic) must have their state threaded
+    through block steps (``block_step_stateful`` / the stateful signature of
+    ``make_block_step``); stateless ones (i.i.d. Bernoulli) also work with
+    the classic key-only block step.
+    """
+
+    stateful: bool = False
+
+    @property
+    def num_agents(self) -> int:
+        return int(self.q_vector().shape[0])
+
+    def q_vector(self) -> np.ndarray:
+        """Stationary activation probabilities (K,) — Lemma-1 inputs."""
+        raise NotImplementedError
+
+    def init_state(self, key: jax.Array) -> PyTree:
+        """Initial process state (drawn from the stationary law)."""
+        return ()
+
+    def sample(self, state: PyTree, key: jax.Array):
+        """Advance one block: returns ((K,) float32 mask, new state)."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}(K={self.num_agents})"
+
+
+class IIDBernoulli(ParticipationProcess):
+    """The paper's activation model (eq. 18): active_k ~ Bernoulli(q_k) i.i.d.
+
+    Stateless; the Lemma-1 closed forms (participation.expected_*) are exact.
+    """
+
+    stateful = False
+
+    def __init__(self, q, num_agents: int | None = None):
+        self._q = _as_q(q, num_agents)
+        self._qj = jnp.asarray(self._q, jnp.float32)
+
+    def q_vector(self) -> np.ndarray:
+        return self._q
+
+    def sample(self, state: PyTree, key: jax.Array):
+        return part.sample_active(key, self._qj), state
+
+
+class MarkovAvailability(ParticipationProcess):
+    """Two-state Markov chain per agent with stationary probability q_k.
+
+    Transition kernel (autocorrelation ``corr`` in [0, 1)):
+
+      P(active  -> active)   = q + corr (1 - q)
+      P(inactive -> inactive) = (1 - q) + corr q
+
+    ``corr = 0`` reduces to :class:`IIDBernoulli`; larger ``corr`` means
+    burstier availability (longer outages) at the *same* long-run activation
+    frequency q, which is exactly the knob the Markov ablation sweeps.
+    """
+
+    stateful = True
+
+    def __init__(self, q, corr: float, num_agents: int | None = None):
+        if not 0.0 <= corr < 1.0:
+            raise ValueError(f"corr={corr} must lie in [0, 1)")
+        self._q = _as_q(q, num_agents)
+        self.corr = float(corr)
+        self._qj = jnp.asarray(self._q, jnp.float32)
+        q32 = self._qj
+        self._p_stay_active = q32 + self.corr * (1.0 - q32)
+        self._p_stay_inactive = (1.0 - q32) + self.corr * q32
+
+    def q_vector(self) -> np.ndarray:
+        return self._q
+
+    def init_state(self, key: jax.Array) -> jax.Array:
+        return part.sample_active(key, self._qj)   # stationary draw
+
+    def sample(self, state: jax.Array, key: jax.Array):
+        u = jax.random.uniform(key, self._qj.shape)
+        # both branches activate on a low-u region so that corr = 0 (where
+        # both thresholds equal q) is *exactly* state-independent
+        active = jnp.where(state > 0.5,
+                           (u < self._p_stay_active).astype(jnp.float32),
+                           (u < 1.0 - self._p_stay_inactive).astype(jnp.float32))
+        return active, active
+
+
+class CyclicGroups(ParticipationProcess):
+    """Deterministic round-robin availability: agent k sits in group
+    ``k % num_groups`` and the groups take turns, one group per block.
+
+    Every agent is active exactly once per ``num_groups`` blocks, so the
+    long-run activation frequency is ``1 / num_groups`` for every agent.
+    """
+
+    stateful = True
+
+    def __init__(self, num_agents: int, num_groups: int):
+        if not 1 <= num_groups <= num_agents:
+            raise ValueError(f"num_groups={num_groups} must lie in "
+                             f"[1, {num_agents}]")
+        self._K = int(num_agents)
+        self.num_groups = int(num_groups)
+        self._group = jnp.arange(self._K, dtype=jnp.int32) % self.num_groups
+
+    def q_vector(self) -> np.ndarray:
+        return np.full((self._K,), 1.0 / self.num_groups)
+
+    def init_state(self, key: jax.Array) -> jax.Array:
+        return jnp.zeros((), jnp.int32)
+
+    def sample(self, state: jax.Array, key: jax.Array):
+        g = jnp.mod(state, self.num_groups).astype(jnp.int32)
+        active = (self._group == g).astype(jnp.float32)
+        return active, state + 1
+
+
+def from_config(config) -> IIDBernoulli:
+    """Default process for a :class:`repro.core.diffusion.DiffusionConfig`:
+    the paper's i.i.d. Bernoulli model with the config's q vector."""
+    return IIDBernoulli(config.q_vector())
+
+
+def resolve(config, participation: ParticipationProcess | None):
+    """Shared engine-construction helper: default + validate a process
+    against a config.  Returns ``(process, q)`` with q the stationary
+    (K,) float64 vector.  Both engines go through this, so participation
+    invariants live in exactly one place."""
+    process = participation if participation is not None else from_config(config)
+    q = process.q_vector()
+    if q.shape != (config.num_agents,):
+        raise ValueError(f"participation process is over {q.shape[0]} "
+                         f"agents, config has {config.num_agents}")
+    if config.drift_correction and (q <= 0).any():
+        raise ValueError("drift correction requires q_k > 0")
+    return process, q

@@ -5,18 +5,18 @@ sharded over one mesh axis (``data`` for small/mid models, ``pod`` for models
 whose K copies only fit one-per-pod).  Within an agent the remaining mesh
 axes provide FSDP/TP sharding of the inner dims (see repro/sharding/rules).
 
-Two mixing paths for the combination step  w_k <- sum_l a_lk psi_l :
+The block step is assembled from the same three layers as the stacked
+engine (:mod:`repro.core.diffusion`):
 
-* ``dense``  — einsum against the realized (K, K) matrix.  GSPMD lowers this
-  to an all-gather of the full parameter set over the agent axis.  This is
-  the paper-faithful baseline: simple, works for any topology.
-* ``sparse`` — for bounded-degree topologies (ring/grid), decompose the
-  masked matrix into circulant offsets and use ``jnp.roll`` along the agent
-  axis, which GSPMD lowers to collective-permute.  Communication drops from
-  O(K * |w|) gathered bytes to O(deg * |w|) permuted bytes.  This is the
-  beyond-paper optimization measured in EXPERIMENTS.md §Perf.
+* local updates — the shared :func:`repro.core.diffusion.local_update_scan`,
+* combination step — a pluggable :class:`repro.core.mixing.Mixer` backend
+  ("dense" einsum / "sparse" circulant collective-permute / "pallas" fused
+  kernel; see EXPERIMENTS.md §Perf for the head-to-head),
+* activation model — a :class:`repro.core.schedules.ParticipationProcess`
+  (i.i.d. Bernoulli by default; Markov / cyclic availability plug in the
+  same way).
 
-Both paths are *data-oblivious*: the Bernoulli mask enters as arrays, so one
+All paths are *data-oblivious*: the activation mask enters as arrays, so one
 compiled program serves every activation pattern.
 """
 from __future__ import annotations
@@ -26,44 +26,15 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import mixing
 from repro.core import participation as part
-from repro.core.diffusion import DiffusionConfig, mix_stacked
+from repro.core import schedules
+from repro.core.diffusion import DiffusionConfig, local_update_scan
+from repro.core.mixing import mix_dense, mix_sparse  # noqa: F401 (compat)
 
 PyTree = Any
 
 __all__ = ["mix_dense", "mix_sparse", "make_block_step", "BlockState"]
-
-
-def mix_dense(A_eff: jax.Array, params: PyTree) -> PyTree:
-    """Dense mixing (baseline): identical math to the stacked engine."""
-    return mix_stacked(A_eff, params)
-
-
-def mix_sparse(A_eff: jax.Array, params: PyTree,
-               offsets: Sequence[int]) -> PyTree:
-    """Circulant-offset mixing: w'_k = sum_o c_o[k] * w_{(k+o) mod K}.
-
-    Valid whenever every nonzero off-diagonal of the base topology lies on a
-    circulant offset in ``offsets`` (ring, ring-with-hops; grids flattened
-    row-major with offsets {±1, ±cols}).  Entries of A_eff that fall outside
-    the true neighborhood are zero, so wrap-around reads are annihilated.
-
-    ``jnp.roll`` along the (sharded) agent axis lowers to collective-permute
-    under GSPMD, replacing the dense path's all-gather.
-    """
-    K = A_eff.shape[0]
-    idx = jnp.arange(K)
-    # c_o[k] = A_eff[(k + o) % K, k]
-    coeffs = {o: A_eff[(idx + o) % K, idx] for o in (0, *offsets)}
-
-    def mix_leaf(p: jax.Array) -> jax.Array:
-        out = coeffs[0].reshape((K,) + (1,) * (p.ndim - 1)).astype(p.dtype) * p
-        for o in offsets:
-            c = coeffs[o].reshape((K,) + (1,) * (p.ndim - 1)).astype(p.dtype)
-            out = out + c * jnp.roll(p, shift=-o, axis=0)
-        return out
-
-    return jax.tree.map(mix_leaf, params)
 
 
 class BlockState(dict):
@@ -73,12 +44,16 @@ class BlockState(dict):
 def make_block_step(
     loss_fn: Callable[[PyTree, Any, jax.Array], jax.Array],
     config: DiffusionConfig,
-    A: jax.Array,
+    A: jax.Array | None = None,
     *,
-    mix: str = "dense",
+    mix: str | mixing.Mixer | None = None,
     offsets: Sequence[int] = (),
     grad_transform=None,
     param_dtype=jnp.float32,
+    topology=None,
+    participation: schedules.ParticipationProcess | None = None,
+    tile_m: int = 512,
+    interpret: bool | None = None,
 ) -> Callable:
     """Build the pure block-step function for jit/pjit.
 
@@ -87,56 +62,65 @@ def make_block_step(
         a single agent's loss (vmapped over the agent axis internally).
       config: Algorithm 1 hyper-parameters; ``config.num_agents`` must equal
         the leading dim of every param leaf.
-      A: (K, K) base combination matrix (device array).
-      mix: "dense" | "sparse" | "none" (K = 1 degenerate case).
-      offsets: circulant offsets for the sparse path.
+      A: (K, K) base combination matrix (device array); optional when
+        ``topology`` is given or ``mix`` is already a Mixer.
+      mix: mixer backend name ("dense" | "sparse" | "pallas" | "auto" |
+        "none") or a prebuilt :class:`repro.core.mixing.Mixer`; defaults to
+        ``config.mix`` (so variants factories built with ``mix=...`` work
+        without repeating the choice here).
+      offsets: circulant offsets for the sparse path (derived from
+        ``topology`` when omitted).
       grad_transform: optional ``(grads, state, params) -> (updates, state)``
         applied per-agent before the step-size mask.
+      topology: the :class:`repro.core.topology.Topology` behind A; enables
+        the "auto"/"sparse" backends without passing offsets explicitly.
+      participation: activation model; defaults to the paper's i.i.d.
+        Bernoulli with the config's q vector.
+      tile_m / interpret: Pallas mixer knobs.
 
     Returns:
-      ``block_step(params, opt_state, key, block_batch) ->
-        (params, opt_state, active)``
-      where param leaves are (K, ...) and block-batch leaves (T, K, ...).
+      For stateless participation (the default):
+        ``block_step(params, opt_state, key, block_batch) ->
+          (params, opt_state, active)``.
+      For stateful processes (Markov, cyclic), the step additionally threads
+        the process state:
+        ``block_step(params, opt_state, part_state, key, block_batch) ->
+          (params, opt_state, part_state, active)``.
+      Param leaves are (K, ...) and block-batch leaves (T, K, ...).
     """
-    q = jnp.asarray(config.q_vector(), dtype=jnp.float32)
     K = config.num_agents
+    process, q_np = schedules.resolve(config, participation)
+    q = jnp.asarray(q_np, dtype=jnp.float32)
+    mixer = mixing.make_mixer(mix if mix is not None else config.mix,
+                              topology, A=A,
+                              offsets=tuple(offsets) or None,
+                              num_agents=K, tile_m=tile_m,
+                              interpret=interpret)
     grad_fn = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0, 0))
 
-    def block_step(params, opt_state, key, block_batch):
-        key_act, key_loss = jax.random.split(key)
-        active = part.sample_active(key_act, q)
+    def apply_block(params, opt_state, active, key_loss, block_batch):
         mus = part.step_size_matrix(config.step_size, active, q,
                                     config.drift_correction)
+        params, opt_state = local_update_scan(
+            grad_fn, params, opt_state, mus, block_batch,
+            local_steps=config.local_steps, grad_transform=grad_transform,
+            loss_key=key_loss, num_agents=K)
+        params = mixer(params, active)
+        return params, opt_state
 
-        def local_step(carry, xs):
-            p, s = carry
-            batch_t, t = xs
-            rngs = jax.random.fold_in(key_loss, t)
-            rngs = jax.random.split(rngs, K)
-            grads = grad_fn(p, batch_t, rngs)
-            if grad_transform is not None:
-                updates, s = grad_transform(grads, s, p)
-            else:
-                updates = grads
-            p = jax.tree.map(
-                lambda w, g: (w - mus.reshape((K,) + (1,) * (w.ndim - 1))
-                              .astype(w.dtype) * g.astype(w.dtype)),
-                p, updates)
-            return (p, s), None
-
-        ts = jnp.arange(config.local_steps)
-        (params, opt_state), _ = jax.lax.scan(
-            local_step, (params, opt_state), (block_batch, ts),
-            length=config.local_steps)
-
-        if mix != "none" and K > 1:
-            A_eff = part.masked_combination(A.astype(jnp.float32), active)
-            if mix == "dense":
-                params = mix_dense(A_eff, params)
-            elif mix == "sparse":
-                params = mix_sparse(A_eff, params, offsets)
-            else:
-                raise ValueError(f"unknown mix path {mix!r}")
-        return params, opt_state, active
+    if process.stateful:
+        def block_step(params, opt_state, part_state, key, block_batch):
+            key_act, key_loss = jax.random.split(key)
+            active, part_state = process.sample(part_state, key_act)
+            params, opt_state = apply_block(params, opt_state, active,
+                                            key_loss, block_batch)
+            return params, opt_state, part_state, active
+    else:
+        def block_step(params, opt_state, key, block_batch):
+            key_act, key_loss = jax.random.split(key)
+            active, _ = process.sample((), key_act)
+            params, opt_state = apply_block(params, opt_state, active,
+                                            key_loss, block_batch)
+            return params, opt_state, active
 
     return block_step

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import schedules
 from repro.core.diffusion import DiffusionConfig
 
 __all__ = [
@@ -16,17 +17,20 @@ __all__ = [
     "vanilla_diffusion",
     "asynchronous_diffusion",
     "decentralized_fedavg",
+    "cyclic_fedavg",
+    "markov_asynchronous_diffusion",
 ]
 
 
-def fedavg_full(K: int, T: int, mu: float) -> DiffusionConfig:
+def fedavg_full(K: int, T: int, mu: float, *, mix: str = "dense") -> DiffusionConfig:
     """FedAvg with full participation (paper eq. 39-40):
     q_k = 1, A_{iT} = (1/K) 11^T."""
     return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology="fedavg", participation=1.0)
+                           topology="fedavg", participation=1.0, mix=mix)
 
 
-def fedavg_partial_uniform(K: int, T: int, mu: float, q: float) -> DiffusionConfig:
+def fedavg_partial_uniform(K: int, T: int, mu: float, q: float,
+                           *, mix: str = "dense") -> DiffusionConfig:
     """FedAvg with partial participation (paper eq. 42-43).
 
     The paper's eq. (41) uses weights 1/S over the realized active set S_i.
@@ -39,27 +43,71 @@ def fedavg_partial_uniform(K: int, T: int, mu: float, q: float) -> DiffusionConf
     provided by tests via explicit masks.)
     """
     return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology="fedavg", participation=q)
+                           topology="fedavg", participation=q, mix=mix)
 
 
-def vanilla_diffusion(K: int, mu: float, topology: str = "ring") -> DiffusionConfig:
+def vanilla_diffusion(K: int, mu: float, topology: str = "ring",
+                      *, mix: str = "dense") -> DiffusionConfig:
     """Standard diffusion (paper eq. 44-45): q_k = 1, T = 1."""
     return DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
-                           topology=topology, participation=1.0)
+                           topology=topology, participation=1.0, mix=mix)
 
 
-def asynchronous_diffusion(K: int, mu: float, q, topology: str = "ring") -> DiffusionConfig:
+def asynchronous_diffusion(K: int, mu: float, q, topology: str = "ring",
+                           *, mix: str = "dense") -> DiffusionConfig:
     """Asynchronous diffusion (paper eq. 46-47): T = 1, Bernoulli q_k."""
     part = tuple(np.asarray(q, dtype=float).reshape(-1)) if np.ndim(q) else float(q)
     return DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
-                           topology=topology, participation=part)
+                           topology=topology, participation=part, mix=mix)
 
 
 def decentralized_fedavg(K: int, T: int, mu: float,
-                         topology: str = "ring") -> DiffusionConfig:
+                         topology: str = "ring",
+                         *, mix: str = "dense") -> DiffusionConfig:
     """Decentralized FedAvg (paper eq. 48-49): q_k = 1, local updates, A."""
     return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology=topology, participation=1.0)
+                           topology=topology, participation=1.0, mix=mix)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper participation models (schedules.ParticipationProcess plug-ins)
+# ---------------------------------------------------------------------------
+
+def cyclic_fedavg(K: int, T: int, mu: float, num_groups: int,
+                  *, mix: str = "dense"):
+    """FedAvg with *cyclic client sampling*: the K clients are split into
+    ``num_groups`` round-robin groups and exactly one group participates per
+    block (deterministic, as in cyclic/incremental client-selection FL).
+
+    Returns ``(config, process)``; pass the process to the engine
+    (``DiffusionEngine(cfg, loss, participation=process)`` or
+    ``make_block_step(..., participation=process)``).  The stationary
+    activation frequency is 1/num_groups per agent, which the config's
+    ``participation`` mirrors so the Lemma-1 surrogates stay meaningful.
+    """
+    process = schedules.CyclicGroups(K, num_groups)
+    cfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                          topology="fedavg",
+                          participation=1.0 / num_groups, mix=mix)
+    return cfg, process
+
+
+def markov_asynchronous_diffusion(K: int, mu: float, q, corr: float,
+                                  topology: str = "ring",
+                                  *, mix: str = "dense"):
+    """Asynchronous diffusion under *bursty* availability: a two-state
+    Markov chain per agent with stationary activation probability q and
+    autocorrelation ``corr`` (the Rizk–Yuan–Sayed correlated-availability
+    regime, arXiv:2402.05529).  ``corr = 0`` recovers
+    :func:`asynchronous_diffusion` in distribution.
+
+    Returns ``(config, process)``.
+    """
+    process = schedules.MarkovAvailability(q, corr, num_agents=K)
+    part = tuple(np.asarray(q, dtype=float).reshape(-1)) if np.ndim(q) else float(q)
+    cfg = DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
+                          topology=topology, participation=part, mix=mix)
+    return cfg, process
 
 
 # ---------------------------------------------------------------------------

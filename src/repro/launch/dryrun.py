@@ -135,9 +135,8 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
     if K > 1:
         topo = topo_cfg.make_topology()
         A = jnp.asarray(topo.A, jnp.float32)
-        offsets = topo.neighbor_offsets_ring()
     else:
-        A, offsets = jnp.eye(1), ()
+        topo, A = None, jnp.eye(1)
     mix = mix_override or (pc.mix_path if K > 1 else "none")
 
     def loss_fn(agent_params, agent_batch, rng):
@@ -145,7 +144,7 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                              remat=pc.remat)
 
     block_step = make_block_step(loss_fn, topo_cfg, A, mix=mix,
-                                 offsets=offsets)
+                                 topology=topo)
 
     # shardings
     inner = sh.param_pspecs(tf.param_specs(cfg), mesh, fsdp=pc.fsdp, tp=tp)
@@ -350,6 +349,8 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # newer jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_stats(hlo)
     if save_hlo:
@@ -386,7 +387,8 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--mix", default=None, choices=[None, "dense", "sparse"])
+    ap.add_argument("--mix", default=None,
+                    choices=[None, "dense", "sparse", "pallas", "auto"])
     ap.add_argument("--no-tp", action="store_true",
                     help="replicate params over the model axis (pure DP)")
     ap.add_argument("--all", action="store_true")

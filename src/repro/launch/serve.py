@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --batch 4 --prompt-len 64 --decode 32
+
+Serving a diffusion-trained model: pass ``--checkpoint ckpt.npz --agents K``
+to load the agent-stacked parameters written by ``repro.launch.train`` and
+extract the consensus model (the network average, i.e. one application of
+the FedAvg matrix) through the selected combination backend
+(``--mix dense|pallas|auto`` — the same Mixer layer the trainer uses).
 """
 from __future__ import annotations
 
@@ -11,8 +17,37 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import load_checkpoint
 from repro.configs import get_config
+from repro.core import make_mixer, make_topology
 from repro.models import transformer as tf
+
+
+def consensus_from_stacked(stacked, K: int, mix: str = "dense"):
+    """Collapse (K, ...)-stacked agent params to the consensus (average)
+    model via the mixing layer: one all-active FedAvg combination step makes
+    every agent hold the exact network mean; take agent 0."""
+    topo = make_topology("fedavg", K)
+    mixer = make_mixer(mix, topo, num_agents=K)
+    mixed = mixer(stacked, jnp.ones((K,), jnp.float32))
+    return jax.tree.map(lambda x: x[0], mixed)
+
+
+def load_params(args, cfg, key):
+    params = tf.init_params(key, cfg)
+    if not args.checkpoint:
+        return params
+    if args.agents > 1:
+        like = jax.tree.map(
+            lambda x: jnp.zeros((args.agents,) + x.shape, x.dtype), params)
+        stacked, meta = load_checkpoint(args.checkpoint, like)
+        print(f"loaded stacked checkpoint (K={args.agents}, "
+              f"step={meta.get('step')}); extracting consensus via "
+              f"--mix {args.mix}")
+        return consensus_from_stacked(stacked, args.agents, args.mix)
+    params, meta = load_checkpoint(args.checkpoint, params)
+    print(f"loaded checkpoint (step={meta.get('step')})")
+    return params
 
 
 def main():
@@ -25,13 +60,20 @@ def main():
     ap.add_argument("--decode", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None,
+                    help="npz checkpoint (plain or agent-stacked)")
+    ap.add_argument("--agents", type=int, default=1,
+                    help="agent count of a stacked checkpoint (1 = plain)")
+    ap.add_argument("--mix", default="dense",
+                    choices=["dense", "pallas", "auto"],
+                    help="combination backend for consensus extraction")
     args = ap.parse_args()
 
     bundle = get_config(args.arch)
     cfg = bundle.smoke if args.smoke else bundle.model
     key = jax.random.PRNGKey(args.seed)
     kp, kt, key = jax.random.split(key, 3)
-    params = tf.init_params(kp, cfg)
+    params = load_params(args, cfg, kp)
 
     shape = (args.batch, args.prompt_len)
     if cfg.num_codebooks:

@@ -6,6 +6,10 @@ same code path with the production mesh.  Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
       --agents 4 --local-steps 2 --blocks 20 --batch 2 --seq 64
+
+The combination-step backend is selectable (``--mix dense|sparse|pallas|auto``
+— "pallas" runs the fused mask+mix kernel; see EXPERIMENTS.md §Perf), as is
+the agent-availability model (``--participation-process iid|markov|cyclic``).
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import schedules
 from repro.core.diffusion import DiffusionConfig
 from repro.core.sharded import make_block_step
 from repro.data.synthetic import lm_token_batch
@@ -25,17 +30,31 @@ from repro.optim import adam, momentum, sgd
 from repro.checkpoint import save_checkpoint
 
 
+def make_process(kind: str, q: float, agents: int, *, markov_corr: float = 0.5,
+                 num_groups: int = 2) -> schedules.ParticipationProcess:
+    """Availability model factory shared by the launch drivers."""
+    if kind == "iid":
+        return schedules.IIDBernoulli(q, num_agents=agents)
+    if kind == "markov":
+        return schedules.MarkovAvailability(q, markov_corr, num_agents=agents)
+    if kind == "cyclic":
+        return schedules.CyclicGroups(agents, num_groups)
+    raise ValueError(f"unknown participation process {kind!r}")
+
+
 def build(arch: str, smoke: bool, agents: int, local_steps: int,
           step_size: float, topology: str, participation: float,
-          optimizer: str, mix: str):
+          optimizer: str, mix: str, process_kind: str = "iid",
+          markov_corr: float = 0.5, num_groups: int = 2):
     bundle = get_config(arch)
     cfg = bundle.smoke if smoke else bundle.model
     dcfg = DiffusionConfig(num_agents=agents, local_steps=local_steps,
                            step_size=step_size, topology=topology,
-                           participation=participation)
+                           participation=participation, mix=mix)
     topo = dcfg.make_topology() if agents > 1 else None
     A = jnp.asarray(topo.A, jnp.float32) if topo else jnp.eye(1)
-    offsets = topo.neighbor_offsets_ring() if topo else ()
+    process = make_process(process_kind, participation, agents,
+                           markov_corr=markov_corr, num_groups=num_groups)
     opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[optimizer]()
 
     def loss_fn(p, b, rng):
@@ -43,8 +62,9 @@ def build(arch: str, smoke: bool, agents: int, local_steps: int,
 
     block_step = make_block_step(loss_fn, dcfg, A,
                                  mix=mix if agents > 1 else "none",
-                                 offsets=offsets, grad_transform=opt.update)
-    return cfg, dcfg, block_step, opt
+                                 topology=topo, grad_transform=opt.update,
+                                 participation=process)
+    return cfg, dcfg, block_step, opt, process
 
 
 def main():
@@ -60,17 +80,29 @@ def main():
     ap.add_argument("--step-size", type=float, default=0.5)
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--participation", type=float, default=0.9)
+    ap.add_argument("--participation-process", default="iid",
+                    choices=["iid", "markov", "cyclic"],
+                    help="agent-availability model (core/schedules.py)")
+    ap.add_argument("--markov-corr", type=float, default=0.5,
+                    help="availability autocorrelation for --participation-"
+                         "process markov")
+    ap.add_argument("--num-groups", type=int, default=2,
+                    help="round-robin groups for --participation-process "
+                         "cyclic")
     ap.add_argument("--optimizer", default="adam",
                     choices=["sgd", "momentum", "adam"])
-    ap.add_argument("--mix", default="dense", choices=["dense", "sparse"])
+    ap.add_argument("--mix", default="dense",
+                    choices=["dense", "sparse", "pallas", "auto"],
+                    help="combination-step backend (core/mixing.py)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
 
-    cfg, dcfg, block_step, opt = build(
+    cfg, dcfg, block_step, opt, process = build(
         args.arch, args.smoke, args.agents, args.local_steps, args.step_size,
-        args.topology, args.participation, args.optimizer, args.mix)
+        args.topology, args.participation, args.optimizer, args.mix,
+        args.participation_process, args.markov_corr, args.num_groups)
 
     key = jax.random.PRNGKey(args.seed)
     K, T = args.agents, args.local_steps
@@ -78,6 +110,7 @@ def main():
     params = jax.vmap(lambda k: tf.init_params(k, cfg))(jax.random.split(kp, K))
     # state leaves mirror the stacked (K, ...) layout; step counter is shared
     opt_state = opt.init(params) if args.optimizer != "sgd" else None
+    part_state = process.init_state(jax.random.fold_in(key, 0x5EED))
 
     jit_step = jax.jit(block_step)
 
@@ -98,7 +131,11 @@ def main():
     for i in range(args.blocks):
         key, kb, ks = jax.random.split(key, 3)
         batch = sample_block(kb)
-        params, opt_state, active = jit_step(params, opt_state, ks, batch)
+        if process.stateful:
+            params, opt_state, part_state, active = jit_step(
+                params, opt_state, part_state, ks, batch)
+        else:
+            params, opt_state, active = jit_step(params, opt_state, ks, batch)
         if i % args.log_every == 0:
             losses = eval_loss(params, jax.tree.map(lambda x: x[0], batch))
             print(f"block {i:4d}  active={int(active.sum())}/{K}  "

@@ -45,6 +45,15 @@ def _maybe(mesh: Mesh, axis, dim: int):
     return axis if dim % _axsize(mesh, axis) == 0 else None
 
 
+def _axis_entry(axes):
+    """Canonical PartitionSpec entry for a list of mesh axes: None when
+    empty, the bare axis name for one, a tuple only for a true composite."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
 def _leaf_rule(path: str, shape: tuple[int, ...], mesh: Mesh,
                fsdp_axis, tp_enabled: bool = True) -> P:
     """Inner (agent-free) spec for a parameter leaf."""
@@ -134,7 +143,9 @@ def batch_pspec(mesh: Mesh, *, agent_axis: str | None, ndim: int,
     while batch is not None and data_axes and \
             batch % int(np.prod([mesh.shape[a] for a in data_axes])):
         data_axes.pop()
-    b_axis = tuple(data_axes) if data_axes else None
+    # single axis must be the bare name, not a 1-tuple — NamedSharding treats
+    # them the same but spec-equality consumers (and tests) do not
+    b_axis = _axis_entry(data_axes)
     entries = ([None] if leading_T else []) + [agent_axis, b_axis]
     entries += [None] * (ndim - len(entries))
     return P(*entries)
@@ -146,7 +157,7 @@ def serve_batch_pspec(mesh: Mesh, batch: int, ndim: int) -> P:
     n = 1
     for a in data_axes:
         n *= mesh.shape[a]
-    b_axis = data_axes if (data_axes and batch % n == 0) else None
+    b_axis = _axis_entry(data_axes) if (data_axes and batch % n == 0) else None
     return P(b_axis, *([None] * (ndim - 1)))
 
 

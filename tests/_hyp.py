@@ -1,0 +1,42 @@
+"""Import-or-stub shim for ``hypothesis``.
+
+Property-based tests use hypothesis when it is installed; without it the
+suite must still *collect* and the non-property tests must still run
+(satisfying the tier-1 gate on minimal containers).  Importing from this
+module instead of ``hypothesis`` directly gives exactly that: when the real
+package is missing, ``@given(...)`` turns the test into a skip and ``st.*``
+becomes inert.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategies:
+        """Stands in for ``hypothesis.strategies``: every attribute is a
+        callable returning None, so decoration-time strategy construction
+        (``st.integers(0, 10)``) is harmless."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _InertStrategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg replacement: the original signature's strategy params
+            # must not be mistaken for pytest fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import make_topology, masked_combination
 from repro.core.diffusion import (DiffusionConfig, DiffusionEngine,
@@ -38,35 +38,59 @@ def test_converges_to_neighborhood(data):
     assert np.mean(hist[-100:]) < 0.02  # O(mu) neighborhood
 
 
-def test_drift_without_correction(data):
+def _drift_data():
+    # strong heterogeneity so the drifted optimum is well-separated from the
+    # original one (same setting as bench_drift_correction): a single noisy
+    # endpoint cannot distinguish optima closer than the O(sqrt(mu)) iterate
+    # fluctuation, so the weakly-drifted module fixture is not usable here
+    return make_regression_problem(K=8, N=100, M=2, rho=0.1, seed=0,
+                                   mean_scale=1.5, noise_low=0.01,
+                                   noise_high=0.05, w_star_spread=0.5)
+
+
+def _tail_mean(eng, sampler, blocks=700):
+    """Time-averaged network mean over the second half of the run."""
+    params = jnp.zeros((8, 2))
+    key = jax.random.PRNGKey(1)
+    acc, n = np.zeros(2), 0
+    for i in range(blocks):
+        key, kb, ks = jax.random.split(key, 3)
+        params, _, _ = eng.block_step(params, None, ks, sampler(kb))
+        if i >= blocks // 2:
+            acc += np.asarray(params).mean(0)
+            n += 1
+    return acc / n
+
+
+@pytest.mark.slow
+def test_drift_without_correction():
     """With heterogeneous q, the mean limit is w^o of the DRIFTED problem."""
-    q = (0.9, 0.2, 0.9, 0.2, 0.9, 0.2, 0.9, 0.2)
-    cfg, eng = _engine(data, participation=q, step_size=0.01, local_steps=2)
+    data = _drift_data()
+    q = (0.9, 0.3, 0.9, 0.3, 0.9, 0.3, 0.9, 0.3)
+    cfg, eng = _engine(data, participation=q, step_size=0.01, local_steps=1)
     prob = data.problem()
     w_drift = prob.w_opt(np.asarray(q))
     w_orig = prob.w_opt(None)
-    assert np.linalg.norm(w_drift - w_orig) > 1e-3  # drift is non-trivial
-    params = jnp.zeros((8, 2))
-    sampler = make_block_sampler(data, T=2, batch=4)
-    params, _, _ = eng.run(params, sampler, 2500, seed=1)
-    w_bar = np.asarray(params).mean(axis=0)
+    assert np.linalg.norm(w_drift - w_orig) > 0.05  # drift is non-trivial
+    sampler = make_block_sampler(data, T=1, batch=8)
+    w_bar = _tail_mean(eng, sampler)
     # closer to the drifted optimum than to the original one
     assert (np.linalg.norm(w_bar - w_drift)
             < np.linalg.norm(w_bar - w_orig))
 
 
-def test_drift_correction_restores_original(data):
+@pytest.mark.slow
+def test_drift_correction_restores_original():
     """Eq. (31): mu/q_k step sizes restore the ORIGINAL optimum (eq. 38)."""
+    data = _drift_data()
     q = (0.9, 0.3, 0.9, 0.3, 0.9, 0.3, 0.9, 0.3)
     cfg, eng = _engine(data, participation=q, drift_correction=True,
-                       step_size=0.01, local_steps=2)
+                       step_size=0.01, local_steps=1)
     prob = data.problem()
     w_orig = prob.w_opt(None)
     w_drift = prob.w_opt(np.asarray(q))
-    params = jnp.zeros((8, 2))
-    sampler = make_block_sampler(data, T=2, batch=4)
-    params, _, _ = eng.run(params, sampler, 2500, seed=2)
-    w_bar = np.asarray(params).mean(axis=0)
+    sampler = make_block_sampler(data, T=1, batch=8)
+    w_bar = _tail_mean(eng, sampler)
     assert (np.linalg.norm(w_bar - w_orig)
             < np.linalg.norm(w_bar - w_drift))
 
@@ -132,6 +156,7 @@ def test_block_step_builder_matches_engine(data):
                                atol=1e-6)
 
 
+@pytest.mark.slow
 def test_higher_participation_better_msd(data):
     """Paper Fig. 6: higher q => lower steady-state MSD."""
     prob = data.problem()
@@ -151,6 +176,7 @@ def test_higher_participation_better_msd(data):
     assert results[0.9] < results[0.2]
 
 
+@pytest.mark.slow
 def test_more_local_steps_worse_msd(data):
     """Paper Fig. 7: larger T converges to a worse error."""
     prob = data.problem()

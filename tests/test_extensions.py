@@ -1,10 +1,11 @@
-"""Beyond-paper extension machinery: exact diffusion, external activation
-masks (Markov ablation), pure-DP sharding mode."""
+"""Beyond-paper extension machinery: exact diffusion, stateful availability
+processes (Markov ablation), pure-DP sharding mode."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import schedules
 from repro.core.diffusion import DiffusionConfig, DiffusionEngine
 from repro.core.variants import ExactDiffusionEngine, vanilla_diffusion
 from repro.data.synthetic import make_block_sampler, make_regression_problem
@@ -63,9 +64,9 @@ def test_exact_diffusion_rejects_local_steps():
         ExactDiffusionEngine(cfg, data.loss_fn())
 
 
-def test_block_step_with_mask_matches_internal_sampling():
-    """Driving the engine with the mask it would have sampled itself must
-    reproduce block_step exactly."""
+def test_stateful_step_matches_stateless_for_iid():
+    """For the paper's i.i.d. process the state-threading block step must
+    reproduce the classic key-only block step bit-for-bit."""
     K = 6
     data = make_regression_problem(K=K, N=40, seed=1)
     cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
@@ -77,21 +78,58 @@ def test_block_step_with_mask_matches_internal_sampling():
     key = jax.random.PRNGKey(42)
 
     p1, _, active = eng.block_step(params, None, key, batch)
-    p2, _ = eng.block_step_with_mask(params, None, active, batch)
+    p2, _, _, active2 = eng.block_step_stateful(params, None, (), key, batch)
+    np.testing.assert_array_equal(np.asarray(active), np.asarray(active2))
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6)
 
 
-def test_block_step_with_mask_all_inactive_is_noop():
+class _AllOff(schedules.ParticipationProcess):
+    """Degenerate availability process: nobody ever participates."""
+
+    stateful = True
+
+    def __init__(self, K):
+        self._K = K
+
+    def q_vector(self):
+        return np.zeros(self._K)
+
+    def init_state(self, key):
+        return jnp.zeros((), jnp.int32)
+
+    def sample(self, state, key):
+        return jnp.zeros((self._K,), jnp.float32), state + 1
+
+
+def test_external_process_all_inactive_is_noop():
+    """A custom ParticipationProcess that keeps every agent inactive must
+    freeze the network (eq. 20: inactive agents keep their iterate)."""
     K = 4
     data = make_regression_problem(K=K, N=40, seed=2)
     cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.05,
                           topology="ring", participation=0.5)
-    eng = DiffusionEngine(cfg, data.loss_fn())
+    eng = DiffusionEngine(cfg, data.loss_fn(), participation=_AllOff(K))
     sampler = make_block_sampler(data, T=2, batch=1)
     params = jnp.ones((K, 2)) * 2.0
-    out, _ = eng.block_step_with_mask(params, None, jnp.zeros((K,)),
-                                      sampler(jax.random.PRNGKey(0)))
+    out, _, state, active = eng.block_step_stateful(
+        params, None, jnp.zeros((), jnp.int32), jax.random.PRNGKey(7),
+        sampler(jax.random.PRNGKey(0)))
+    assert int(state) == 1 and float(active.sum()) == 0.0
     np.testing.assert_allclose(np.asarray(out), 2.0)
+
+
+def test_stateless_block_step_rejects_stateful_process():
+    K = 4
+    data = make_regression_problem(K=K, N=40, seed=2)
+    cfg = DiffusionConfig(num_agents=K, local_steps=1, step_size=0.05,
+                          topology="ring")
+    eng = DiffusionEngine(cfg, data.loss_fn(),
+                          participation=schedules.MarkovAvailability(
+                              0.5, 0.5, num_agents=K))
+    sampler = make_block_sampler(data, T=1, batch=1)
+    with pytest.raises(ValueError, match="stateful"):
+        eng.block_step(jnp.zeros((K, 2)), None, jax.random.PRNGKey(0),
+                       sampler(jax.random.PRNGKey(1)))
 
 
 def test_pure_dp_pspecs_replicate_params():

@@ -1,0 +1,283 @@
+"""Mixer backends (core/mixing.py) and participation processes
+(core/schedules.py): cross-backend parity under random activation masks,
+the Pallas fused path on a real model pytree, the "auto" policy, and the
+stationary behavior of the stateful availability processes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CyclicGroups, DenseMixer, DiffusionConfig,
+                        DiffusionEngine, IIDBernoulli, MarkovAvailability,
+                        NullMixer, PallasFusedMixer, SparseCirculantMixer,
+                        make_mixer, make_topology, masked_combination,
+                        mix_dense, sample_active)
+from repro.core import schedules
+from repro.data.synthetic import make_block_sampler, make_regression_problem
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_tree(key, K):
+    ks = jax.random.split(key, 3)
+    return {"w": jax.random.normal(ks[0], (K, 7, 3)),
+            "b": jax.random.normal(ks[1], (K, 5)),
+            "s": jax.random.normal(ks[2], (K, 2, 2, 2))}
+
+
+# ---------------------------------------------------------------------------
+# backend parity (dense == sparse == pallas for every mask)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,K", [("ring", 8), ("ring", 12), ("grid", 12)])
+def test_backend_parity_random_masks(kind, K):
+    topo = make_topology(kind, K)
+    mixers = {
+        "dense": make_mixer("dense", topo),
+        "sparse": make_mixer("sparse", topo),
+        "pallas": make_mixer("pallas", topo, tile_m=128, interpret=True),
+    }
+    for seed in range(6):
+        key = jax.random.fold_in(KEY, seed)
+        params = _rand_tree(key, K)
+        m = jax.random.bernoulli(key, 0.6, (K,)).astype(jnp.float32)
+        ref = mixers["dense"](params, m)
+        for name in ("sparse", "pallas"):
+            out = mixers[name](params, m)
+            for leaf_r, leaf_o in zip(jax.tree.leaves(ref),
+                                      jax.tree.leaves(out)):
+                np.testing.assert_allclose(
+                    np.asarray(leaf_o), np.asarray(leaf_r),
+                    atol=1e-5, rtol=1e-5, err_msg=f"{name} vs dense ({kind})")
+
+
+def test_pallas_mixer_on_transformer_pytree():
+    """Acceptance gate: the fused Pallas path matches the dense einsum
+    within 1e-5 on a REAL model pytree (transformer smoke config)."""
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+
+    K = 4
+    cfg = get_config("smollm_360m").smoke
+    params = jax.vmap(lambda k: tf.init_params(k, cfg))(
+        jax.random.split(KEY, K))
+    topo = make_topology("ring", K)
+    active = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    dense = make_mixer("dense", topo)(params, active)
+    pallas = make_mixer("pallas", topo, interpret=True)(params, active)
+    for d, p in zip(jax.tree.leaves(dense), jax.tree.leaves(pallas)):
+        np.testing.assert_allclose(np.asarray(p, np.float32),
+                                   np.asarray(d, np.float32), atol=1e-5)
+
+
+def test_pallas_layout_cache_reused():
+    topo = make_topology("ring", 4)
+    mixer = PallasFusedMixer(topo.A, tile_m=128, interpret=True)
+    params = _rand_tree(KEY, 4)
+    m = jnp.ones((4,))
+    mixer(params, m)
+    assert len(mixer._layouts) == 1
+    mixer(params, m)                      # same structure: cache hit
+    assert len(mixer._layouts) == 1
+    mixer({"w": params["w"]}, m)          # new structure: second entry
+    assert len(mixer._layouts) == 2
+
+
+def test_mixer_preserves_mean_and_inactive_agents():
+    """eq. 20 invariants hold through every backend: doubly-stochastic
+    mixing preserves the network mean, inactive agents keep their params."""
+    K = 8
+    topo = make_topology("ring", K)
+    params = _rand_tree(KEY, K)
+    m = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
+    for name in ("dense", "sparse", "pallas"):
+        out = make_mixer(name, topo, tile_m=128, interpret=True)(params, m)
+        for leaf_in, leaf_out in zip(jax.tree.leaves(params),
+                                     jax.tree.leaves(out)):
+            np.testing.assert_allclose(np.asarray(leaf_out.mean(0)),
+                                       np.asarray(leaf_in.mean(0)),
+                                       atol=1e-5, err_msg=name)
+            for k in (1, 4):   # inactive agents frozen
+                np.testing.assert_allclose(np.asarray(leaf_out[k]),
+                                           np.asarray(leaf_in[k]),
+                                           atol=1e-6, err_msg=name)
+
+
+def test_make_mixer_auto_policy_and_errors():
+    ring = make_topology("ring", 8)
+    fedavg = make_topology("fedavg", 8)
+    # low degree but many distinct circulant offsets: sparse would be slower
+    # than dense, auto must not pick it
+    erdos = make_topology("erdos", 24, p=0.1, seed=2)
+    auto_ring = make_mixer("auto", ring)
+    auto_fedavg = make_mixer("auto", fedavg)
+    auto_erdos = make_mixer("auto", erdos)
+    if jax.default_backend() == "tpu":
+        assert isinstance(auto_ring, PallasFusedMixer)
+    else:
+        assert isinstance(auto_ring, SparseCirculantMixer)
+        assert isinstance(auto_fedavg, DenseMixer)
+        if len(erdos.neighbor_offsets_ring()) > 8:
+            assert isinstance(auto_erdos, DenseMixer)
+    assert isinstance(make_mixer("none", ring), NullMixer)
+    assert isinstance(make_mixer("dense", None, A=ring.A), DenseMixer)
+    assert isinstance(make_mixer(auto_ring), type(auto_ring))  # passthrough
+    with pytest.raises(ValueError):
+        make_mixer("dense", None)
+    with pytest.raises(ValueError):
+        make_mixer("nope", ring)
+
+
+def test_engine_pallas_backend_matches_dense():
+    """DiffusionEngine with --mix pallas == the dense engine end-to-end."""
+    K = 8
+    data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=0)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.7)
+    sampler = make_block_sampler(data, T=2, batch=2)
+    batch = sampler(jax.random.PRNGKey(7))
+    params = jax.random.normal(jax.random.PRNGKey(0), (K, 2))
+    key = jax.random.PRNGKey(42)
+    outs = {}
+    for mix in ("dense", "pallas"):
+        eng = DiffusionEngine(cfg, data.loss_fn(),
+                              mixer=make_mixer(mix, cfg.make_topology(),
+                                               tile_m=128, interpret=True))
+        p, _, a = eng.block_step(params, None, key, batch)
+        outs[mix] = (np.asarray(p), np.asarray(a))
+    np.testing.assert_array_equal(outs["dense"][1], outs["pallas"][1])
+    np.testing.assert_allclose(outs["pallas"][0], outs["dense"][0], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# participation processes
+# ---------------------------------------------------------------------------
+
+def test_iid_process_matches_sample_active():
+    q = jnp.asarray([0.2, 0.8, 0.5, 1.0])
+    proc = IIDBernoulli(np.asarray(q))
+    key = jax.random.PRNGKey(3)
+    active, state = proc.sample(proc.init_state(key), key)
+    np.testing.assert_array_equal(np.asarray(active),
+                                  np.asarray(sample_active(key, q)))
+    assert state == ()
+    assert not proc.stateful
+
+
+def test_markov_empirical_frequency_matches_stationary_q():
+    """The Markov chain's long-run activation frequency must converge to
+    the stationary vector q regardless of the correlation."""
+    K, steps = 8, 6000
+    q = np.linspace(0.2, 0.9, K)
+    for corr in (0.0, 0.6):
+        proc = MarkovAvailability(q, corr, num_agents=K)
+        state0 = proc.init_state(jax.random.PRNGKey(0))
+
+        def walk(state, key):
+            active, state = proc.sample(state, key)
+            return state, active
+
+        _, masks = jax.lax.scan(walk, state0,
+                                jax.random.split(jax.random.PRNGKey(1), steps))
+        freq = np.asarray(masks).mean(axis=0)
+        # scan-of-bernoulli standard error ~ sqrt(q(1-q)/n_eff); correlated
+        # chains mix slower, hence the loose 0.05 band
+        np.testing.assert_allclose(freq, q, atol=0.05,
+                                   err_msg=f"corr={corr}")
+    np.testing.assert_allclose(proc.q_vector(), q)
+
+
+def test_markov_zero_corr_is_iid():
+    """corr = 0: next state is independent of the current one."""
+    proc = MarkovAvailability(0.7, 0.0, num_agents=4)
+    key = jax.random.PRNGKey(5)
+    from_active, _ = proc.sample(jnp.ones((4,)), key)
+    from_inactive, _ = proc.sample(jnp.zeros((4,)), key)
+    np.testing.assert_array_equal(np.asarray(from_active),
+                                  np.asarray(from_inactive))
+
+
+def test_cyclic_groups_round_robin():
+    K, G = 8, 4
+    proc = CyclicGroups(K, G)
+    state = proc.init_state(None)
+    seen = []
+    for _ in range(2 * G):
+        active, state = proc.sample(state, None)
+        active = np.asarray(active)
+        assert active.sum() == K // G          # exactly one group active
+        seen.append(active)
+    # every agent active exactly twice over two full cycles
+    np.testing.assert_array_equal(np.stack(seen).sum(0), np.full(K, 2.0))
+    np.testing.assert_allclose(proc.q_vector(), np.full(K, 1.0 / G))
+
+
+def test_engine_run_threads_markov_state():
+    """Engine-level: run() with a Markov process converges like the i.i.d.
+    engine does (same stationary q), exercising the state threading."""
+    K = 8
+    data = make_regression_problem(K=K, N=60, M=2, rho=0.1, seed=0)
+    proc = MarkovAvailability(0.8, 0.5, num_agents=K)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.8)
+    eng = DiffusionEngine(cfg, data.loss_fn(), participation=proc)
+    w_o = data.problem().w_opt(proc.q_vector())
+    params = jnp.full((K, 2), 3.0)
+    sampler = make_block_sampler(data, T=2, batch=1)
+    _, _, hist = eng.run(params, sampler, 400, seed=0,
+                         w_star=jnp.asarray(w_o))
+    assert np.mean(hist[-50:]) < 0.05 * hist[0]
+
+
+def test_sharded_step_with_cyclic_process():
+    """make_block_step with a stateful process threads (state, mask)."""
+    from repro.core.sharded import make_block_step
+    K = 6
+    data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=3)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.5)
+    topo = cfg.make_topology()
+    proc = CyclicGroups(K, 3)
+    loss3 = lambda p, b, rng: data.loss_fn()(p, b)
+    step = jax.jit(make_block_step(loss3, cfg, topology=topo, mix="sparse",
+                                   participation=proc))
+    sampler = make_block_sampler(data, T=2, batch=1)
+    params = jnp.zeros((K, 2))
+    state = proc.init_state(None)
+    masks = []
+    for i in range(3):
+        params, _, state, active = step(params, None, state,
+                                        jax.random.PRNGKey(i),
+                                        sampler(jax.random.PRNGKey(10 + i)))
+        masks.append(np.asarray(active))
+    assert int(state) == 3
+    np.testing.assert_array_equal(np.stack(masks).sum(0), np.ones(K))
+
+
+def test_process_validation():
+    with pytest.raises(ValueError):
+        MarkovAvailability(0.5, 1.0, num_agents=4)     # corr out of range
+    with pytest.raises(ValueError):
+        MarkovAvailability(1.5, 0.5, num_agents=4)     # q out of range
+    with pytest.raises(ValueError):
+        CyclicGroups(4, 5)                             # more groups than K
+    with pytest.raises(ValueError):
+        schedules.IIDBernoulli(0.5)                    # scalar q needs K
+    with pytest.raises(ValueError):
+        # engine rejects a process over the wrong number of agents
+        data = make_regression_problem(K=4, N=20)
+        DiffusionEngine(DiffusionConfig(num_agents=4), data.loss_fn(),
+                        participation=IIDBernoulli(0.5, num_agents=6))
+    from repro.core.sharded import make_block_step
+    loss3 = lambda p, b, rng: 0.0
+    with pytest.raises(ValueError):
+        # sharded builder applies the same agent-count validation
+        make_block_step(loss3, DiffusionConfig(num_agents=4),
+                        topology=make_topology("ring", 4),
+                        participation=IIDBernoulli(0.5, num_agents=6))
+    with pytest.raises(ValueError):
+        # ... and the drift-correction q_k > 0 guard
+        make_block_step(loss3,
+                        DiffusionConfig(num_agents=4, drift_correction=True),
+                        topology=make_topology("ring", 4),
+                        participation=IIDBernoulli((0.5, 0.0, 0.5, 0.5)))

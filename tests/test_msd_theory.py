@@ -69,6 +69,7 @@ def test_msd_scales_with_mu():
     assert 2.0 < ratio < 8.0  # ~linear in mu (4x expected)
 
 
+@pytest.mark.slow
 def test_transient_curve_tracks_simulation():
     """Beyond-paper: the Theorem-5 operators iterated from t=0 predict the
     full learning curve, not just the fixed point."""

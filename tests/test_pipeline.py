@@ -1,7 +1,7 @@
 """Data pipeline: partitioners + deterministic block iteration."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.pipeline import (BlockIterator, TokenDataset,
                                  contiguous_partition, dirichlet_partition)
