@@ -1,16 +1,26 @@
 """Benchmark harness — one function per paper figure/table.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived carries the
-figure-specific quantity: MSD values, theory/sim ratios, orderings).
+figure-specific quantity: MSD values, theory/sim ratios, orderings), and
+appends every run's rows to ``benchmarks/results/BENCH_<bench>.json`` — a
+machine-readable perf trajectory (git rev + timestamp per record) that CI
+and humans can diff across commits.
 
   PYTHONPATH=src python -m benchmarks.run            # full (paper-scale)
   REPRO_BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run   # CI-scale
   PYTHONPATH=src python -m benchmarks.run bench_mix_backends   # one bench
+
+Set ``REPRO_BENCH_OUT`` to redirect the JSON trajectory (default:
+``benchmarks/results/`` next to this file); ``REPRO_BENCH_OUT=""`` disables
+writing.
 """
 from __future__ import annotations
 
+import json
 import os
+import subprocess
 import time
+from datetime import datetime, timezone
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +34,60 @@ from repro.data.synthetic import make_block_sampler, make_regression_problem
 
 FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
 
+_ROWS: list[dict] = []   # collected per bench by main(), flushed to JSON
+
 
 def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — bench must run outside git too
+        return "unknown"
+
+
+def _bench_out_dir() -> str | None:
+    out = os.environ.get(
+        "REPRO_BENCH_OUT",
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "results"))
+    return out or None
+
+
+def _append_bench_json(bench_name: str, rows: list[dict],
+                       git_rev: str) -> None:
+    """Append one record to BENCH_<name>.json (a JSON array trajectory)."""
+    out_dir = _bench_out_dir()
+    if out_dir is None or not rows:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench_name}.json")
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = []
+        except (json.JSONDecodeError, OSError):
+            history = []   # corrupt history: restart the trajectory
+    history.append({
+        "git_rev": git_rev,
+        "timestamp": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "fast": FAST,
+        "backend": jax.default_backend(),
+        "rows": rows,
+    })
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+        f.write("\n")
 
 
 def _steady_msd(data, cfg, w_star, blocks, tail, reps=3):
@@ -375,6 +436,101 @@ def bench_mix_backends():
          f"ok={err_s < 1e-5 and err_p < 1e-5}")
 
 
+def bench_compression():
+    """Compressed-communication shoot-out (EXPERIMENTS.md §Compression).
+
+    Three measurements per scheme (dense f32 / int8 / top-k / rand-k):
+    (1) bytes-on-wire per combination step on the transformer smoke param
+    pytree (payload accounting, see core/compression.py) — int8 must be
+    >= 4x and top-k(0.1) >= 10x below dense; (2) block-step wall clock with
+    the compressor in the jitted step; (3) steady-state MSD on a 20-dim
+    regression problem (int8 runs direct mode with error feedback, the
+    sparsifiers the CHOCO-style diff mode), showing the accuracy cost of
+    each scheme at its bytes budget stays bounded."""
+    from repro.configs import get_config
+    from repro.core import compression as comp
+    from repro.core.sharded import make_block_step
+    from repro.data.synthetic import lm_token_batch
+    from repro.models import transformer as tf
+
+    K, T, batch, seq = 4, 1, 2, 32
+    cfg = get_config("smollm_360m").smoke
+    dcfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=1e-2,
+                           topology="ring", participation=0.9)
+    topo = dcfg.make_topology()
+
+    def loss_fn(p, b, rng):
+        return tf.train_loss(p, cfg, b, remat=False)
+
+    params = jax.vmap(lambda k: tf.init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), K))
+    data = lm_token_batch(jax.random.PRNGKey(1), (T, K, batch, seq),
+                          cfg.vocab_size)
+    key = jax.random.PRNGKey(2)
+    reps = 2 if FAST else 5
+
+    schemes = (
+        ("dense_f32", "none", 1.0, False),
+        ("int8", "int8", 1.0, True),
+        ("topk0.1", "topk", 0.1, False),
+        ("randk0.1", "randk", 0.1, False),
+    )
+    dense_bytes = comp.dense_wire_bytes(params)
+    ratios = {}
+    for label, name, ratio, ef in schemes:
+        step = make_block_step(loss_fn, dcfg, mix="dense", topology=topo,
+                               compress=name, compress_ratio=ratio,
+                               error_feedback=ef)
+        wire = step.pipeline.wire_bytes(params)
+        ratios[label] = dense_bytes / max(wire, 1)
+        jit_step = jax.jit(step)
+        state_args = ((step.pipeline.init_state(params),)
+                      if step.comm_stateful else ())
+        out = jit_step(params, None, *state_args, key, data)   # compile
+        jax.block_until_ready(out[0])
+        t0 = time.time()
+        for _ in range(reps):
+            out = jit_step(params, None, *state_args, key, data)
+            jax.block_until_ready(out[0])
+        us = (time.time() - t0) / reps * 1e6
+        _row(f"compress_{label}", us,
+             f"wire_bytes={wire};reduction={ratios[label]:.2f}x;"
+             f"mode={step.pipeline.mode}")
+    _row("compress_bytes_ok", 0.0,
+         f"int8={ratios['int8']:.2f}x;topk={ratios['topk0.1']:.2f}x;"
+         f"ok={ratios['int8'] >= 4.0 and ratios['topk0.1'] >= 10.0}")
+
+    # accuracy at the bytes budget: regression steady-state MSD (20 dims so
+    # ratio-0.1 sparsification is meaningful: 2 of 20 coords per exchange)
+    Kr, Mr = 8, 20
+    blocks = 600 if FAST else 2000
+    rdata = make_regression_problem(K=Kr, N=100, M=Mr, rho=0.1, seed=6)
+    prob = rdata.problem()
+    qv = np.full(Kr, 0.8)
+    w_o = prob.w_opt(qv)
+    sampler = make_block_sampler(rdata, T=2, batch=1)
+    msd_schemes = schemes[:3] + (("randk0.25", "randk", 0.25, False),)
+    msds = {}
+    for label, name, ratio, ef in msd_schemes:
+        rcfg = DiffusionConfig(num_agents=Kr, local_steps=2, step_size=0.01,
+                               topology="ring", participation=0.8,
+                               compress=name, compress_ratio=ratio,
+                               error_feedback=ef)
+        eng = DiffusionEngine(rcfg, rdata.loss_fn())
+        p0 = jnp.zeros((Kr, Mr))
+        t0 = time.time()
+        _, _, hist = eng.run(p0, sampler, blocks, seed=0,
+                             w_star=jnp.asarray(w_o))
+        us = (time.time() - t0) / blocks * 1e6
+        msds[label] = float(np.mean(hist[-blocks // 4:]))
+        _row(f"compress_msd_{label}", us,
+             f"msd={msds[label]:.4e};mode={eng.pipeline.mode};"
+             f"gamma={eng.pipeline.gamma}")
+    degr = max(msds[l] / msds["dense_f32"] for l in msds)
+    _row("compress_msd_bounded", 0.0,
+         f"max_degradation={degr:.2f}x;ok={degr < 10.0}")
+
+
 def bench_kernel_micro():
     """Kernel wall-time micro-benches (jnp streaming paths; CPU numbers are
     structural only — TPU perf comes from the roofline analysis)."""
@@ -433,6 +589,7 @@ ALL_BENCHES = (
     bench_exact_diffusion,
     bench_transient_curve,
     bench_mix_backends,
+    bench_compression,
     bench_kernel_micro,
 )
 
@@ -453,9 +610,13 @@ def main(argv=None) -> None:
         selected = [by_name[b] for b in args.benches]
     else:
         selected = list(ALL_BENCHES)
+    rev = _git_rev()
     print("name,us_per_call,derived")
     for bench in selected:
+        _ROWS.clear()
         bench()
+        _append_bench_json(bench.__name__, list(_ROWS), rev)
+    _ROWS.clear()
 
 
 if __name__ == "__main__":

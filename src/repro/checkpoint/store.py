@@ -33,7 +33,14 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0,
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {_path_str(p): np.asarray(v) for p, v in flat}
-    meta = {"step": step, "keys": sorted(arrays), **(metadata or {})}
+    # non-native dtypes (bfloat16, ...) survive np.savez only as raw void
+    # bytes — record them so load can reinterpret (see "dtypes" in load)
+    dtypes = {k: str(a.dtype) for k, a in arrays.items()
+              if a.dtype.kind not in "biufc"}
+    # reserved fields win over user metadata: load_checkpoint depends on
+    # "dtypes"/"keys" to reinterpret and validate the archive
+    meta = {**(metadata or {}), "step": step, "keys": sorted(arrays),
+            "dtypes": dtypes}
     np.savez(path, __meta__=json.dumps(meta), **arrays)
 
 
@@ -43,6 +50,7 @@ def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
         path = path + ".npz"
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z["__meta__"]))
+        dtypes = meta.get("dtypes", {})
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
         for p, v in flat:
@@ -50,6 +58,8 @@ def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
             if key not in z:
                 raise KeyError(f"checkpoint missing leaf {key!r}")
             arr = z[key]
+            if key in dtypes and str(arr.dtype) != dtypes[key]:
+                arr = arr.view(np.dtype(dtypes[key]))  # e.g. V2 -> bfloat16
             if hasattr(v, "shape") and tuple(arr.shape) != tuple(v.shape):
                 raise ValueError(f"{key}: shape {arr.shape} != {v.shape}")
             leaves.append(arr)

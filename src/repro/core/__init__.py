@@ -1,10 +1,11 @@
 """Core — the paper's contribution: Algorithm 1 and its theory.
 
-The execution stack is layered: one local-update scan + pluggable
-combination-step backends (:mod:`repro.core.mixing`) + pluggable
-agent-availability processes (:mod:`repro.core.schedules`), consumed by two
-engines (stacked :mod:`repro.core.diffusion`, mesh-sharded
-:mod:`repro.core.sharded`) with identical semantics.
+The execution stack is layered: one local-update scan + a staged
+combination pipeline (compressors :mod:`repro.core.compression` feeding
+mixing backends :mod:`repro.core.mixing`) + pluggable agent-availability
+processes (:mod:`repro.core.schedules`), consumed by two engines (stacked
+:mod:`repro.core.diffusion`, mesh-sharded :mod:`repro.core.sharded`) with
+identical semantics.
 """
 from repro.core.diffusion import (  # noqa: F401
     DiffusionConfig,
@@ -21,12 +22,26 @@ from repro.core.participation import (  # noqa: F401
     expected_A_M,
 )
 from repro.core.mixing import (  # noqa: F401
+    CommPipeline,
     DenseMixer,
     Mixer,
     NullMixer,
     PallasFusedMixer,
     SparseCirculantMixer,
     make_mixer,
+    make_pipeline,
+)
+from repro.core.compression import (  # noqa: F401
+    CompressedGradients,
+    Compressor,
+    ErrorFeedback,
+    GaussianMask,
+    Identity,
+    Int8Stochastic,
+    RandK,
+    TopK,
+    dense_wire_bytes,
+    make_compressor,
 )
 from repro.core.schedules import (  # noqa: F401
     CyclicGroups,

@@ -1,0 +1,444 @@
+"""Pluggable communication compressors for the combination step.
+
+The paper cuts communication *frequency* (local updates, partial
+participation); this module cuts communication *volume*.  A
+:class:`Compressor` maps the agent-stacked parameter pytree (leaves
+``(K, ...)``) to the messages that actually move on the wire during the
+combination step; :class:`repro.core.mixing.CommPipeline` exchanges and
+combines them through one of its modes (direct correction for
+quantization, CHOCO-style reference-difference for sparsification — see
+its docstring), all of which preserve the eq.-20 invariants: inactive
+agents keep their parameters exactly, and doubly-stochastic mixing
+preserves the network mean.  With the identity compressor the pipeline
+short-circuits to the plain mixer, bit-identical to the uncompressed
+backends.
+
+Compressors implemented (all jit-compatible; the mask/noise is data):
+
+* :class:`Identity` — dense float32 baseline (no compression).
+* :class:`TopK` — magnitude sparsification, keep the top ``ratio`` fraction
+  of coordinates per agent per leaf (deterministic, biased, contractive —
+  the pipeline's diff mode supplies the implicit error feedback).
+* :class:`RandK` — uniform random-subset sparsification; ``encode`` rescales
+  by ``n/k`` (unbiased — gradient compression), ``encode_contractive``
+  does not (diff-mode exchange).  The index set is derivable from a shared
+  PRNG seed, so only the kept values travel.
+* :class:`Int8Stochastic` — 8-bit stochastic quantization with per-agent
+  (per-leaf) scales (unbiased).  Combined with the Pallas mixer the engines
+  run the fused dequantize+mask+mix kernel
+  (:func:`repro.kernels.diffusion_mix.diffusion_mix_int8`) over the int8
+  ``(K, M)`` buffer with per-tile scales.
+* :class:`GaussianMask` — sparse differential Gaussian masking (Zhang,
+  Fang, Liu & Zhu, arXiv:2001.03836): rand-k sparsification plus zero-mean
+  Gaussian noise on the transmitted coordinates (``sigma`` is the privacy
+  knob; ``sigma = 0`` reduces to :class:`RandK`).
+* :class:`ErrorFeedback` — wraps any stateless compressor with the residual
+  memory  e' = (psi + e) - C(psi + e); used by the pipeline's *direct* mode
+  (int8) and by gradient compression, where it restores convergence for
+  biased compressors.
+
+Wire accounting (:meth:`Compressor.wire_bytes`) counts the *value payload*
+(``bits/8`` bytes per transmitted coordinate), the convention of the
+compression literature: rand-k/Gaussian index sets are derivable from a
+shared seed, top-k index streams and per-leaf scales are O(K · L) metadata
+that entropy-codes to a vanishing fraction of the payload.  The accounting
+feeds ``benchmarks.run bench_compression`` and the launch drivers' startup
+banner.
+
+Robust-aggregation hooks (trimmed-mean / median à la SLSGD,
+arXiv:1903.06996) plug into the same pipeline seam as alternative Mixer
+backends — see ROADMAP.md open items.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = [
+    "Compressor",
+    "Identity",
+    "TopK",
+    "RandK",
+    "Int8Stochastic",
+    "GaussianMask",
+    "ErrorFeedback",
+    "CompressedGradients",
+    "make_compressor",
+    "dense_wire_bytes",
+    "quantize_int8",
+]
+
+
+def _num_kept(n: int, ratio: float) -> int:
+    """Coordinates kept per agent for a sparsifier: floor(ratio n), >= 1.
+
+    Floor (not round) so the realized payload never exceeds the requested
+    budget; ratio = 1.0 keeps everything exactly.
+    """
+    return max(1, min(n, int(ratio * n)))
+
+
+def _leaf_keys(key: jax.Array, leaves) -> list:
+    return list(jax.random.split(key, len(leaves)))
+
+
+def quantize_int8(x: jax.Array, key: jax.Array, axis: int = -1):
+    """Stochastic int8 quantization: ``q = clip(floor(x / s + u), +/-127)``
+    with ``s = max|x| / 127`` reduced over ``axis`` and ``u ~ U[0, 1)``
+    (unbiased).  Returns ``(q, scale)`` with q float-valued in [-127, 127]
+    and scale keeping the reduced axis as size 1.
+
+    The single definition of the quantizer: the per-leaf reference path
+    (:class:`Int8Stochastic`) and the per-tile fused Pallas path
+    (``PallasFusedMixer.mix_int8``) both call this, so the rounding /
+    clipping / zero-scale semantics cannot diverge.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    u = jax.random.uniform(key, x.shape)
+    q = jnp.clip(jnp.floor(x / scale + u), -127.0, 127.0)
+    return q, scale
+
+
+def _rand_subset_mask(key: jax.Array, flat: jax.Array, k: int) -> jax.Array:
+    """{0,1} mask selecting a uniform k-subset per agent (row) of ``flat``.
+
+    The single definition of the rand-k mask stream: RandK and GaussianMask
+    must stay key-for-key identical (sigma = 0 IS rand-k — the parity gate
+    and the wire accounting rely on it), so neither reimplements this.
+    """
+    u = jax.random.uniform(key, flat.shape)
+    _, idx = jax.lax.top_k(u, k)
+    mask = jnp.zeros(flat.shape, flat.dtype)
+    return mask.at[jnp.arange(flat.shape[0])[:, None], idx].set(1)
+
+
+def dense_wire_bytes(params: PyTree) -> int:
+    """float32 payload of the uncompressed combination step (the baseline
+    every :meth:`Compressor.wire_bytes` is compared against)."""
+    return sum(4 * int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+class Compressor:
+    """Encoder stage of the combination pipeline.
+
+    ``encode(params, state, key) -> (messages, state)`` with ``messages``
+    the same pytree structure/dtypes as ``params``; stateless compressors
+    ignore ``state`` (pass ``()``), and only ``needs_key`` compressors read
+    ``key``.  Implementations must be jit-compatible.
+    """
+
+    name = "base"
+    stateful = False          # True: error-feedback memory must be threaded
+    needs_key = False         # True: encode consumes a PRNG key
+    bits = 32                 # payload bits per transmitted coordinate
+
+    def init_state(self, params: PyTree) -> PyTree:
+        return ()
+
+    def encode(self, params: PyTree, state: PyTree,
+               key: jax.Array | None = None):
+        raise NotImplementedError
+
+    def encode_contractive(self, params: PyTree,
+                           key: jax.Array | None = None) -> PyTree:
+        """Contractive (non-rescaled) encoding for the differential pipeline
+        mode: ||C(x) - x|| <= (1 - delta) ||x|| is what the reference-copy
+        recursion needs; the unbiased ``n/k`` rescale of rand-k style
+        compressors violates it, so they override this to skip it."""
+        msgs, _ = self.encode(params, (), key)
+        return msgs
+
+    def wire_bytes(self, params: PyTree) -> int:
+        """Value-payload bytes moved per combination step (see module
+        docstring for the accounting convention)."""
+        return sum((self.bits // 8) * int(np.prod(l.shape))
+                   for l in jax.tree.leaves(params))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}()"
+
+
+class Identity(Compressor):
+    """Dense float32 messages — the uncompressed baseline.
+
+    :class:`repro.core.mixing.CommPipeline` short-circuits this case to the
+    plain mixer call, so it is bit-identical to the pre-pipeline backends.
+    """
+
+    name = "none"
+
+    def encode(self, params, state, key=None):
+        return params, state
+
+
+class TopK(Compressor):
+    """Keep the largest-magnitude ``ratio`` fraction per agent per leaf.
+
+    Deterministic and biased (it systematically drops small coordinates);
+    wrap in :class:`ErrorFeedback` so the dropped mass is retransmitted once
+    it accumulates.
+    """
+
+    name = "topk"
+
+    def __init__(self, ratio: float):
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(f"ratio={ratio} must lie in (0, 1]")
+        self.ratio = float(ratio)
+
+    def _leaf(self, x: jax.Array) -> jax.Array:
+        K = x.shape[0]
+        flat = x.reshape(K, -1)
+        n = flat.shape[1]
+        k = _num_kept(n, self.ratio)
+        if k >= n:
+            return x
+        _, idx = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)
+        mask = jnp.zeros(flat.shape, flat.dtype)
+        mask = mask.at[jnp.arange(K)[:, None], idx].set(1)
+        return (flat * mask).reshape(x.shape)
+
+    def encode(self, params, state, key=None):
+        return jax.tree.map(self._leaf, params), state
+
+    def wire_bytes(self, params):
+        return sum(4 * l.shape[0]
+                   * _num_kept(int(np.prod(l.shape[1:])), self.ratio)
+                   for l in jax.tree.leaves(params))
+
+
+class RandK(Compressor):
+    """Uniform random ``k``-subset per agent per leaf, rescaled by ``n/k``.
+
+    Unbiased: E[c] = psi.  The subset is a function of the PRNG key alone,
+    so receivers regenerate the index set from a shared seed and only the
+    kept values travel (reflected in :meth:`wire_bytes`).
+    """
+
+    name = "randk"
+    needs_key = True
+
+    def __init__(self, ratio: float):
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(f"ratio={ratio} must lie in (0, 1]")
+        self.ratio = float(ratio)
+
+    def _leaf(self, x: jax.Array, key: jax.Array,
+              rescale: bool = True) -> jax.Array:
+        K = x.shape[0]
+        flat = x.reshape(K, -1)
+        n = flat.shape[1]
+        k = _num_kept(n, self.ratio)
+        if k >= n:
+            return x
+        out = flat * _rand_subset_mask(key, flat, k)
+        if rescale:
+            out = out * (n / k)
+        return out.reshape(x.shape)
+
+    def encode(self, params, state, key=None):
+        if key is None:
+            raise ValueError("RandK.encode needs a PRNG key")
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = [self._leaf(l, k) for l, k in zip(leaves,
+                                                _leaf_keys(key, leaves))]
+        return jax.tree_util.tree_unflatten(treedef, out), state
+
+    def encode_contractive(self, params, key=None):
+        if key is None:
+            raise ValueError("RandK needs a PRNG key")
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = [self._leaf(l, k, rescale=False)
+               for l, k in zip(leaves, _leaf_keys(key, leaves))]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    wire_bytes = TopK.wire_bytes
+
+
+class Int8Stochastic(Compressor):
+    """8-bit stochastic quantization with a per-agent scale per leaf.
+
+    c = round_stochastic(psi / s) * s with s = max|psi| / 127; stochastic
+    rounding (floor(x + u), u ~ U[0,1)) makes it unbiased.  4x fewer payload
+    bytes than float32; with the Pallas mixer the engines keep the int8
+    ``(K, M)`` buffer + per-tile scales all the way into the fused
+    dequantize+mask+mix kernel.
+    """
+
+    name = "int8"
+    needs_key = True
+    bits = 8
+
+    def _leaf(self, x: jax.Array, key: jax.Array) -> jax.Array:
+        K = x.shape[0]
+        flat = x.reshape(K, -1).astype(jnp.float32)
+        q, scale = quantize_int8(flat, key, axis=1)
+        return (q * scale).reshape(x.shape).astype(x.dtype)
+
+    def encode(self, params, state, key=None):
+        if key is None:
+            raise ValueError("Int8Stochastic.encode needs a PRNG key")
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = [self._leaf(l, k) for l, k in zip(leaves,
+                                                _leaf_keys(key, leaves))]
+        return jax.tree_util.tree_unflatten(treedef, out), state
+
+
+class GaussianMask(RandK):
+    """Sparse differential Gaussian masking (Zhang et al., arXiv:2001.03836).
+
+    Rand-k sparsification plus zero-mean Gaussian noise of standard
+    deviation ``sigma`` on the transmitted coordinates — the
+    differential-privacy mask.  Subclasses :class:`RandK` so ``sigma = 0``
+    IS rand-k by construction (same code, same key stream), which the
+    ratio-1.0 parity gate and the wire accounting rely on.
+    """
+
+    name = "gauss"
+
+    def __init__(self, ratio: float, sigma: float = 0.0):
+        super().__init__(ratio)
+        if sigma < 0.0:
+            raise ValueError(f"sigma={sigma} must be >= 0")
+        self.sigma = float(sigma)
+
+    def _leaf(self, x: jax.Array, key: jax.Array,
+              rescale: bool = True) -> jax.Array:
+        kept = super()._leaf(x, key, rescale)
+        if self.sigma > 0.0:
+            K = x.shape[0]
+            flat = x.reshape(K, -1)
+            n = flat.shape[1]
+            k = _num_kept(n, self.ratio)
+            # same key as the parent draw, so this mask equals the one the
+            # kept values were selected with
+            mask = (jnp.ones(flat.shape, flat.dtype) if k >= n
+                    else _rand_subset_mask(key, flat, k))
+            noise = jax.random.normal(jax.random.fold_in(key, 1),
+                                      flat.shape, jnp.float32)
+            kept = (kept.reshape(K, -1)
+                    + (self.sigma * noise * mask).astype(flat.dtype)
+                    ).reshape(x.shape)
+        return kept
+
+
+class ErrorFeedback(Compressor):
+    """Residual-memory wrapper:  c = C(psi + e),  e' = (psi + e) - c.
+
+    The memory e accumulates exactly what compression dropped, so it is
+    retransmitted once it grows large — the classic EF-SGD mechanism that
+    makes biased compressors (top-k) convergent and bounds the residual on
+    any stationary signal.  The memory is per-agent state threaded through
+    the block step alongside ``part_state`` (see the engines).
+    """
+
+    stateful = True
+
+    def __init__(self, inner: Compressor):
+        if inner.stateful:
+            raise ValueError("ErrorFeedback wraps stateless compressors")
+        self.inner = inner
+
+    @property
+    def name(self) -> str:
+        return self.inner.name + "+ef"
+
+    @property
+    def needs_key(self) -> bool:
+        return self.inner.needs_key
+
+    @property
+    def bits(self) -> int:
+        return self.inner.bits
+
+    def init_state(self, params: PyTree) -> PyTree:
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def encode(self, params, state, key=None):
+        target = jax.tree.map(lambda p, e: p + e.astype(p.dtype),
+                              params, state)
+        msgs, _ = self.inner.encode(target, (), key)
+        residual = jax.tree.map(lambda t, m: t - m, target, msgs)
+        return msgs, residual
+
+    def encode_contractive(self, params, key=None):
+        return self.inner.encode_contractive(params, key)
+
+    def wire_bytes(self, params):
+        return self.inner.wire_bytes(params)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"ErrorFeedback({self.inner!r})"
+
+
+class CompressedGradients:
+    """Gradient-compression adapter for the local-update stage.
+
+    Implements the engines' ``grad_transform`` protocol
+    (``(grads, state, params) -> (updates, state)``) by running a
+    :class:`Compressor` over the per-agent gradients — the *gradient* half
+    of the pipeline's gradient/parameter compression story (e.g. rand-k
+    SGD inside the local steps, on top of compressed combination).  State is
+    ``(step_counter, compressor_state)``; keys are derived deterministically
+    from ``seed`` and the counter so the transform stays jit-pure.
+    """
+
+    def __init__(self, compressor: Compressor, seed: int = 0):
+        self.compressor = compressor
+        self.seed = int(seed)
+
+    def init(self, params: PyTree) -> PyTree:
+        return (jnp.zeros((), jnp.uint32),
+                self.compressor.init_state(params))
+
+    def __call__(self, grads, state, params):
+        counter, cstate = state
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), counter)
+        msgs, cstate = self.compressor.encode(grads, cstate, key)
+        return msgs, (counter + 1, cstate)
+
+
+_NAMES = ("none", "identity", "topk", "randk", "int8", "gauss", "gaussian")
+
+
+def make_compressor(name: str | Compressor | None, *, ratio: float = 1.0,
+                    error_feedback: bool = False,
+                    sigma: float = 0.0) -> Compressor:
+    """Build a compressor stage.
+
+    Args:
+      name: "none"/"identity" | "topk" | "randk" | "int8" |
+        "gauss"/"gaussian", or an existing :class:`Compressor` (returned
+        unchanged — ``error_feedback`` still wraps it if not already
+        stateful), or None (identity).
+      ratio: kept fraction for the sparsifiers (ignored by none/int8).
+      error_feedback: wrap the result in :class:`ErrorFeedback`.
+      sigma: Gaussian-mask noise scale (gauss only).
+    """
+    if isinstance(name, Compressor):
+        comp = name
+    elif name is None or name in ("none", "identity"):
+        comp = Identity()
+    elif name == "topk":
+        comp = TopK(ratio)
+    elif name == "randk":
+        comp = RandK(ratio)
+    elif name == "int8":
+        comp = Int8Stochastic()
+    elif name in ("gauss", "gaussian"):
+        comp = GaussianMask(ratio, sigma)
+    else:
+        raise ValueError(f"unknown compressor {name!r} "
+                         f"(expected one of {_NAMES})")
+    # Identity's residual is identically zero: wrapping it would only turn
+    # the bit-identical stateless pipeline into a stateful one
+    if (error_feedback and not comp.stateful
+            and not isinstance(comp, Identity)):
+        comp = ErrorFeedback(comp)
+    return comp

@@ -9,16 +9,27 @@ step* performs:
      correction),
   2. ``T`` local stochastic-gradient updates via the shared
      :func:`local_update_scan` (eq. 17 with A_{iT+t} = I for t != T),
-  3. one combination step through the engine's :class:`~repro.core.mixing`
+  3. one combination step through the engine's
+     :class:`repro.core.mixing.CommPipeline` — a pluggable compressor stage
+     (:mod:`repro.core.compression`: top-k / rand-k / int8 / Gaussian mask,
+     optional error feedback) feeding a pluggable :class:`~repro.core.mixing`
      backend (eq. 20).
 
 Steps 1 and 3 are pluggable: the activation model is any
 :class:`repro.core.schedules.ParticipationProcess` and the combination step
-any :class:`repro.core.mixing.Mixer` (dense einsum, sparse circulant, or the
-fused Pallas kernel).  This engine is exact Algorithm 1 and is what the
-paper-reproduction benchmarks and theory-validation tests run.  The
-mesh-sharded engine with identical semantics lives in
-:mod:`repro.core.sharded`; both consume the same scan/mixer/process layers.
+any compressor + :class:`repro.core.mixing.Mixer` combination (dense einsum,
+sparse circulant, or the fused Pallas kernel; with ``compress="none"`` the
+pipeline is bit-identical to the plain mixer).  This engine is exact
+Algorithm 1 and is what the paper-reproduction benchmarks and
+theory-validation tests run.  The mesh-sharded engine with identical
+semantics lives in :mod:`repro.core.sharded`; both consume the same
+scan/pipeline/process layers.
+
+State threading: stateful participation processes thread ``part_state``
+(:meth:`DiffusionEngine.block_step_stateful`), and stateful pipelines
+(error feedback) additionally thread the residual memory ``comm_state``
+(:meth:`DiffusionEngine.block_step_comm`); :meth:`DiffusionEngine.run`
+threads both automatically.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compression
 from repro.core import mixing
 from repro.core import participation as part
 from repro.core import schedules
@@ -55,6 +67,12 @@ class DiffusionConfig:
     participation: Any = 1.0             # scalar or length-K sequence of q_k
     drift_correction: bool = False       # eq. (31): mu/q_k for active agents
     mix: str = "dense"                   # dense|sparse|pallas|auto|none
+    compress: str = "none"               # none|topk|randk|int8|gauss
+    compress_ratio: float = 1.0          # kept fraction (topk/randk/gauss)
+    compress_sigma: float = 0.0          # Gaussian-mask noise scale (gauss)
+    error_feedback: bool = False         # EF residual memory (direct mode)
+    comm_mode: str = "auto"              # auto|identity|direct|diff
+    comm_gamma: Any = None               # consensus step (None: auto)
 
     def q_vector(self) -> np.ndarray:
         q = np.asarray(self.participation, dtype=np.float64)
@@ -153,10 +171,17 @@ class DiffusionEngine:
         defaults to the paper's i.i.d. Bernoulli with the config's q vector.
         Stateful processes require :meth:`block_step_stateful` (``run``
         threads the state automatically).
+      compressor: communication-compression stage — a
+        compression.Compressor; defaults to the config's ``compress`` /
+        ``compress_ratio`` / ``error_feedback`` fields ("none": bit-identical
+        to the plain mixer).  Error feedback makes the pipeline stateful —
+        use :meth:`block_step_comm` (``run`` threads the state
+        automatically).
     """
 
     def __init__(self, config: DiffusionConfig, loss_fn: LossFn,
-                 grad_transform=None, *, mixer=None, participation=None):
+                 grad_transform=None, *, mixer=None, participation=None,
+                 compressor=None):
         self.config = config
         self.loss_fn = loss_fn
         self.grad_transform = grad_transform
@@ -166,19 +191,30 @@ class DiffusionEngine:
         self.mixer = mixing.make_mixer(
             mixer if mixer is not None else config.mix, self.topology,
             num_agents=config.num_agents)
+        if compressor is None:
+            compressor = compression.make_compressor(
+                config.compress, ratio=config.compress_ratio,
+                error_feedback=config.error_feedback,
+                sigma=config.compress_sigma)
+        self.pipeline = mixing.CommPipeline(self.mixer, compressor,
+                                            mode=config.comm_mode,
+                                            gamma=config.comm_gamma)
+        self.compressor = self.pipeline.compressor
         self._grad_fn = jax.vmap(jax.grad(loss_fn))
 
     # -- shared block body (local updates + combination) --------------------
     def _apply_block(self, params: PyTree, opt_state: PyTree,
-                     active: jax.Array, block_batch: PyTree):
+                     comm_state: PyTree, active: jax.Array,
+                     key_comm: jax.Array, block_batch: PyTree):
         cfg = self.config
         mus = part.step_size_matrix(cfg.step_size, active, self._q,
                                     cfg.drift_correction)       # (K,)
         params, opt_state = local_update_scan(
             self._grad_fn, params, opt_state, mus, block_batch,
             local_steps=cfg.local_steps, grad_transform=self.grad_transform)
-        params = self.mixer(params, active)                     # eq. (20)
-        return params, opt_state
+        params, comm_state = self.pipeline(params, active, comm_state,
+                                           key_comm)            # eq. (20)
+        return params, opt_state, comm_state
 
     # -- single block iteration (jit-compatible) ---------------------------
     @partial(jax.jit, static_argnums=0)
@@ -199,10 +235,16 @@ class DiffusionEngine:
             raise ValueError(
                 f"{type(self.process).__name__} carries state; use "
                 "block_step_stateful (or run(), which threads it for you)")
-        key_act, _ = jax.random.split(key)
+        if self.pipeline.stateful:
+            raise ValueError(
+                f"the {self.pipeline.mode}-mode pipeline with "
+                f"{self.compressor!r} carries communication state "
+                "(EF residual or diff-mode reference); use block_step_comm "
+                "(or run(), which threads it for you)")
+        key_act, key_comm = jax.random.split(key)
         active, _ = self.process.sample((), key_act)            # eq. (18)
-        params, opt_state = self._apply_block(params, opt_state, active,
-                                              block_batch)
+        params, opt_state, _ = self._apply_block(
+            params, opt_state, (), active, key_comm, block_batch)
         return params, opt_state, active
 
     @partial(jax.jit, static_argnums=0)
@@ -215,11 +257,35 @@ class DiffusionEngine:
         :meth:`block_step` given the same key.  Returns
         ``(params, opt_state, part_state, active)``.
         """
-        key_act, _ = jax.random.split(key)
+        if self.pipeline.stateful:
+            raise ValueError(
+                f"the {self.pipeline.mode}-mode pipeline with "
+                f"{self.compressor!r} carries communication state "
+                "(EF residual or diff-mode reference); use block_step_comm "
+                "(or run(), which threads it for you)")
+        key_act, key_comm = jax.random.split(key)
         active, part_state = self.process.sample(part_state, key_act)
-        params, opt_state = self._apply_block(params, opt_state, active,
-                                              block_batch)
+        params, opt_state, _ = self._apply_block(
+            params, opt_state, (), active, key_comm, block_batch)
         return params, opt_state, part_state, active
+
+    @partial(jax.jit, static_argnums=0)
+    def block_step_comm(self, params: PyTree, opt_state: PyTree,
+                        part_state: PyTree, comm_state: PyTree,
+                        key: jax.Array, block_batch: PyTree):
+        """Block iteration threading BOTH the participation-process state
+        and the pipeline's error-feedback memory.
+
+        Works for every process/compressor combination; for stateless ones
+        it is bit-identical to :meth:`block_step_stateful` given the same
+        key (pass ``comm_state=()``).  Returns
+        ``(params, opt_state, part_state, comm_state, active)``.
+        """
+        key_act, key_comm = jax.random.split(key)
+        active, part_state = self.process.sample(part_state, key_act)
+        params, opt_state, comm_state = self._apply_block(
+            params, opt_state, comm_state, active, key_comm, block_batch)
+        return params, opt_state, part_state, comm_state, active
 
     # -- convenience runner -------------------------------------------------
     def run(self, params: PyTree, sampler: Callable[[jax.Array], PyTree],
@@ -234,12 +300,19 @@ class DiffusionEngine:
         """
         key = jax.random.PRNGKey(seed)
         part_state = self.process.init_state(jax.random.fold_in(key, 0x5EED))
+        comm_stateful = self.pipeline.stateful
+        comm_state = self.pipeline.init_state(params) if comm_stateful else ()
         history = []
         for _ in range(num_blocks):
             key, k_batch, k_step = jax.random.split(key, 3)
             batch = sampler(k_batch)
-            params, opt_state, part_state, _ = self.block_step_stateful(
-                params, opt_state, part_state, k_step, batch)
+            if comm_stateful:
+                params, opt_state, part_state, comm_state, _ = \
+                    self.block_step_comm(params, opt_state, part_state,
+                                         comm_state, k_step, batch)
+            else:
+                params, opt_state, part_state, _ = self.block_step_stateful(
+                    params, opt_state, part_state, k_step, batch)
             if w_star is not None:
                 history.append(float(network_msd(params, w_star)))
         return params, opt_state, history

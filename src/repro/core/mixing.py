@@ -25,6 +25,18 @@ Use :func:`make_mixer` to construct one; ``"auto"`` picks the Pallas kernel
 on TPU and the sparse path for bounded-degree topologies on other backends.
 Benchmarked head-to-head by ``benchmarks.run bench_mix_backends`` (see
 EXPERIMENTS.md §Perf).
+
+The combination step itself is a staged :class:`CommPipeline`
+
+    encode (Compressor) --> exchange/combine (Mixer) --> correct
+
+so compressed communication (top-k / rand-k sparsification, int8
+stochastic quantization, Gaussian masking — :mod:`repro.core.compression`)
+plugs in front of any mixing backend without touching the Mixer contract.
+With the identity compressor the pipeline IS the mixer (bit-identical);
+with the int8 compressor and the Pallas mixer the encode and combine stages
+fuse into :func:`repro.kernels.diffusion_mix.diffusion_mix_int8`, streaming
+the quantized ``(K, M)`` buffer once.  See EXPERIMENTS.md §Compression.
 """
 from __future__ import annotations
 
@@ -34,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compression as comp_lib
 from repro.core import participation as part
 from repro.core import topology as topo_lib
 
@@ -45,7 +58,9 @@ __all__ = [
     "DenseMixer",
     "SparseCirculantMixer",
     "PallasFusedMixer",
+    "CommPipeline",
     "make_mixer",
+    "make_pipeline",
     "mix_dense",
     "mix_sparse",
 ]
@@ -211,22 +226,258 @@ class PallasFusedMixer(Mixer):
         from repro.kernels.diffusion_mix import diffusion_mix
 
         leaves, treedef = jax.tree_util.tree_flatten(params)
-        K = leaves[0].shape[0]
         lay = self._layout(leaves, treedef)
-        flat = jnp.concatenate(
-            [l.reshape(K, -1).astype(jnp.float32) for l in leaves], axis=1)
-        if lay.M_padded != lay.M:
-            flat = jnp.pad(flat, ((0, 0), (0, lay.M_padded - lay.M)))
+        flat = self._flatten(leaves, lay)
         interpret = (jax.default_backend() != "tpu"
                      if self.interpret is None else self.interpret)
         mixed = diffusion_mix(self.A, active, flat, tile_m=lay.tile_m,
                               interpret=interpret)
+        return self._unflatten(mixed, leaves, treedef, lay)
+
+    def _flatten(self, leaves, lay) -> jax.Array:
+        K = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.reshape(K, -1).astype(jnp.float32) for l in leaves], axis=1)
+        if lay.M_padded != lay.M:
+            flat = jnp.pad(flat, ((0, 0), (0, lay.M_padded - lay.M)))
+        return flat
+
+    def _unflatten(self, flat, leaves, treedef, lay):
         outs, off = [], 0
         for leaf, n in zip(leaves, lay.sizes):
-            outs.append(mixed[:, off:off + n].reshape(leaf.shape)
+            outs.append(flat[:, off:off + n].reshape(leaf.shape)
                         .astype(leaf.dtype))
             off += n
         return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def mix_int8(self, params: PyTree, active: jax.Array, key: jax.Array,
+                 *, want_messages: bool = False):
+        """Compressed combination: per-tile int8 stochastic quantization of
+        the cached flatten layout, then the fused dequantize+mask+mix kernel
+        (:func:`repro.kernels.diffusion_mix.diffusion_mix_int8`).
+
+        Returns ``(delta, messages)``: ``delta`` is the pytree of
+        combination deltas ``[ (A_eff - I)^T c ]_k`` (so the caller applies
+        ``w = psi + delta``), and ``messages`` is the dequantized transmitted
+        pytree c (exactly what the kernel dequantizes — needed for the
+        error-feedback residual) or None unless ``want_messages``.
+        """
+        from repro.kernels.diffusion_mix import diffusion_mix_int8
+
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        K = leaves[0].shape[0]
+        lay = self._layout(leaves, treedef)
+        flat = self._flatten(leaves, lay)
+        nm = lay.M_padded // lay.tile_m
+        tiles = flat.reshape(K, nm, lay.tile_m)
+        q, scale3 = comp_lib.quantize_int8(tiles, key, axis=2)
+        scales = scale3[:, :, 0]                              # (K, nm)
+        Wq = q.astype(jnp.int8).reshape(K, lay.M_padded)
+        interpret = (jax.default_backend() != "tpu"
+                     if self.interpret is None else self.interpret)
+        delta = diffusion_mix_int8(self.A, active, Wq, scales,
+                                   tile_m=lay.tile_m, interpret=interpret,
+                                   subtract_identity=True)
+        delta_tree = self._unflatten(delta, leaves, treedef, lay)
+        msgs = None
+        if want_messages:
+            c = (q.astype(jnp.float32) * scales[:, :, None]
+                 ).reshape(K, lay.M_padded)
+            msgs = self._unflatten(c, leaves, treedef, lay)
+        return delta_tree, msgs
+
+
+# ---------------------------------------------------------------------------
+# CommPipeline: encode -> exchange/combine -> correct
+# ---------------------------------------------------------------------------
+
+class CommPipeline:
+    """Staged combination step with pluggable compression.
+
+    Three exchange modes (``mode="auto"`` picks per compressor):
+
+    * ``"identity"`` — no compression: the pipeline IS the mixer,
+      bit-identical to the uncompressed backends (the Mixer contract).
+    * ``"direct"`` — transmit the compressed iterate and correct locally
+      (DeepSqueeze-style; Tang et al. 2019):
+
+          c   = C(psi [+ e])                     # encode (+ error feedback)
+          w_k = psi_k + gamma ([A_eff^T c]_k - c_k)
+
+      Sound when the compression error is small relative to the signal —
+      int8 stochastic quantization (error <= max|psi|/127), where it also
+      enables the fused dequantize+mask+mix Pallas kernel on the int8
+      ``(K, M)`` buffer.  ``error_feedback`` threads the classic EF
+      residual e through ``comm_state``.
+    * ``"diff"`` — transmit the compressed *difference* from a reference
+      copy every agent maintains for every peer (CHOCO-SGD, Koloskova et
+      al. 2019; the sparse-differential scheme of Zhang et al. 2020):
+
+          c    = C_contractive(psi - ref)        # no unbiased rescale
+          ref' = ref + c                         # receivers update copies
+          w_k  = psi_k + gamma ([A_eff^T ref']_k - ref'_k)
+
+      The reference provides *implicit* error feedback — whatever C drops
+      stays in ``psi - ref`` and is retransmitted once it matters — and the
+      compression error vanishes as training converges, so aggressive
+      sparsifiers (top-k / rand-k / Gaussian mask at ratio << 1) keep a
+      near-dense error floor.  The consensus step ``gamma`` damps the
+      exchange (compressing raw iterates at gamma = 1 is provably unstable
+      for aggressive sparsification); ``gamma=None`` auto-selects 1.0 for
+      lossless ratios, 0.5 for top-k (magnitude selection concentrates
+      energy), and the contraction factor ``ratio`` for rand-k/Gaussian
+      (the CHOCO guidance gamma ~ delta).
+
+    In every mode, A_eff's column k is the unit vector e_k for inactive
+    agents and A_eff is doubly stochastic, so inactive agents keep their
+    parameters exactly and the network mean is preserved — the eq.-20
+    invariants survive any compressor.
+
+    ``stateful`` pipelines (diff mode, or direct mode with error feedback)
+    carry a per-agent memory pytree threaded through the block step
+    alongside ``part_state`` — see
+    :meth:`repro.core.diffusion.DiffusionEngine.block_step_comm` and the
+    stateful signatures of :func:`repro.core.sharded.make_block_step`.
+    """
+
+    def __init__(self, mixer: Mixer,
+                 compressor: comp_lib.Compressor | None = None,
+                 *, mode: str = "auto", gamma: float | None = None):
+        self.mixer = mixer
+        self.compressor = (compressor if compressor is not None
+                           else comp_lib.Identity())
+        base = self._base()
+        if mode == "auto":
+            if isinstance(base, comp_lib.Identity) and not self._ef():
+                mode = "identity"
+            elif isinstance(base, (comp_lib.TopK, comp_lib.RandK,
+                                   comp_lib.GaussianMask)):
+                mode = "diff"
+            else:
+                mode = "direct"
+        if mode not in ("identity", "direct", "diff"):
+            raise ValueError(f"unknown pipeline mode {mode!r} "
+                             "(expected identity|direct|diff|auto)")
+        if mode == "identity" and (self._ef() or not isinstance(
+                base, comp_lib.Identity)):
+            raise ValueError("identity mode requires the Identity "
+                             "compressor without error feedback")
+        if mode == "diff" and self._ef():
+            # the reference provides the feedback in diff mode; keeping the
+            # wrapper would silently never run (diff uses encode_contractive)
+            self.compressor = base
+        self.mode = mode
+        if gamma is None:
+            ratio = getattr(base, "ratio", 1.0)
+            if mode != "diff" or ratio >= 1.0:
+                gamma = 1.0
+            elif isinstance(base, comp_lib.TopK):
+                gamma = 0.5
+            else:
+                gamma = float(ratio)
+        self.gamma = float(gamma)
+
+    def _ef(self) -> bool:
+        return isinstance(self.compressor, comp_lib.ErrorFeedback)
+
+    def _base(self) -> comp_lib.Compressor:
+        c = self.compressor
+        return c.inner if isinstance(c, comp_lib.ErrorFeedback) else c
+
+    @property
+    def stateful(self) -> bool:
+        if isinstance(self.mixer, NullMixer):
+            return False          # __call__ is a no-op: no state to thread
+        if self.mode == "diff":
+            return True
+        return self.mode == "direct" and self.compressor.stateful
+
+    @property
+    def needs_key(self) -> bool:
+        return self.compressor.needs_key
+
+    def init_state(self, params: PyTree) -> PyTree:
+        if not self.stateful:
+            return ()
+        if self.mode == "diff":
+            return {"ref": jax.tree.map(jnp.zeros_like, params)}
+        return self.compressor.init_state(params)
+
+    def wire_bytes(self, params: PyTree) -> int:
+        """Value-payload bytes per combination step (see compression.py)."""
+        if isinstance(self.mixer, NullMixer) or self.mode == "identity":
+            return (0 if isinstance(self.mixer, NullMixer)
+                    else comp_lib.dense_wire_bytes(params))
+        return self.compressor.wire_bytes(params)
+
+    def __call__(self, params: PyTree, active: jax.Array,
+                 comm_state: PyTree = (), key: jax.Array | None = None):
+        """Apply the pipeline; returns ``(params, comm_state)``."""
+        if self.mode == "identity":
+            # bit-identical to the plain mixer (the Mixer contract)
+            return self.mixer(params, active), comm_state
+        if isinstance(self.mixer, NullMixer):
+            # K = 1 / mixing disabled: the correction is identically zero
+            return params, comm_state
+        comp = self.compressor
+        base = self._base()
+        if comp.needs_key and key is None:
+            raise ValueError(f"{comp!r} needs a PRNG key; pass key=")
+        g = self.gamma
+
+        def masked(new, old):
+            """Per-agent select: active agents take ``new``, inactive keep
+            ``old`` — an agent that does not participate transmits nothing,
+            so neither the reference copies nor the EF residual may move.
+            (The simulation assumes an active agent's message reaches every
+            peer's reference copy, i.e. reliable broadcast / re-sync.)"""
+            def leaf(n, o):
+                m = active.astype(n.dtype).reshape(
+                    (n.shape[0],) + (1,) * (n.ndim - 1))
+                return m * n + (1 - m) * o
+            return jax.tree.map(leaf, new, old)
+
+        if self.mode == "diff":
+            ref = comm_state["ref"]
+            diff = jax.tree.map(lambda p, r: p - r.astype(p.dtype),
+                                params, ref)
+            c = base.encode_contractive(diff, key)
+            ref = masked(
+                jax.tree.map(lambda r, ci: r + ci.astype(r.dtype), ref, c),
+                ref)
+            mixed = self.mixer(ref, active)
+            out = jax.tree.map(lambda p, mx, r: p + g * (mx - r).astype(p.dtype),
+                               params, mixed, ref)
+            return out, {"ref": ref}
+        # direct mode: inactive senders' messages are already annihilated by
+        # the eq.-20 mask (off-diagonals need both endpoints active), so only
+        # the EF residual needs explicit masking
+        ef = self._ef()
+        if (isinstance(base, comp_lib.Int8Stochastic)
+                and isinstance(self.mixer, PallasFusedMixer)):
+            target = (jax.tree.map(lambda p, e: p + e.astype(p.dtype),
+                                   params, comm_state) if ef else params)
+            delta, msgs = self.mixer.mix_int8(target, active, key,
+                                              want_messages=ef)
+            out = jax.tree.map(lambda p, d: p + g * d.astype(p.dtype),
+                               params, delta)
+            if ef:
+                comm_state = masked(
+                    jax.tree.map(lambda t, m: t - m.astype(t.dtype),
+                                 target, msgs),
+                    comm_state)
+            return out, comm_state
+        msgs, new_state = comp.encode(params, comm_state, key)
+        if ef:
+            new_state = masked(new_state, comm_state)
+        mixed = self.mixer(msgs, active)
+        out = jax.tree.map(lambda p, mx, m: p + g * (mx - m), params,
+                           mixed, msgs)
+        return out, new_state
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"CommPipeline({self.mixer!r}, {self.compressor!r}, "
+                f"mode={self.mode!r}, gamma={self.gamma})")
 
 
 # ---------------------------------------------------------------------------
@@ -290,3 +541,29 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
         return PallasFusedMixer(A, tile_m=tile_m, interpret=interpret)
     raise ValueError(f"unknown mixer {name!r} "
                      "(expected dense|sparse|pallas|auto|none)")
+
+
+def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
+                  *, compress: str | comp_lib.Compressor | None = None,
+                  compress_ratio: float = 1.0, error_feedback: bool = False,
+                  sigma: float = 0.0, mode: str = "auto",
+                  gamma: float | None = None, A=None,
+                  offsets: Sequence[int] | None = None,
+                  num_agents: int | None = None, tile_m: int = 512,
+                  interpret: bool | None = None) -> CommPipeline:
+    """Build the full combination pipeline (compressor stage + mixer).
+
+    ``mix`` and the mixer kwargs go to :func:`make_mixer`; ``compress`` /
+    ``compress_ratio`` / ``error_feedback`` / ``sigma`` go to
+    :func:`repro.core.compression.make_compressor`; ``mode`` / ``gamma``
+    select the exchange scheme (see :class:`CommPipeline`).
+    ``compress=None`` or ``"none"`` yields the bit-identical identity
+    pipeline.
+    """
+    mixer = make_mixer(mix, topology, A=A, offsets=offsets,
+                       num_agents=num_agents, tile_m=tile_m,
+                       interpret=interpret)
+    compressor = comp_lib.make_compressor(compress, ratio=compress_ratio,
+                                          error_feedback=error_feedback,
+                                          sigma=sigma)
+    return CommPipeline(mixer, compressor, mode=mode, gamma=gamma)

@@ -9,9 +9,12 @@ The block step is assembled from the same three layers as the stacked
 engine (:mod:`repro.core.diffusion`):
 
 * local updates — the shared :func:`repro.core.diffusion.local_update_scan`,
-* combination step — a pluggable :class:`repro.core.mixing.Mixer` backend
-  ("dense" einsum / "sparse" circulant collective-permute / "pallas" fused
-  kernel; see EXPERIMENTS.md §Perf for the head-to-head),
+* combination step — a :class:`repro.core.mixing.CommPipeline`: a pluggable
+  compression stage (:mod:`repro.core.compression` — top-k / rand-k / int8 /
+  Gaussian mask, optional error feedback) feeding a pluggable
+  :class:`repro.core.mixing.Mixer` backend ("dense" einsum / "sparse"
+  circulant collective-permute / "pallas" fused kernel; see EXPERIMENTS.md
+  §Perf and §Compression),
 * activation model — a :class:`repro.core.schedules.ParticipationProcess`
   (i.i.d. Bernoulli by default; Markov / cyclic availability plug in the
   same way).
@@ -26,6 +29,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import compression as comp_lib
 from repro.core import mixing
 from repro.core import participation as part
 from repro.core import schedules
@@ -54,6 +58,12 @@ def make_block_step(
     participation: schedules.ParticipationProcess | None = None,
     tile_m: int = 512,
     interpret: bool | None = None,
+    compress: str | comp_lib.Compressor | None = None,
+    compress_ratio: float | None = None,
+    compress_sigma: float | None = None,
+    error_feedback: bool | None = None,
+    comm_mode: str | None = None,
+    comm_gamma: float | None = None,
 ) -> Callable:
     """Build the pure block-step function for jit/pjit.
 
@@ -77,16 +87,31 @@ def make_block_step(
       participation: activation model; defaults to the paper's i.i.d.
         Bernoulli with the config's q vector.
       tile_m / interpret: Pallas mixer knobs.
+      compress / compress_ratio / compress_sigma / error_feedback:
+        communication-compression stage
+        (:func:`repro.core.compression.make_compressor`); ``compress`` also
+        accepts a prebuilt Compressor.  Each defaults to the config's field
+        of the same name; "none" keeps the step bit-identical to the plain
+        mixer.
+      comm_mode / comm_gamma: exchange scheme and consensus step of the
+        :class:`repro.core.mixing.CommPipeline` (defaults: config fields;
+        "auto" picks diff mode for sparsifiers, direct for int8).
 
     Returns:
-      For stateless participation (the default):
+      For stateless participation (the default) and stateless compression:
         ``block_step(params, opt_state, key, block_batch) ->
           (params, opt_state, active)``.
-      For stateful processes (Markov, cyclic), the step additionally threads
-        the process state:
-        ``block_step(params, opt_state, part_state, key, block_batch) ->
-          (params, opt_state, part_state, active)``.
-      Param leaves are (K, ...) and block-batch leaves (T, K, ...).
+      Stateful processes (Markov, cyclic) additionally thread the process
+        state, and stateful pipelines (error feedback) the residual memory —
+        each inserted before ``key`` and returned in the same position, so
+        the fully stateful signature is
+        ``block_step(params, opt_state, part_state, comm_state, key,
+          block_batch) -> (params, opt_state, part_state, comm_state,
+          active)``.
+      Param leaves are (K, ...) and block-batch leaves (T, K, ...).  The
+      returned function carries ``.pipeline`` (the CommPipeline — use
+      ``pipeline.init_state(params)`` / ``pipeline.wire_bytes(params)``)
+      and ``.comm_stateful`` for driver introspection.
     """
     K = config.num_agents
     process, q_np = schedules.resolve(config, participation)
@@ -96,31 +121,71 @@ def make_block_step(
                               offsets=tuple(offsets) or None,
                               num_agents=K, tile_m=tile_m,
                               interpret=interpret)
+    compressor = comp_lib.make_compressor(
+        compress if compress is not None else config.compress,
+        ratio=(compress_ratio if compress_ratio is not None
+               else config.compress_ratio),
+        error_feedback=(error_feedback if error_feedback is not None
+                        else config.error_feedback),
+        sigma=(compress_sigma if compress_sigma is not None
+               else config.compress_sigma))
+    pipeline = mixing.CommPipeline(
+        mixer, compressor,
+        mode=comm_mode if comm_mode is not None else config.comm_mode,
+        gamma=comm_gamma if comm_gamma is not None else config.comm_gamma)
     grad_fn = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0, 0))
 
-    def apply_block(params, opt_state, active, key_loss, block_batch):
+    def apply_block(params, opt_state, comm_state, active, key_loss,
+                    key_comm, block_batch):
         mus = part.step_size_matrix(config.step_size, active, q,
                                     config.drift_correction)
         params, opt_state = local_update_scan(
             grad_fn, params, opt_state, mus, block_batch,
             local_steps=config.local_steps, grad_transform=grad_transform,
             loss_key=key_loss, num_agents=K)
-        params = mixer(params, active)
-        return params, opt_state
+        params, comm_state = pipeline(params, active, comm_state, key_comm)
+        return params, opt_state, comm_state
 
-    if process.stateful:
+    # key_comm comes from a fold_in (not a wider split) so the activation
+    # and loss key streams are unchanged vs the uncompressed step
+    if process.stateful and pipeline.stateful:
+        def block_step(params, opt_state, part_state, comm_state, key,
+                       block_batch):
+            key_act, key_loss = jax.random.split(key)
+            key_comm = jax.random.fold_in(key, 0xC0)
+            active, part_state = process.sample(part_state, key_act)
+            params, opt_state, comm_state = apply_block(
+                params, opt_state, comm_state, active, key_loss, key_comm,
+                block_batch)
+            return params, opt_state, part_state, comm_state, active
+    elif process.stateful:
         def block_step(params, opt_state, part_state, key, block_batch):
             key_act, key_loss = jax.random.split(key)
+            key_comm = jax.random.fold_in(key, 0xC0)
             active, part_state = process.sample(part_state, key_act)
-            params, opt_state = apply_block(params, opt_state, active,
-                                            key_loss, block_batch)
+            params, opt_state, _ = apply_block(
+                params, opt_state, (), active, key_loss, key_comm,
+                block_batch)
             return params, opt_state, part_state, active
+    elif pipeline.stateful:
+        def block_step(params, opt_state, comm_state, key, block_batch):
+            key_act, key_loss = jax.random.split(key)
+            key_comm = jax.random.fold_in(key, 0xC0)
+            active, _ = process.sample((), key_act)
+            params, opt_state, comm_state = apply_block(
+                params, opt_state, comm_state, active, key_loss, key_comm,
+                block_batch)
+            return params, opt_state, comm_state, active
     else:
         def block_step(params, opt_state, key, block_batch):
             key_act, key_loss = jax.random.split(key)
+            key_comm = jax.random.fold_in(key, 0xC0)
             active, _ = process.sample((), key_act)
-            params, opt_state = apply_block(params, opt_state, active,
-                                            key_loss, block_batch)
+            params, opt_state, _ = apply_block(
+                params, opt_state, (), active, key_loss, key_comm,
+                block_batch)
             return params, opt_state, active
 
+    block_step.pipeline = pipeline
+    block_step.comm_stateful = pipeline.stateful
     return block_step

@@ -19,6 +19,8 @@ __all__ = [
     "decentralized_fedavg",
     "cyclic_fedavg",
     "markov_asynchronous_diffusion",
+    "compressed_diffusion",
+    "compressed_fedavg",
 ]
 
 
@@ -108,6 +110,50 @@ def markov_asynchronous_diffusion(K: int, mu: float, q, corr: float,
     cfg = DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
                           topology=topology, participation=part, mix=mix)
     return cfg, process
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: compressed communication (core/compression.py plug-ins)
+# ---------------------------------------------------------------------------
+
+def compressed_diffusion(K: int, mu: float, *, topology: str = "ring",
+                         T: int = 1, q=1.0, compress: str = "topk",
+                         ratio: float = 0.1, sigma: float = 0.0,
+                         error_feedback: bool = True,
+                         gamma: float | None = None,
+                         mix: str = "dense") -> DiffusionConfig:
+    """Diffusion learning with a compressed combination step.
+
+    The block recursion is Algorithm 1 with the eq.-20 exchange replaced by
+    the :class:`repro.core.mixing.CommPipeline`: sparsifiers (top-k /
+    rand-k / Gaussian mask) run the CHOCO-style reference-difference
+    exchange with consensus step ``gamma`` (implicit error feedback — the
+    reference accumulates exactly what compression dropped), int8
+    stochastic quantization runs the direct exchange where
+    ``error_feedback`` (on by default) threads the classic EF residual.
+    ``compress="none"`` recovers :func:`asynchronous_diffusion` (T = 1) /
+    :func:`decentralized_fedavg` (T > 1) bit-for-bit.
+    """
+    part = tuple(np.asarray(q, dtype=float).reshape(-1)) if np.ndim(q) else float(q)
+    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                           topology=topology, participation=part, mix=mix,
+                           compress=compress, compress_ratio=ratio,
+                           compress_sigma=sigma,
+                           error_feedback=error_feedback, comm_gamma=gamma)
+
+
+def compressed_fedavg(K: int, T: int, mu: float, q: float = 1.0, *,
+                      compress: str = "int8", ratio: float = 1.0,
+                      error_feedback: bool = True,
+                      gamma: float | None = None,
+                      mix: str = "dense") -> DiffusionConfig:
+    """FedAvg (a_lk = 1/K) with compressed model exchange — the
+    communication-efficient federated regime (int8 uplink by default).
+    ``compress="none"`` recovers :func:`fedavg_partial_uniform`."""
+    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                           topology="fedavg", participation=q, mix=mix,
+                           compress=compress, compress_ratio=ratio,
+                           error_feedback=error_feedback, comm_gamma=gamma)
 
 
 # ---------------------------------------------------------------------------

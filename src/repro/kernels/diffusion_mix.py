@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the paper's combination step (eq. 20 + mixing).
+"""Pallas TPU kernels for the paper's combination step (eq. 20 + mixing).
 
 Fuses the per-sample-path masking of the combination matrix (eq. 20) with
 the parameter mix  W'_k = sum_l a_lk W_l , so the masked (K, K) matrix is
@@ -9,6 +9,18 @@ Layout: the agent-stacked parameter tree is flattened to (K, M); the grid
 tiles M.  K is small (<= 64 agents), so the (K, K) mix lives comfortably in
 VMEM next to a (K, tile_m) parameter tile; tile_m is a multiple of 128 for
 lane alignment.
+
+Two variants:
+
+* :func:`diffusion_mix` — float32 buffer (the PR-1 kernel).
+* :func:`diffusion_mix_int8` — the compressed-communication path: the
+  buffer arrives *quantized* (int8 values + one float32 scale per (agent,
+  tile)) and the kernel fuses dequantize + eq.-20 mask + mix, so only a
+  quarter of the parameter bytes are streamed from HBM.  With
+  ``subtract_identity=True`` it emits the combination *delta*
+  (A_eff - I)^T C directly, which is what the
+  :class:`~repro.core.mixing.CommPipeline` correction  w = psi + mix(c) - c
+  consumes.
 """
 from __future__ import annotations
 
@@ -19,11 +31,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _mix_kernel(a_ref, m_ref, w_ref, o_ref, *, K: int):
-    A = a_ref[...].astype(jnp.float32)                  # (K, K)
-    m = m_ref[...].astype(jnp.float32)[:, 0]            # (K,)
-    W = w_ref[...].astype(jnp.float32)                  # (K, TM)
-
+def _masked_matrix(A: jax.Array, m: jax.Array, K: int,
+                   subtract_identity: bool = False) -> jax.Array:
+    """Rebuild the eq.-20 masked combination matrix in VMEM registers."""
     row = jax.lax.broadcasted_iota(jnp.int32, (K, K), 0)
     col = jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
     eye = (row == col).astype(jnp.float32)
@@ -32,8 +42,31 @@ def _mix_kernel(a_ref, m_ref, w_ref, o_ref, *, K: int):
     col_off = off.sum(axis=0)                           # (K,)
     diag = m * (1.0 - col_off) + (1.0 - m)              # eq. (20) self-weights
     A_eff = off + diag[None, :] * eye
+    if subtract_identity:
+        A_eff = A_eff - eye
+    return A_eff
+
+
+def _mix_kernel(a_ref, m_ref, w_ref, o_ref, *, K: int):
+    A = a_ref[...].astype(jnp.float32)                  # (K, K)
+    m = m_ref[...].astype(jnp.float32)[:, 0]            # (K,)
+    W = w_ref[...].astype(jnp.float32)                  # (K, TM)
+    A_eff = _masked_matrix(A, m, K)
 
     # W'_k = sum_l A_eff[l, k] W[l]  ==  A_eff^T @ W
+    out = jax.lax.dot_general(A_eff, W, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _mix_int8_kernel(a_ref, m_ref, wq_ref, s_ref, o_ref, *, K: int,
+                     subtract_identity: bool):
+    A = a_ref[...].astype(jnp.float32)                  # (K, K)
+    m = m_ref[...].astype(jnp.float32)[:, 0]            # (K,)
+    scale = s_ref[...].astype(jnp.float32)              # (K, 1) per-tile
+    W = wq_ref[...].astype(jnp.float32) * scale         # dequantize in VMEM
+    A_eff = _masked_matrix(A, m, K, subtract_identity=subtract_identity)
+
     out = jax.lax.dot_general(A_eff, W, (((0,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
     o_ref[...] = out.astype(o_ref.dtype)
@@ -68,3 +101,48 @@ def diffusion_mix(A: jax.Array, active: jax.Array, W: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((K, M), W.dtype),
         interpret=interpret,
     )(A, active.reshape(K, 1), W)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_m", "interpret",
+                                    "subtract_identity"))
+def diffusion_mix_int8(A: jax.Array, active: jax.Array, Wq: jax.Array,
+                       scales: jax.Array, *, tile_m: int = 512,
+                       interpret: bool = False,
+                       subtract_identity: bool = False) -> jax.Array:
+    """Fused dequantize + masked combination over int8-compressed parameters.
+
+    Args:
+      A: (K, K) base combination matrix.
+      active: (K,) activation mask in {0, 1}.
+      Wq: (K, M) int8 stacked quantized parameters; M % tile_m == 0.
+      scales: (K, M // tile_m) float32 dequantization scales, one per
+        (agent, tile).
+      subtract_identity: emit (A_eff - I)^T C instead of A_eff^T C — the
+        combination *delta* consumed by the CommPipeline correction.
+    Returns:
+      (K, M) float32 mixed (or delta) parameters.
+    """
+    K, M = Wq.shape
+    if Wq.dtype != jnp.int8:
+        raise ValueError(f"Wq dtype {Wq.dtype} != int8")
+    if M % tile_m:
+        raise ValueError(f"M={M} not divisible by tile_m={tile_m}")
+    nm = M // tile_m
+    if scales.shape != (K, nm):
+        raise ValueError(f"scales shape {scales.shape} != ({K}, {nm})")
+    kernel = functools.partial(_mix_int8_kernel, K=K,
+                               subtract_identity=subtract_identity)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((K, K), lambda mi: (0, 0)),
+            pl.BlockSpec((K, 1), lambda mi: (0, 0)),
+            pl.BlockSpec((K, tile_m), lambda mi: (0, mi)),
+            pl.BlockSpec((K, 1), lambda mi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((K, tile_m), lambda mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((K, M), jnp.float32),
+        interpret=interpret,
+    )(A, active.reshape(K, 1), Wq, scales.astype(jnp.float32))

@@ -123,7 +123,9 @@ def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                      multi_pod: bool, mix_override: str | None = None,
-                     tp: bool | None = None):
+                     tp: bool | None = None, compress: str | None = None,
+                     compress_ratio: float = 0.1, compress_sigma: float = 0.0,
+                     error_feedback: bool = False):
     cfg = bundle.model
     pc = bundle.parallel
     tp = pc.tp if tp is None else tp
@@ -144,7 +146,10 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                              remat=pc.remat)
 
     block_step = make_block_step(loss_fn, topo_cfg, A, mix=mix,
-                                 topology=topo)
+                                 topology=topo, compress=compress,
+                                 compress_ratio=compress_ratio,
+                                 compress_sigma=compress_sigma,
+                                 error_feedback=error_feedback)
 
     # shardings
     inner = sh.param_pspecs(tf.param_specs(cfg), mesh, fsdp=pc.fsdp, tp=tp)
@@ -154,16 +159,37 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                          sharding=jax.NamedSharding(mesh, p)),
         tf.param_specs(cfg), pspec, is_leaf=lambda x: isinstance(x, SDS))
 
-    def step(params, key, batch):
-        new_params, _, active = block_step(params, None, key, batch)
-        return new_params, active
-
     specs = input_specs(bundle.model.name, shape.name, multi_pod=multi_pod,
                         mesh=mesh, tp=tp)
-    args = (param_sds, specs["key"], specs["batch"])
-    out_shardings = (jax.tree.map(lambda s: s.sharding, param_sds,
-                                  is_leaf=lambda x: isinstance(x, SDS)),
-                     None)
+    param_shardings = jax.tree.map(lambda s: s.sharding, param_sds,
+                                   is_leaf=lambda x: isinstance(x, SDS))
+    if block_step.comm_stateful:
+        # comm state (EF residual / diff-mode reference) is a tree of
+        # params-shaped leaves: shard each leaf like the param it mirrors
+        state_struct = jax.eval_shape(block_step.pipeline.init_state,
+                                      param_sds)
+        p_sh = jax.tree.leaves(param_shardings)
+        s_leaves, s_def = jax.tree_util.tree_flatten(state_struct)
+        assert len(s_leaves) == len(p_sh), "comm state != params layout"
+        comm_sds = jax.tree_util.tree_unflatten(
+            s_def, [SDS(l.shape, l.dtype, sharding=s)
+                    for l, s in zip(s_leaves, p_sh)])
+        comm_shardings = jax.tree_util.tree_unflatten(s_def, p_sh)
+
+        def step(params, comm_state, key, batch):
+            new_params, _, comm_state, active = block_step(
+                params, None, comm_state, key, batch)
+            return new_params, comm_state, active
+
+        args = (param_sds, comm_sds, specs["key"], specs["batch"])
+        out_shardings = (param_shardings, comm_shardings, None)
+    else:
+        def step(params, key, batch):
+            new_params, _, active = block_step(params, None, key, batch)
+            return new_params, active
+
+        args = (param_sds, specs["key"], specs["batch"])
+        out_shardings = (param_shardings, None)
     return step, args, out_shardings
 
 
@@ -326,7 +352,9 @@ def collective_stats(hlo_text: str) -> dict:
 def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                mix_override: str | None = None,
                save_hlo: str | None = None,
-               tp: bool | None = None) -> dict:
+               tp: bool | None = None, compress: str | None = None,
+               compress_ratio: float = 0.1, compress_sigma: float = 0.0,
+               error_feedback: bool = False) -> dict:
     multi_pod = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = get_config(arch)
@@ -335,7 +363,11 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
     t0 = time.time()
     if shape.kind == "train":
         step, args, out_sh = build_train_step(bundle, shape, mesh, multi_pod,
-                                              mix_override, tp=tp)
+                                              mix_override, tp=tp,
+                                              compress=compress,
+                                              compress_ratio=compress_ratio,
+                                              compress_sigma=compress_sigma,
+                                              error_feedback=error_feedback)
     elif shape.kind == "prefill":
         step, args, out_sh = build_prefill_step(bundle, shape, mesh, multi_pod)
     else:
@@ -369,6 +401,9 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
         "shape": shape_name,
         "mesh": mesh_kind,
         "mix": mix_override or "default",
+        "compress": compress or "none",
+        "compress_ratio": compress_ratio,
+        "error_feedback": error_feedback,
         "tp": tp if tp is not None else get_config(arch).parallel.tp,
         "devices": int(len(mesh.devices.reshape(-1))),
         "compile_seconds": round(t1 - t0, 2),
@@ -389,6 +424,15 @@ def main():
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--mix", default=None,
                     choices=[None, "dense", "sparse", "pallas", "auto"])
+    ap.add_argument("--compress", default=None,
+                    choices=[None, "none", "topk", "randk", "int8", "gauss"],
+                    help="communication compressor for the train step "
+                         "(core/compression.py)")
+    # same default ratio as launch/train.py so a dry-run reflects the step
+    # that actually trains
+    ap.add_argument("--compress-ratio", type=float, default=0.1)
+    ap.add_argument("--compress-sigma", type=float, default=0.0)
+    ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--no-tp", action="store_true",
                     help="replicate params over the model axis (pure DP)")
     ap.add_argument("--all", action="store_true")
@@ -410,12 +454,18 @@ def main():
     for arch, shape, mesh_kind in combos:
         tag = (f"{arch}_{shape}_{mesh_kind}"
                + (f"_{args.mix}" if args.mix else "")
+               + (f"_{args.compress}" if args.compress else "")
+               + ("_ef" if args.error_feedback else "")
                + ("_notp" if args.no_tp else ""))
         out_path = os.path.join(args.out, tag + ".json")
         try:
             res = dryrun_one(arch, shape, mesh_kind, mix_override=args.mix,
                              save_hlo=args.save_hlo,
-                             tp=False if args.no_tp else None)
+                             tp=False if args.no_tp else None,
+                             compress=args.compress,
+                             compress_ratio=args.compress_ratio,
+                             compress_sigma=args.compress_sigma,
+                             error_feedback=args.error_feedback)
             with open(out_path, "w") as f:
                 json.dump(res, f, indent=1)
             print(f"OK   {tag}: compile={res['compile_seconds']}s "

@@ -9,7 +9,11 @@ same code path with the production mesh.  Example:
 
 The combination-step backend is selectable (``--mix dense|sparse|pallas|auto``
 — "pallas" runs the fused mask+mix kernel; see EXPERIMENTS.md §Perf), as is
-the agent-availability model (``--participation-process iid|markov|cyclic``).
+the agent-availability model (``--participation-process iid|markov|cyclic``)
+and the communication compressor (``--compress topk|randk|int8|gauss`` with
+``--compress-ratio`` and ``--error-feedback``; with ``--mix pallas
+--compress int8`` the fused dequantize+mix kernel runs.  See EXPERIMENTS.md
+§Compression).
 """
 from __future__ import annotations
 
@@ -45,12 +49,19 @@ def make_process(kind: str, q: float, agents: int, *, markov_corr: float = 0.5,
 def build(arch: str, smoke: bool, agents: int, local_steps: int,
           step_size: float, topology: str, participation: float,
           optimizer: str, mix: str, process_kind: str = "iid",
-          markov_corr: float = 0.5, num_groups: int = 2):
+          markov_corr: float = 0.5, num_groups: int = 2,
+          compress: str = "none", compress_ratio: float = 1.0,
+          error_feedback: bool = False, comm_gamma: float | None = None,
+          compress_sigma: float = 0.0):
     bundle = get_config(arch)
     cfg = bundle.smoke if smoke else bundle.model
     dcfg = DiffusionConfig(num_agents=agents, local_steps=local_steps,
                            step_size=step_size, topology=topology,
-                           participation=participation, mix=mix)
+                           participation=participation, mix=mix,
+                           compress=compress, compress_ratio=compress_ratio,
+                           compress_sigma=compress_sigma,
+                           error_feedback=error_feedback,
+                           comm_gamma=comm_gamma)
     topo = dcfg.make_topology() if agents > 1 else None
     A = jnp.asarray(topo.A, jnp.float32) if topo else jnp.eye(1)
     process = make_process(process_kind, participation, agents,
@@ -94,6 +105,21 @@ def main():
     ap.add_argument("--mix", default="dense",
                     choices=["dense", "sparse", "pallas", "auto"],
                     help="combination-step backend (core/mixing.py)")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "topk", "randk", "int8", "gauss"],
+                    help="communication compressor (core/compression.py)")
+    ap.add_argument("--compress-ratio", type=float, default=0.1,
+                    help="kept coordinate fraction for --compress "
+                         "topk|randk|gauss")
+    ap.add_argument("--compress-sigma", type=float, default=0.0,
+                    help="Gaussian-mask noise scale for --compress gauss "
+                         "(the DP knob; 0 = pure rand-k)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="thread the EF residual memory through the block "
+                         "step (direct mode, e.g. --compress int8)")
+    ap.add_argument("--comm-gamma", type=float, default=None,
+                    help="consensus step size of the compressed exchange "
+                         "(default: auto — see core/mixing.CommPipeline)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=1)
@@ -102,7 +128,9 @@ def main():
     cfg, dcfg, block_step, opt, process = build(
         args.arch, args.smoke, args.agents, args.local_steps, args.step_size,
         args.topology, args.participation, args.optimizer, args.mix,
-        args.participation_process, args.markov_corr, args.num_groups)
+        args.participation_process, args.markov_corr, args.num_groups,
+        args.compress, args.compress_ratio, args.error_feedback,
+        args.comm_gamma, args.compress_sigma)
 
     key = jax.random.PRNGKey(args.seed)
     K, T = args.agents, args.local_steps
@@ -111,17 +139,35 @@ def main():
     # state leaves mirror the stacked (K, ...) layout; step counter is shared
     opt_state = opt.init(params) if args.optimizer != "sgd" else None
     part_state = process.init_state(jax.random.fold_in(key, 0x5EED))
+    pipeline = block_step.pipeline
+    comm_state = pipeline.init_state(params) if pipeline.stateful else ()
+    if args.compress != "none":
+        from repro.core.compression import dense_wire_bytes
+        wire = pipeline.wire_bytes(params)
+        if wire == 0:
+            # K = 1 forces mix="none": no combination step, nothing moves
+            print("comm: single agent — mixing disabled, compression inert")
+        else:
+            dense_wire = dense_wire_bytes(params)
+            # pipeline.compressor reflects what actually runs (diff mode
+            # unwraps the EF wrapper: the reference IS the feedback there)
+            print(f"comm: {pipeline.compressor.name} "
+                  f"ratio={args.compress_ratio} "
+                  f"mode={pipeline.mode} gamma={pipeline.gamma}  "
+                  f"{wire / 1e6:.2f} MB/combination on the wire "
+                  f"({dense_wire / wire:.1f}x below dense f32)")
 
     jit_step = jax.jit(block_step)
 
     def sample_block(k):
+        k_tok, k_img = jax.random.split(k)
         shape = (T, K, args.batch, args.seq)
         if cfg.num_codebooks:
             shape = shape + (cfg.num_codebooks,)
-        batch = lm_token_batch(k, shape, cfg.vocab_size)
+        batch = lm_token_batch(k_tok, shape, cfg.vocab_size)
         if cfg.img_tokens:
             batch["img_embeds"] = jax.random.normal(
-                k, (T, K, args.batch, cfg.img_tokens, tf.VISION_DIM),
+                k_img, (T, K, args.batch, cfg.img_tokens, tf.VISION_DIM),
                 jnp.float32) * 0.02
         return batch
 
@@ -131,11 +177,19 @@ def main():
     for i in range(args.blocks):
         key, kb, ks = jax.random.split(key, 3)
         batch = sample_block(kb)
+        # state args mirror the make_block_step signature matrix:
+        # [part_state][comm_state] between opt_state and key
+        state_args = []
         if process.stateful:
-            params, opt_state, part_state, active = jit_step(
-                params, opt_state, part_state, ks, batch)
-        else:
-            params, opt_state, active = jit_step(params, opt_state, ks, batch)
+            state_args.append(part_state)
+        if pipeline.stateful:
+            state_args.append(comm_state)
+        out = jit_step(params, opt_state, *state_args, ks, batch)
+        params, opt_state, *states, active = out
+        if process.stateful:
+            part_state = states.pop(0)
+        if pipeline.stateful:
+            comm_state = states.pop(0)
         if i % args.log_every == 0:
             losses = eval_loss(params, jax.tree.map(lambda x: x[0], batch))
             print(f"block {i:4d}  active={int(active.sum())}/{K}  "

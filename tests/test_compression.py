@@ -1,0 +1,461 @@
+"""CommPipeline + compressors (core/compression.py, core/mixing.py): the
+ratio-1.0 / identity parity gates, the fused int8 Pallas path, eq.-20
+invariants under real compression, comm-state threading through both
+engines, wire-bytes accounting, and the compressed variants factories."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CommPipeline, CompressedGradients, CyclicGroups,
+                        DiffusionConfig, DiffusionEngine, ErrorFeedback,
+                        GaussianMask, Identity, Int8Stochastic, RandK, TopK,
+                        dense_wire_bytes, make_compressor, make_mixer,
+                        make_pipeline, make_topology, masked_combination)
+from repro.core import variants
+from repro.core.sharded import make_block_step
+from repro.data.synthetic import make_block_sampler, make_regression_problem
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_tree(key, K):
+    ks = jax.random.split(key, 3)
+    return {"w": jax.random.normal(ks[0], (K, 7, 3)),
+            "b": jax.random.normal(ks[1], (K, 5)),
+            "s": jax.random.normal(ks[2], (K, 2, 2, 2))}
+
+
+# ---------------------------------------------------------------------------
+# parity gates: identity is bit-identical, ratio=1.0 matches to tolerance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,K", [("ring", 8), ("grid", 12)])
+def test_identity_pipeline_bit_identical(kind, K):
+    """compress="none" must be *bit-identical* to the bare mixer (the
+    pipeline short-circuits; the Mixer contract is untouched)."""
+    topo = make_topology(kind, K)
+    for seed in range(4):
+        key = jax.random.fold_in(KEY, seed)
+        params = _rand_tree(key, K)
+        m = jax.random.bernoulli(key, 0.6, (K,)).astype(jnp.float32)
+        for mix in ("dense", "sparse"):
+            ref = make_mixer(mix, topo)(params, m)
+            out, state = make_pipeline(mix, topo)(params, m)
+            assert state == ()
+            for lr, lo in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+                np.testing.assert_array_equal(np.asarray(lo), np.asarray(lr))
+
+
+@pytest.mark.parametrize("compress", ["topk", "randk", "gauss"])
+@pytest.mark.parametrize("kind,K", [("ring", 8), ("grid", 12)])
+def test_ratio_one_matches_dense_mixer(compress, kind, K):
+    """Acceptance gate: every compressor at ratio=1.0 equals the
+    uncompressed dense mixer to float tolerance under random masks (the
+    sparsifiers run diff mode, whose auto gamma is 1.0 at lossless ratio
+    and whose reference tracks psi exactly)."""
+    topo = make_topology(kind, K)
+    dense = make_mixer("dense", topo)
+    pipe = make_pipeline("dense", topo, compress=compress,
+                         compress_ratio=1.0)
+    assert pipe.gamma == 1.0
+    state = None
+    for seed in range(4):
+        key = jax.random.fold_in(KEY, seed)
+        params = _rand_tree(key, K)
+        if state is None:
+            state = pipe.init_state(params)
+        m = jax.random.bernoulli(key, 0.6, (K,)).astype(jnp.float32)
+        ref = dense(params, m)
+        out, state = pipe(params, m, state,
+                          jax.random.fold_in(KEY, 100 + seed))
+        for lr, lo in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+            np.testing.assert_allclose(np.asarray(lo), np.asarray(lr),
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"{compress} ({kind})")
+
+
+@pytest.mark.parametrize("compress,ratio,ef,mode", [
+    ("topk", 0.3, False, "auto"), ("randk", 0.3, False, "auto"),
+    ("gauss", 0.3, False, "auto"), ("int8", 1.0, True, "auto"),
+    ("int8", 1.0, False, "auto"), ("topk", 0.3, True, "direct"),
+])
+def test_eq20_invariants_under_compression(compress, ratio, ef, mode):
+    """Both exchange modes preserve the eq.-20 invariants for ANY
+    compressor: inactive agents keep their parameters exactly;
+    doubly-stochastic mixing preserves the network mean."""
+    K = 8
+    topo = make_topology("ring", K)
+    pipe = make_pipeline("dense", topo, compress=compress,
+                         compress_ratio=ratio, error_feedback=ef,
+                         mode=mode)
+    params = _rand_tree(KEY, K)
+    state = pipe.init_state(params)
+    m = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
+    # two rounds so diff mode runs once with a warm reference too
+    for step in range(2):
+        prev_state = state
+        out, state = pipe(params, m, state, jax.random.PRNGKey(9 + step))
+        for li, lo in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+            for k in (1, 4):   # inactive agents frozen
+                np.testing.assert_allclose(np.asarray(lo[k]),
+                                           np.asarray(li[k]), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(lo.mean(0)),
+                                       np.asarray(li.mean(0)), atol=1e-4)
+        # inactive agents transmit nothing: their reference copies / EF
+        # residual slices must not move either
+        for ls_new, ls_old in zip(jax.tree.leaves(state),
+                                  jax.tree.leaves(prev_state)):
+            for k in (1, 4):
+                np.testing.assert_array_equal(np.asarray(ls_new[k]),
+                                              np.asarray(ls_old[k]))
+
+
+def test_pipeline_mode_resolution_and_gamma():
+    """auto mode: identity for none, diff for sparsifiers (with
+    ratio-scaled gamma), direct for int8; explicit overrides validated."""
+    topo = make_topology("ring", 8)
+    p = make_pipeline("dense", topo)
+    assert p.mode == "identity" and not p.stateful and p.gamma == 1.0
+    p = make_pipeline("dense", topo, compress="topk", compress_ratio=0.1)
+    assert p.mode == "diff" and p.stateful and p.gamma == 0.5
+    p = make_pipeline("dense", topo, compress="randk", compress_ratio=0.1)
+    assert p.mode == "diff" and p.gamma == pytest.approx(0.1)
+    p = make_pipeline("dense", topo, compress="gauss", compress_ratio=0.25)
+    assert p.mode == "diff" and p.gamma == pytest.approx(0.25)
+    p = make_pipeline("dense", topo, compress="int8")
+    assert p.mode == "direct" and not p.stateful and p.gamma == 1.0
+    p = make_pipeline("dense", topo, compress="int8", error_feedback=True)
+    assert p.mode == "direct" and p.stateful
+    # diff mode unwraps the EF wrapper (the reference IS the feedback);
+    # the wrapper would otherwise sit there silently unused
+    p = make_pipeline("dense", topo, compress="topk", compress_ratio=0.1,
+                      error_feedback=True)
+    assert p.mode == "diff" and isinstance(p.compressor, TopK)
+    p = make_pipeline("dense", topo, compress="topk", compress_ratio=0.1,
+                      mode="direct", error_feedback=True, gamma=0.7)
+    assert p.mode == "direct" and p.stateful and p.gamma == 0.7
+    with pytest.raises(ValueError):
+        make_pipeline("dense", topo, mode="nope")
+    with pytest.raises(ValueError):   # identity mode needs Identity
+        make_pipeline("dense", topo, compress="topk", mode="identity")
+
+
+def test_diff_mode_reference_tracks_params():
+    """The diff-mode reference converges to the transmitted iterate on a
+    fixed signal (implicit error feedback), so the compression error —
+    and hence the exchange perturbation — vanishes."""
+    K = 8
+    topo = make_topology("ring", K)
+    pipe = make_pipeline("dense", topo, compress="topk", compress_ratio=0.25)
+    params = _rand_tree(KEY, K)
+    state = pipe.init_state(params)
+    m = jnp.ones((K,))
+    gaps = []
+    for i in range(12):
+        _, state = pipe(params, m, state, jax.random.fold_in(KEY, i))
+        gaps.append(max(float(jnp.abs(p - r).max()) for p, r in
+                        zip(jax.tree.leaves(params),
+                            jax.tree.leaves(state["ref"]))))
+    assert gaps[-1] < 1e-5 * max(gaps[0], 1.0)
+
+
+def test_int8_pipeline_error_is_quantization_bounded():
+    """int8 output stays within a few quantization steps of the dense
+    uncompressed combination (|mix(c) - c - (mix(p) - p)| <= 2 max|c - p|),
+    on both the generic dense path and the fused Pallas path."""
+    K = 8
+    topo = make_topology("ring", K)
+    params = _rand_tree(KEY, K)
+    m = jax.random.bernoulli(KEY, 0.7, (K,)).astype(jnp.float32)
+    ref = make_mixer("dense", topo)(params, m)
+    amax = max(float(jnp.abs(l).max()) for l in jax.tree.leaves(params))
+    tol = 4.0 * amax / 127.0
+    for mix in ("dense", "pallas"):
+        pipe = make_pipeline(mix, topo, compress="int8", tile_m=128,
+                             interpret=True)
+        out, _ = pipe(params, m, (), jax.random.PRNGKey(5))
+        for lr, lo in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+            assert np.abs(np.asarray(lo) - np.asarray(lr)).max() < tol, mix
+
+
+# ---------------------------------------------------------------------------
+# fused int8 kernel vs reference dequantize-then-mix (acceptance gate)
+# ---------------------------------------------------------------------------
+
+def test_fused_int8_kernel_matches_reference():
+    """diffusion_mix_int8 in interpret mode == dequantize then mix_dense."""
+    from repro.kernels.diffusion_mix import diffusion_mix_int8
+
+    K, M, tile = 8, 512, 128
+    topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
+    nm = M // tile
+    W = jax.random.normal(KEY, (K, M))
+    tiles = W.reshape(K, nm, tile)
+    amax = jnp.abs(tiles).max(axis=2)
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0)
+    u = jax.random.uniform(jax.random.PRNGKey(1), tiles.shape)
+    q = jnp.clip(jnp.floor(tiles / scales[:, :, None] + u),
+                 -127, 127).astype(jnp.int8)
+    Wq = q.reshape(K, M)
+    deq = (q.astype(jnp.float32) * scales[:, :, None]).reshape(K, M)
+    for seed in range(3):
+        m = jax.random.bernoulli(jax.random.fold_in(KEY, seed),
+                                 0.6, (K,)).astype(jnp.float32)
+        ref = masked_combination(A, m).T @ deq
+        out = diffusion_mix_int8(A, m, Wq, scales, tile_m=tile,
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-5)
+        delta = diffusion_mix_int8(A, m, Wq, scales, tile_m=tile,
+                                   interpret=True, subtract_identity=True)
+        np.testing.assert_allclose(np.asarray(delta),
+                                   np.asarray(ref - deq),
+                                   atol=1e-4, rtol=1e-5)
+
+
+def test_fused_int8_kernel_validation():
+    from repro.kernels.diffusion_mix import diffusion_mix_int8
+    K, M = 4, 256
+    A = jnp.eye(K)
+    m = jnp.ones((K,))
+    with pytest.raises(ValueError):   # not int8
+        diffusion_mix_int8(A, m, jnp.zeros((K, M)), jnp.ones((K, 2)),
+                           tile_m=128, interpret=True)
+    with pytest.raises(ValueError):   # bad scales shape
+        diffusion_mix_int8(A, m, jnp.zeros((K, M), jnp.int8),
+                           jnp.ones((K, 3)), tile_m=128, interpret=True)
+
+
+def test_pallas_int8_pipeline_threads_error_feedback():
+    """Fused path with EF: the residual equals target - dequantized
+    messages, so one round of EF makes the next message recover the drop."""
+    K = 4
+    topo = make_topology("ring", K)
+    pipe = make_pipeline("pallas", topo, compress="int8",
+                         error_feedback=True, tile_m=128, interpret=True)
+    params = _rand_tree(KEY, K)
+    state = pipe.init_state(params)
+    for l in jax.tree.leaves(state):
+        assert not np.asarray(l).any()
+    m = jnp.ones((K,))
+    out, state = pipe(params, m, state, jax.random.PRNGKey(3))
+    # residual is bounded by one quantization step per coordinate
+    for lp, ls in zip(jax.tree.leaves(params), jax.tree.leaves(state)):
+        step = np.abs(np.asarray(lp)).max() / 127.0 + 1e-6
+        assert np.abs(np.asarray(ls)).max() <= 2 * step
+
+
+# ---------------------------------------------------------------------------
+# engine threading (stacked + sharded)
+# ---------------------------------------------------------------------------
+
+def test_engine_stateful_pipeline_requires_comm_step():
+    data = make_regression_problem(K=4, N=20)
+    cfg = DiffusionConfig(num_agents=4, compress="topk", compress_ratio=0.5,
+                          error_feedback=True)
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    sampler = make_block_sampler(data, T=1, batch=1)
+    batch = sampler(KEY)
+    params = jnp.zeros((4, 2))
+    with pytest.raises(ValueError):
+        eng.block_step(params, None, KEY, batch)
+    with pytest.raises(ValueError):
+        eng.block_step_stateful(params, None, (), KEY, batch)
+    # block_step_comm threads the memory
+    comm = eng.pipeline.init_state(params)
+    p, _, _, comm, active = eng.block_step_comm(params, None, (), comm,
+                                                KEY, batch)
+    assert jax.tree.leaves(comm)[0].shape == (4, 2)
+
+
+def test_engine_run_threads_comm_state_and_converges():
+    """run() auto-threads the EF memory; top-k(0.5)+EF converges on the
+    regression problem (the EF property that makes biased compressors
+    usable)."""
+    K = 8
+    data = make_regression_problem(K=K, N=60, M=2, rho=0.1, seed=0)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.8,
+                          compress="topk", compress_ratio=0.5,
+                          error_feedback=True)
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    w_o = data.problem().w_opt(np.full(K, 0.8))
+    sampler = make_block_sampler(data, T=2, batch=1)
+    params = jnp.full((K, 2), 3.0)
+    _, _, hist = eng.run(params, sampler, 300, seed=0,
+                         w_star=jnp.asarray(w_o))
+    assert np.mean(hist[-30:]) < 0.05 * hist[0]
+
+
+def test_sharded_signature_matrix():
+    """make_block_step inserts part_state / comm_state between opt_state
+    and key exactly per the documented signature matrix."""
+    K = 6
+    data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=3)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.5)
+    topo = cfg.make_topology()
+    loss3 = lambda p, b, rng: data.loss_fn()(p, b)
+    sampler = make_block_sampler(data, T=2, batch=1)
+    batch = sampler(jax.random.PRNGKey(7))
+    p0 = jnp.zeros((K, 2))
+    proc = CyclicGroups(K, 3)
+
+    s = make_block_step(loss3, cfg, topology=topo)
+    assert not s.comm_stateful
+    p, _, a = jax.jit(s)(p0, None, KEY, batch)
+
+    s = make_block_step(loss3, cfg, topology=topo, compress="int8",
+                        error_feedback=True)
+    assert s.comm_stateful
+    cs = s.pipeline.init_state(p0)
+    p, _, cs, a = jax.jit(s)(p0, None, cs, KEY, batch)
+    assert cs.shape == p0.shape
+
+    # sparsifier without EF: diff mode carries the reference copy
+    s = make_block_step(loss3, cfg, topology=topo, compress="randk",
+                        compress_ratio=0.5)
+    assert s.comm_stateful and s.pipeline.mode == "diff"
+    cs = s.pipeline.init_state(p0)
+    p, _, cs, a = jax.jit(s)(p0, None, cs, KEY, batch)
+    assert cs["ref"].shape == p0.shape
+
+    s = make_block_step(loss3, cfg, topology=topo, participation=proc,
+                        compress="int8")   # direct mode, no EF: stateless
+    assert not s.comm_stateful
+    ps = proc.init_state(None)
+    p, _, ps, a = jax.jit(s)(p0, None, ps, KEY, batch)
+
+    s = make_block_step(loss3, cfg, topology=topo, participation=proc,
+                        compress="topk", compress_ratio=0.5,
+                        error_feedback=True)
+    ps, cs = proc.init_state(None), s.pipeline.init_state(p0)
+    masks = []
+    step = jax.jit(s)
+    for i in range(3):
+        p0, _, ps, cs, a = step(p0, None, ps, cs, jax.random.PRNGKey(i),
+                                batch)
+        masks.append(np.asarray(a))
+    assert int(ps) == 3
+    np.testing.assert_array_equal(np.stack(masks).sum(0), np.ones(K))
+
+
+def test_sharded_compress_none_bit_identical():
+    """The refactored step with compress="none" returns bit-identical
+    params to the same step built without compression kwargs."""
+    K = 6
+    data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=3)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.5)
+    topo = cfg.make_topology()
+    loss3 = lambda p, b, rng: data.loss_fn()(p, b)
+    sampler = make_block_sampler(data, T=2, batch=1)
+    batch = sampler(jax.random.PRNGKey(7))
+    p0 = jnp.zeros((K, 2))
+    pa, _, aa = jax.jit(make_block_step(loss3, cfg, topology=topo))(
+        p0, None, KEY, batch)
+    pb, _, ab = jax.jit(make_block_step(loss3, cfg, topology=topo,
+                                        compress="none"))(p0, None, KEY,
+                                                          batch)
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(aa), np.asarray(ab))
+
+
+# ---------------------------------------------------------------------------
+# wire accounting + factories + gradient compression
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_accounting():
+    tree = {"w": jnp.zeros((4, 1000)), "v": jnp.zeros((4, 200))}
+    dense = dense_wire_bytes(tree)
+    assert dense == 4 * 4 * 1200
+    assert dense / make_compressor("int8").wire_bytes(tree) == 4.0
+    assert dense / make_compressor("topk", ratio=0.1).wire_bytes(tree) == 10.0
+    assert dense / make_compressor("randk", ratio=0.1,
+                                   error_feedback=True).wire_bytes(tree) == 10.0
+    assert make_compressor("none").wire_bytes(tree) == dense
+    # NullMixer pipeline moves nothing, carries nothing, threads nothing
+    pipe = CommPipeline(make_mixer("none", None, num_agents=1),
+                        make_compressor("topk", ratio=0.1))
+    assert pipe.wire_bytes(tree) == 0
+    assert not pipe.stateful and pipe.init_state(tree) == ()
+
+
+def test_make_compressor_validation_and_passthrough():
+    c = make_compressor("topk", ratio=0.25)
+    assert isinstance(c, TopK) and c.ratio == 0.25
+    assert isinstance(make_compressor(None), Identity)
+    assert make_compressor(c) is c
+    wrapped = make_compressor(c, error_feedback=True)
+    assert isinstance(wrapped, ErrorFeedback) and wrapped.inner is c
+    assert wrapped.name == "topk+ef" and wrapped.stateful
+    # already-stateful compressors are not double-wrapped
+    assert make_compressor(wrapped, error_feedback=True) is wrapped
+    # Identity is never EF-wrapped (residual is identically zero): "none"
+    # + error_feedback stays the stateless bit-identical pipeline
+    assert isinstance(make_compressor("none", error_feedback=True), Identity)
+    assert isinstance(make_compressor("gauss", ratio=0.5, sigma=0.1),
+                      GaussianMask)
+    with pytest.raises(ValueError):
+        make_compressor("nope")
+    with pytest.raises(ValueError):
+        make_compressor("topk", ratio=0.0)
+    with pytest.raises(ValueError):
+        make_compressor("randk", ratio=1.5)
+    with pytest.raises(ValueError):
+        GaussianMask(0.5, sigma=-1.0)
+    with pytest.raises(ValueError):
+        ErrorFeedback(wrapped)
+    with pytest.raises(ValueError):   # key-needing compressor without key
+        RandK(0.5).encode({"w": jnp.zeros((2, 4))}, ())
+    with pytest.raises(ValueError):
+        make_pipeline("dense", make_topology("ring", 4),
+                      compress="int8")({"w": jnp.zeros((4, 4))},
+                                       jnp.ones((4,)))
+
+
+def test_compressed_variants_factories():
+    cfg = variants.compressed_diffusion(8, mu=0.01, compress="topk",
+                                        ratio=0.2, error_feedback=True)
+    assert (cfg.compress, cfg.compress_ratio, cfg.error_feedback) == \
+        ("topk", 0.2, True)
+    assert cfg.local_steps == 1 and cfg.topology == "ring"
+    # compress="none" recovers asynchronous diffusion exactly
+    base = variants.asynchronous_diffusion(8, mu=0.01, q=0.5)
+    none = variants.compressed_diffusion(8, mu=0.01, q=0.5, compress="none",
+                                         ratio=1.0, error_feedback=False)
+    assert none == base
+    fa = variants.compressed_fedavg(8, T=5, mu=0.01, q=0.6)
+    assert fa.topology == "fedavg" and fa.compress == "int8"
+    assert fa.error_feedback
+    # compress="none" with the factory's default error_feedback=True is
+    # still the stateless identity pipeline (Identity never EF-wraps)
+    data = make_regression_problem(K=8, N=20)
+    eng = DiffusionEngine(variants.compressed_diffusion(
+        8, mu=0.01, compress="none"), data.loss_fn())
+    assert eng.pipeline.mode == "identity" and not eng.pipeline.stateful
+    # the Gaussian-mask sigma knob threads from the config to the encoder
+    eng = DiffusionEngine(variants.compressed_diffusion(
+        8, mu=0.01, compress="gauss", ratio=0.5, sigma=0.3,
+        error_feedback=False), data.loss_fn())
+    assert eng.pipeline.compressor.sigma == 0.3
+
+
+def test_compressed_gradients_transform():
+    """CompressedGradients implements the grad_transform protocol and the
+    engine still converges with rand-k gradients inside the local steps."""
+    K = 8
+    data = make_regression_problem(K=K, N=60, M=2, rho=0.1, seed=1)
+    cg = CompressedGradients(make_compressor("randk", ratio=0.5), seed=3)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
+                          topology="ring", participation=0.9)
+    eng = DiffusionEngine(cfg, data.loss_fn(), grad_transform=cg)
+    w_o = data.problem().w_opt(np.full(K, 0.9))
+    sampler = make_block_sampler(data, T=2, batch=2)
+    params = jnp.full((K, 2), 3.0)
+    opt_state = cg.init(params)
+    _, _, hist = eng.run(params, sampler, 300, seed=0,
+                         opt_state=opt_state, w_star=jnp.asarray(w_o))
+    assert np.mean(hist[-30:]) < 0.05 * hist[0]

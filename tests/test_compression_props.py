@@ -1,0 +1,89 @@
+"""Property-based guarantees of the compressors (via the tests/_hyp shim):
+unbiasedness of the stochastic compressors and the bounded/vanishing
+error-feedback residual that makes biased top-k convergent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import given, settings, st
+from repro.core.compression import (ErrorFeedback, GaussianMask,
+                                    Int8Stochastic, RandK, TopK)
+
+
+def _vector(seed: int, n: int = 128, scale: float = 3.0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, (1, n)), jnp.float32)
+
+
+def _mean_encoded(comp, x, n_keys: int, seed0: int) -> np.ndarray:
+    def one(key):
+        msgs, _ = comp.encode({"x": x}, (), key)
+        return msgs["x"]
+    keys = jax.random.split(jax.random.PRNGKey(seed0), n_keys)
+    return np.asarray(jax.vmap(one)(keys)).mean(axis=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_stochastic_unbiased(seed):
+    """E[round_stochastic(x/s)*s] = x: the empirical mean over many keys
+    converges to x within a few standard errors (per-coordinate rounding
+    noise is at most one quantization step s = max|x|/127)."""
+    x = _vector(seed)
+    n_keys = 512
+    mean = _mean_encoded(Int8Stochastic(), x, n_keys, seed + 1)
+    step = float(jnp.abs(x).max()) / 127.0
+    tol = 6.0 * step / np.sqrt(n_keys) + 1e-7
+    np.testing.assert_allclose(mean, np.asarray(x), atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_randk_unbiased(seed):
+    """E[(n/k) mask * x] = x: the n/k rescale exactly cancels the k/n
+    selection probability of the uniform subset."""
+    n, ratio = 64, 0.25
+    x = _vector(seed, n=n)
+    n_keys = 4096
+    mean = _mean_encoded(RandK(ratio), x, n_keys, seed + 1)
+    # per-coordinate variance: x_i^2 (n/k - 1); tolerance at 6 sigma
+    sd = np.abs(np.asarray(x)) * np.sqrt(1.0 / ratio - 1.0)
+    tol = 6.0 * sd / np.sqrt(n_keys) + 1e-6
+    assert (np.abs(mean - np.asarray(x)) <= tol).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_gaussian_mask_sigma0_is_randk(seed):
+    x = _vector(seed, n=64)
+    key = jax.random.PRNGKey(seed + 7)
+    g, _ = GaussianMask(0.25, sigma=0.0).encode({"x": x}, (), key)
+    r, _ = RandK(0.25).encode({"x": x}, (), key)
+    np.testing.assert_allclose(np.asarray(g["x"]), np.asarray(r["x"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_topk_error_feedback_residual_vanishes(seed):
+    """On a fixed vector sequence, top-k + EF has (a) uniformly bounded
+    residual ||e_t|| and (b) time-averaged transmitted messages converging
+    to the true signal at rate O(1/T) — the 'vanishing residual' property:
+    every dropped coordinate is eventually retransmitted."""
+    n, ratio, T = 64, 0.25, 200
+    x = _vector(seed, n=n)
+    comp = ErrorFeedback(TopK(ratio))
+    state = comp.init_state({"x": x})
+    total = np.zeros_like(np.asarray(x))
+    norms = []
+    for _ in range(T):
+        msgs, state = comp.encode({"x": x}, state)
+        total += np.asarray(msgs["x"])
+        norms.append(float(jnp.linalg.norm(state["x"])))
+    x_norm = float(jnp.linalg.norm(x)) + 1e-9
+    # (a) bounded: the EF contraction keeps ||e_t|| <= ||x|| / delta with
+    # delta = k/n; allow that worst case with slack
+    assert max(norms) <= (2.0 / ratio) * x_norm
+    # (b) vanishing: mean transmitted -> x  (error = e_T / T)
+    mean_err = np.linalg.norm(total / T - np.asarray(x))
+    assert mean_err <= max(norms) / T + 1e-6
+    assert mean_err <= 0.05 * x_norm
