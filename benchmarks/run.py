@@ -188,15 +188,15 @@ def bench_drift_correction():
                               drift_correction=corr)  # T=1: the paper derives eq. 38 at T=1
         eng = DiffusionEngine(cfg, data.loss_fn())
         sampler = make_block_sampler(data, T=1, batch=8)
-        params = jnp.zeros((K, 2))
+        state = eng.init_state(jnp.zeros((K, 2)))
         key = jax.random.PRNGKey(0)
         t0 = time.time()
         acc, n_acc = np.zeros(2), 0
         for i in range(blocks):
             key, kb, ks = jax.random.split(key, 3)
-            params, _, _ = eng.block_step(params, None, ks, sampler(kb))
+            state, _ = eng.step(state, sampler(kb), ks)
             if i >= blocks // 2:   # time-average the network mean
-                acc += np.asarray(params).mean(0)
+                acc += np.asarray(state.params).mean(0)
                 n_acc += 1
         us = (time.time() - t0) / blocks * 1e6
         w_bar = acc / n_acc
@@ -282,21 +282,20 @@ def bench_markov_participation():
     for corr in (0.0, 0.5, 0.9):
         process = schedules.MarkovAvailability(q, corr, num_agents=K)
         eng = DiffusionEngine(cfg, data.loss_fn(), participation=process)
-        state = process.init_state(jax.random.PRNGKey(1))
-        params = jnp.zeros((K, 2))
+        state = eng.init_state(jnp.zeros((K, 2)),
+                               key=jax.random.PRNGKey(1))
         # warm the jit cache (fresh engine per corr = fresh static-arg entry)
         # outside the timed region; discard the outputs
-        eng.block_step_stateful(params, None, state, jax.random.PRNGKey(9),
-                                sampler(jax.random.PRNGKey(8)))
+        eng.step(state, sampler(jax.random.PRNGKey(8)),
+                 jax.random.PRNGKey(9))
         t0 = time.time()
         msds = []
         key = jax.random.PRNGKey(0)
         for i in range(blocks):
             key, kb, ks = jax.random.split(key, 3)
-            params, _, state, _ = eng.block_step_stateful(
-                params, None, state, ks, sampler(kb))
+            state, _ = eng.step(state, sampler(kb), ks)
             if i >= blocks * 3 // 4:
-                msds.append(float(network_msd(params, w_o)))
+                msds.append(float(network_msd(state.params, w_o)))
         us = (time.time() - t0) / blocks * 1e6
         _row(f"markov_corr{corr}", us,
              f"sim={np.mean(msds):.4e};iid_theory={th:.4e};"
@@ -316,20 +315,21 @@ def bench_exact_diffusion():
                                    noise_high=0.05, w_star_spread=0.5)
     prob = data.problem()
     w_o = prob.w_opt(None)
-    cfg = vanilla_diffusion(K, mu=0.01, topology="ring")
+    spec = vanilla_diffusion(K, mu=0.01, topology="ring")
+    cfg = spec.to_diffusion_config()
     sampler = make_block_sampler(data, T=1, batch=8)
 
     eng_std = DiffusionEngine(cfg, data.loss_fn())
-    params = jnp.zeros((K, 2))
+    state = eng_std.init_state(jnp.zeros((K, 2)))
     key = jax.random.PRNGKey(0)
     import time as _t
     t0 = _t.time()
     acc_s = np.zeros(2); n = 0
     for i in range(blocks):
         key, kb, ks = jax.random.split(key, 3)
-        params, _, _ = eng_std.block_step(params, None, ks, sampler(kb))
+        state, _ = eng_std.step(state, sampler(kb), ks)
         if i >= blocks // 2:
-            acc_s += np.asarray(params).mean(0); n += 1
+            acc_s += np.asarray(state.params).mean(0); n += 1
     us = (_t.time() - t0) / blocks * 1e6
     d_std = np.linalg.norm(acc_s / n - w_o)
     _row("exact_diff_baseline", us, f"dist_to_wopt={d_std:.5f}")
@@ -416,18 +416,20 @@ def bench_mix_backends():
 
     flat = {}
     for name in ("dense", "sparse", "pallas"):
-        step = jax.jit(make_block_step(loss_fn, dcfg, mix=name,
-                                       topology=topo, tile_m=2048))
-        p, _, _ = step(params, None, key, data)     # compile + warm
-        jax.block_until_ready(p)
+        block_step = make_block_step(loss_fn, dcfg, mix=name,
+                                     topology=topo, tile_m=2048)
+        step = jax.jit(block_step)
+        st0 = block_step.init_state(params)
+        st, _ = step(st0, data, key)                # compile + warm
+        jax.block_until_ready(st.params)
         t0 = time.time()
         for _ in range(reps):
-            p, _, _ = step(params, None, key, data)
-            jax.block_until_ready(p)
+            st, _ = step(st0, data, key)
+            jax.block_until_ready(st.params)
         us = (time.time() - t0) / reps * 1e6
         flat[name] = np.concatenate(
             [np.asarray(l, np.float32).reshape(K, -1)
-             for l in jax.tree.leaves(p)], axis=1)
+             for l in jax.tree.leaves(st.params)], axis=1)
         _row(f"mix_backend_{name}", us, f"K={K};params={n_params}")
     err_s = float(np.abs(flat["sparse"] - flat["dense"]).max())
     err_p = float(np.abs(flat["pallas"] - flat["dense"]).max())
@@ -484,14 +486,13 @@ def bench_compression():
         wire = step.pipeline.wire_bytes(params)
         ratios[label] = dense_bytes / max(wire, 1)
         jit_step = jax.jit(step)
-        state_args = ((step.pipeline.init_state(params),)
-                      if step.comm_stateful else ())
-        out = jit_step(params, None, *state_args, key, data)   # compile
-        jax.block_until_ready(out[0])
+        st0 = step.init_state(params)
+        out, _ = jit_step(st0, data, key)                      # compile
+        jax.block_until_ready(out.params)
         t0 = time.time()
         for _ in range(reps):
-            out = jit_step(params, None, *state_args, key, data)
-            jax.block_until_ready(out[0])
+            out, _ = jit_step(st0, data, key)
+            jax.block_until_ready(out.params)
         us = (time.time() - t0) / reps * 1e6
         _row(f"compress_{label}", us,
              f"wire_bytes={wire};reduction={ratios[label]:.2f}x;"
@@ -594,12 +595,86 @@ ALL_BENCHES = (
 )
 
 
+# ---------------------------------------------------------------------------
+# --check: wall-clock regression gate against the committed trajectory
+# ---------------------------------------------------------------------------
+
+# fail on > 1.5x slowdown vs the committed record; overridable for fleets
+# whose runners are not perf-comparable to the machine that seeded the
+# committed baseline (wall-clock gates only make sense against a baseline
+# recorded on comparable hardware — reseed BENCH_*.json when runners change)
+CHECK_THRESHOLD = float(os.environ.get("REPRO_BENCH_CHECK_THRESHOLD", "1.5"))
+CHECK_FLOOR_US = 1000.0   # only gate rows above 1 ms (below is pure noise)
+
+
+def _committed_baseline(bench_name: str) -> dict | None:
+    """Last committed BENCH_<name>.json record, preferring records from the
+    same speed tier (fast flag) and backend as this run."""
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "results", f"BENCH_{bench_name}.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            history = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return None
+    if not isinstance(history, list) or not history:
+        return None
+    backend = jax.default_backend()
+    for match in (
+        lambda r: r.get("fast") == FAST and r.get("backend") == backend,
+        lambda r: r.get("backend") == backend,
+        lambda r: True,
+    ):
+        hits = [r for r in history if match(r)]
+        if hits:
+            return hits[-1]
+    return None
+
+
+def _check_rows(bench_name: str, rows: list[dict]) -> list[str]:
+    """Compare this run's us_per_call against the committed baseline.
+    Returns human-readable regression descriptions (empty = pass)."""
+    baseline = _committed_baseline(bench_name)
+    if baseline is None:
+        print(f"# check {bench_name}: no committed baseline — skipped")
+        return []
+    base = {r["name"]: r.get("us_per_call", 0.0)
+            for r in baseline.get("rows", [])}
+    regressions = []
+    for r in rows:
+        old = base.get(r["name"], 0.0)
+        new = r.get("us_per_call", 0.0)
+        if old <= 0.0 or new <= 0.0:
+            continue            # untimed/derived rows
+        if max(old, new) < CHECK_FLOOR_US:
+            continue            # both below the noise floor
+        ratio = new / old
+        if ratio > CHECK_THRESHOLD:
+            regressions.append(
+                f"{bench_name}/{r['name']}: {old:.0f}us -> {new:.0f}us "
+                f"({ratio:.2f}x > {CHECK_THRESHOLD}x; baseline "
+                f"{baseline.get('git_rev')})")
+    status = "FAIL" if regressions else "ok"
+    print(f"# check {bench_name}: {status} "
+          f"(baseline {baseline.get('git_rev')}, "
+          f"{len([r for r in rows if r.get('us_per_call', 0) > 0])} timed "
+          f"rows, threshold {CHECK_THRESHOLD}x)")
+    return regressions
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("benches", nargs="*",
                     help="benchmark names to run (default: all); e.g. "
                          "bench_mix_backends")
+    ap.add_argument("--check", action="store_true",
+                    help="compare wall-clock against the last committed "
+                         "benchmarks/results/BENCH_*.json record and exit "
+                         f"nonzero on any > {CHECK_THRESHOLD}x regression "
+                         "(the trajectory file is not appended to)")
     args = ap.parse_args(argv)
     by_name = {f.__name__: f for f in ALL_BENCHES}
     if args.benches:
@@ -612,11 +687,28 @@ def main(argv=None) -> None:
         selected = list(ALL_BENCHES)
     rev = _git_rev()
     print("name,us_per_call,derived")
+    regressions: list[str] = []
     for bench in selected:
         _ROWS.clear()
         bench()
-        _append_bench_json(bench.__name__, list(_ROWS), rev)
+        rows = list(_ROWS)
+        if args.check:
+            # wall-clock is noisy: measure twice, gate on the per-row
+            # minimum (a genuine regression slows BOTH runs down)
+            _ROWS.clear()
+            bench()
+            best = {r["name"]: r["us_per_call"] for r in _ROWS}
+            for r in rows:
+                other = best.get(r["name"], r["us_per_call"])
+                if 0 < other < r["us_per_call"]:
+                    r["us_per_call"] = other
+            regressions += _check_rows(bench.__name__, rows)
+        else:
+            _append_bench_json(bench.__name__, rows, rev)
     _ROWS.clear()
+    if regressions:
+        raise SystemExit("bench regression gate FAILED:\n  "
+                         + "\n  ".join(regressions))
 
 
 if __name__ == "__main__":

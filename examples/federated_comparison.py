@@ -18,8 +18,8 @@ fraction of the bytes — the whole point of compressed diffusion learning.
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import build
 from repro.core import variants
-from repro.core.diffusion import DiffusionEngine
 from repro.data.synthetic import make_block_sampler, make_regression_problem
 
 K = 12
@@ -37,10 +37,10 @@ ALGOS = {
 }
 
 print(f"{'algorithm':30s} {'steady MSD':>12s}  {'vs w_orig':>10s}")
-for name, cfg in ALGOS.items():
-    eng = DiffusionEngine(cfg, data.loss_fn())
-    w_star = prob.w_opt(cfg.q_vector())
-    sampler = make_block_sampler(data, T=cfg.local_steps, batch=1)
+for name, spec in ALGOS.items():
+    eng = build(spec, data.loss_fn())
+    w_star = prob.w_opt(spec.q_vector())
+    sampler = make_block_sampler(data, T=spec.run.local_steps, batch=1)
     params = jnp.zeros((K, 2))
     params, _, hist = eng.run(params, sampler, 1500, seed=0,
                               w_star=jnp.asarray(w_star))
@@ -77,11 +77,11 @@ print(f"{'scheme':12s} {'B/block':>8s}  "
       + f"  {'steady MSD':>12s}")
 steady = {}
 for name, kw in SCHEMES.items():
-    cfg = variants.compressed_diffusion(
+    spec = variants.compressed_diffusion(
         K, mu=0.01, topology="ring", T=1, q=q, compress=kw["compress"],
         ratio=kw["ratio"], error_feedback=kw["error_feedback"])
-    eng = DiffusionEngine(cfg, data2.loss_fn())
-    w_star = prob2.w_opt(cfg.q_vector())
+    eng = build(spec, data2.loss_fn())
+    w_star = prob2.w_opt(spec.q_vector())
     sampler = make_block_sampler(data2, T=1, batch=1)
     params = jnp.zeros((K, M2))
     bytes_per_block = eng.pipeline.wire_bytes(params)

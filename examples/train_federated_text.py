@@ -53,24 +53,26 @@ def main():
                            topology="ring", participation=args.participation)
     topo = dcfg.make_topology()
     opt = adam()
-    step = jax.jit(make_block_step(
+    block_step = make_block_step(
         lambda p, b, r: tf.train_loss(p, cfg, b, remat=False), dcfg,
         jnp.asarray(topo.A, jnp.float32), mix="sparse",
-        offsets=topo.neighbor_offsets_ring(), grad_transform=opt.update))
+        offsets=topo.neighbor_offsets_ring(), grad_transform=opt.update)
+    step = jax.jit(block_step)
 
     key = jax.random.PRNGKey(0)
     params = jax.vmap(lambda k: tf.init_params(k, cfg))(jax.random.split(key, K))
-    state = opt.init(params)
+    state = block_step.init_state(params, opt.init(params))
     eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b,
                                                             remat=False)))
     t0 = time.time()
     for i in range(args.blocks):
         key, ks = jax.random.split(key)
         batch = data.block(i)
-        params, state, active = step(params, state, ks, batch)
+        state, metrics = step(state, batch, ks)
         if i % 10 == 0 or i == args.blocks - 1:
-            per_agent = eval_loss(params, jax.tree.map(lambda x: x[0], batch))
-            print(f"block {i:4d} active={int(active.sum())}/{K} "
+            per_agent = eval_loss(state.params,
+                                  jax.tree.map(lambda x: x[0], batch))
+            print(f"block {i:4d} active={int(metrics['active'].sum())}/{K} "
                   f"loss/agent={[f'{float(l):.3f}' for l in per_agent]} "
                   f"t={time.time() - t0:.1f}s")
 

@@ -42,13 +42,14 @@ def main():
     topo = dcfg.make_topology()
     opt = adam()
     loss_fn = lambda p, b, r: tf.train_loss(p, cfg, b, remat=False)
-    step = jax.jit(make_block_step(
+    block_step = make_block_step(
         loss_fn, dcfg, jnp.asarray(topo.A, jnp.float32), mix="sparse",
-        offsets=topo.neighbor_offsets_ring(), grad_transform=opt.update))
+        offsets=topo.neighbor_offsets_ring(), grad_transform=opt.update)
+    step = jax.jit(block_step)
 
     key = jax.random.PRNGKey(0)
     params = jax.vmap(lambda k: tf.init_params(k, cfg))(jax.random.split(key, K))
-    state = opt.init(params)
+    state = block_step.init_state(params, opt.init(params))
     eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b,
                                                             remat=False)))
     data = lm_token_batch(jax.random.PRNGKey(9), (T, K, args.batch, args.seq),
@@ -56,12 +57,12 @@ def main():
     t0 = time.time()
     for i in range(args.blocks):
         key, ks = jax.random.split(key)
-        params, state, active = step(params, state, ks, data)
+        state, metrics = step(state, data, ks)
         if i % 10 == 0:
-            l = eval_loss(params, jax.tree.map(lambda x: x[0], data))
-            print(f"block {i:4d} active={int(active.sum())}/{K} "
+            l = eval_loss(state.params, jax.tree.map(lambda x: x[0], data))
+            print(f"block {i:4d} active={int(metrics['active'].sum())}/{K} "
                   f"loss={float(l.mean()):.4f} t={time.time()-t0:.1f}s")
-    save_checkpoint(args.checkpoint, params, step=args.blocks,
+    save_checkpoint(args.checkpoint, state.params, step=args.blocks,
                     metadata={"arch": args.arch})
     print("checkpoint saved to", args.checkpoint)
 

@@ -1,0 +1,39 @@
+"""repro.api — the declarative experiment surface.
+
+One spec (:class:`ExperimentSpec` — a frozen, JSON-round-trippable tree of
+sub-specs), one entry point (:func:`build`), one step contract
+(``engine.step(EngineState, batch, key) -> (EngineState, metrics)``).  New
+backends register against the string-keyed registries in
+:mod:`repro.api.build`; the Section-IV variants
+(:mod:`repro.core.variants`) register themselves as named presets, resolved
+through :func:`get_preset` / the launchers' ``--preset`` flag.
+"""
+from repro.api.spec import (  # noqa: F401
+    CompressionSpec,
+    ExperimentSpec,
+    MixerSpec,
+    ModelSpec,
+    OptimizerSpec,
+    ParticipationSpec,
+    PRESETS,
+    Registry,
+    RunSpec,
+    TopologySpec,
+)
+from repro.api.build import (  # noqa: F401
+    COMPRESSORS,
+    MIXERS,
+    MODELS,
+    ModelBundle,
+    OPTIMIZERS,
+    PARTICIPATION,
+    TOPOLOGIES,
+    build,
+)
+from repro.api.cli import (  # noqa: F401
+    add_spec_args,
+    get_preset,
+    preset_names,
+    spec_from_args,
+)
+from repro.core.state import EngineState  # noqa: F401

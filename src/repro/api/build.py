@@ -1,0 +1,229 @@
+"""build(spec) — the single entry point from :class:`ExperimentSpec` to a
+running engine.
+
+Every spec ``kind`` resolves through a string-keyed :class:`Registry`
+(:mod:`repro.api.spec`), pre-populated with the repo's built-in backends;
+``@REGISTRY.register("name")`` adds new ones without touching the engines,
+the CLIs, or the checkpoint format.
+
+Both engines come back with the SAME surface:
+
+    engine = build(spec[, loss_fn])
+    state  = engine.init_state(params, opt_state, key=...)
+    state, metrics = engine.step(state, block_batch, key)   # jit this
+
+``engine="stacked"`` returns the exact-paper
+:class:`repro.core.diffusion.DiffusionEngine` (2-arg loss, no per-step rng);
+``engine="sharded"`` the GSPMD :class:`repro.core.sharded.ShardedEngine`
+(3-arg loss with per-agent rng).  ``engine="auto"`` picks sharded when the
+model spec is self-contained (kind="transformer") and stacked for external
+losses — the combinations every driver and test in the repo uses.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.api.spec import (CompressionSpec, ExperimentSpec, MixerSpec,
+                            ModelSpec, OptimizerSpec, ParticipationSpec,
+                            Registry, TopologySpec)
+from repro.core import compression as comp_lib
+from repro.core import mixing
+from repro.core import schedules
+from repro.core import topology as topo_lib
+from repro.core.diffusion import DiffusionEngine
+from repro.core.sharded import ShardedEngine
+from repro.optim import adam, momentum, sgd
+
+PyTree = Any
+
+__all__ = [
+    "build",
+    "ModelBundle",
+    "TOPOLOGIES",
+    "PARTICIPATION",
+    "MIXERS",
+    "COMPRESSORS",
+    "OPTIMIZERS",
+    "MODELS",
+]
+
+TOPOLOGIES = Registry("topology")        # (TopologySpec, K) -> Topology
+PARTICIPATION = Registry("participation")  # (ParticipationSpec, K) -> process
+MIXERS = Registry("mixer")               # (MixerSpec, topology, K) -> Mixer
+COMPRESSORS = Registry("compressor")     # (CompressionSpec,) -> Compressor
+OPTIMIZERS = Registry("optimizer")       # (OptimizerSpec,) -> GradTransform
+MODELS = Registry("model")               # (ModelSpec,) -> ModelBundle | None
+
+
+# -- topologies (delegate to core/topology.make_topology) -------------------
+
+def _register_topologies():
+    for kind in ("ring", "grid", "full", "fedavg", "erdos"):
+        @TOPOLOGIES.register(kind)
+        def _build(spec: TopologySpec, K: int, _kind=kind):
+            return topo_lib.make_topology(_kind, K, **dict(spec.kwargs))
+
+
+_register_topologies()
+
+
+# -- participation processes ------------------------------------------------
+
+@PARTICIPATION.register("iid")
+def _iid(spec: ParticipationSpec, K: int):
+    return schedules.IIDBernoulli(spec.q, num_agents=K)
+
+
+@PARTICIPATION.register("markov")
+def _markov(spec: ParticipationSpec, K: int):
+    return schedules.MarkovAvailability(spec.q, spec.corr, num_agents=K)
+
+
+@PARTICIPATION.register("cyclic")
+def _cyclic(spec: ParticipationSpec, K: int):
+    return schedules.CyclicGroups(K, spec.num_groups)
+
+
+# -- mixers (delegate to core/mixing.make_mixer) ----------------------------
+
+def _register_mixers():
+    for kind in ("dense", "sparse", "pallas", "auto", "none",
+                 "trimmed_mean", "median"):
+        @MIXERS.register(kind)
+        def _build(spec: MixerSpec, topology, K: int, _kind=kind):
+            return mixing.make_mixer(_kind, topology, num_agents=K,
+                                     tile_m=spec.tile_m,
+                                     interpret=spec.interpret,
+                                     trim=spec.trim)
+
+
+_register_mixers()
+
+
+# -- compressors ------------------------------------------------------------
+
+def _register_compressors():
+    for kind in ("none", "topk", "randk", "int8", "gauss"):
+        @COMPRESSORS.register(kind)
+        def _build(spec: CompressionSpec, _kind=kind):
+            return comp_lib.make_compressor(
+                _kind, ratio=spec.ratio, error_feedback=spec.error_feedback,
+                sigma=spec.sigma)
+
+
+_register_compressors()
+
+
+# -- optimizers -------------------------------------------------------------
+
+for _kind, _factory in (("sgd", sgd), ("momentum", momentum), ("adam", adam)):
+    OPTIMIZERS.register(_kind)(
+        lambda spec, _f=_factory: _f(**dict(spec.kwargs)))
+
+
+# -- models -----------------------------------------------------------------
+
+class ModelBundle(NamedTuple):
+    """Self-contained model half of an experiment: configuration, the two
+    loss conventions (stacked engines vmap 2-arg losses, the sharded engine
+    3-arg losses with a per-agent rng), and single-agent initialization."""
+
+    cfg: Any
+    loss: Callable[[PyTree, Any], jax.Array]
+    loss_rng: Callable[[PyTree, Any, jax.Array], jax.Array]
+    init_params: Callable[[jax.Array], PyTree]
+
+
+@MODELS.register("external")
+def _external(spec: ModelSpec):
+    return None        # loss supplied by the build() caller
+
+
+@MODELS.register("transformer")
+def _transformer(spec: ModelSpec):
+    from repro.configs import get_config          # lazy: keep api import light
+    from repro.models import transformer as tf
+    bundle = get_config(spec.arch)
+    cfg = bundle.smoke if spec.smoke else bundle.model
+
+    def loss(p, b):
+        return tf.train_loss(p, cfg, b, remat=False)
+
+    def loss_rng(p, b, rng):
+        return tf.train_loss(p, cfg, b, rng, remat=False)
+
+    return ModelBundle(cfg=cfg, loss=loss, loss_rng=loss_rng,
+                       init_params=lambda k: tf.init_params(k, cfg))
+
+
+# -- the entry point --------------------------------------------------------
+
+def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
+          grad_transform=None):
+    """Materialize an engine from a declarative spec.
+
+    Args:
+      spec: the experiment description.
+      loss_fn: required when ``spec.model.kind == "external"`` — the
+        per-agent loss in the convention of the selected engine (2-arg for
+        stacked, 3-arg with rng for sharded).  Overrides the model bundle's
+        loss when both exist.
+      engine: "stacked" | "sharded" | "auto" (sharded iff the model spec is
+        self-contained).
+      grad_transform: explicit gradient-transform override; defaults to the
+        optimizer spec ("sgd" means None — exact Algorithm 1).
+
+    Returns:
+      A :class:`~repro.core.diffusion.DiffusionEngine` or
+      :class:`~repro.core.sharded.ShardedEngine`, decorated with ``.spec``,
+      ``.optimizer`` (the GradTransform), ``.model`` (the
+      :class:`ModelBundle` or None) and — when the model is self-contained —
+      ``.init_params(key)`` returning the stacked (K, ...) parameter pytree.
+    """
+    K = spec.run.num_agents
+    cfg = spec.to_diffusion_config()
+    topology = (TOPOLOGIES.get(spec.topology.kind)(spec.topology, K)
+                if K > 1 else None)
+    process = PARTICIPATION.get(spec.participation.kind)(spec.participation, K)
+    mixer = MIXERS.get(spec.mixer.kind)(spec.mixer, topology, K)
+    compressor = COMPRESSORS.get(spec.compression.kind)(spec.compression)
+    optimizer = OPTIMIZERS.get(spec.optimizer.kind)(spec.optimizer)
+    model = MODELS.get(spec.model.kind)(spec.model)
+
+    if engine == "auto":
+        engine = "sharded" if model is not None else "stacked"
+    if engine not in ("stacked", "sharded"):
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected stacked|sharded|auto)")
+    if grad_transform is None and spec.optimizer.kind != "sgd":
+        grad_transform = optimizer.update
+
+    if engine == "stacked":
+        loss = loss_fn if loss_fn is not None else (model.loss if model
+                                                    else None)
+        if loss is None:
+            raise ValueError('model kind "external" needs an explicit '
+                             "loss_fn (or select a self-contained model "
+                             "spec, e.g. kind='transformer')")
+        eng = DiffusionEngine(cfg, loss, grad_transform, mixer=mixer,
+                              participation=process, compressor=compressor)
+    else:
+        loss = loss_fn if loss_fn is not None else (model.loss_rng if model
+                                                    else None)
+        if loss is None:
+            raise ValueError('model kind "external" needs an explicit '
+                             "3-arg loss_fn for the sharded engine")
+        eng = ShardedEngine(loss, cfg, topology=topology, mix=mixer,
+                            participation=process, compress=compressor,
+                            grad_transform=grad_transform)
+
+    eng.spec = spec
+    eng.optimizer = optimizer
+    eng.model = model
+    if model is not None:
+        def init_params(key, _init=model.init_params, _K=K):
+            return jax.vmap(_init)(jax.random.split(key, _K))
+        eng.init_params = init_params
+    return eng

@@ -1,0 +1,221 @@
+"""The shared CLI front end of the launch drivers.
+
+All three launchers (``repro.launch.train``, ``repro.launch.dryrun``,
+``repro.launch.serve``) build their experiment description through this ONE
+module:
+
+    ap = argparse.ArgumentParser()
+    add_spec_args(ap)              # the shared, spec-mapped flag set
+    ap.add_argument(...)           # driver-specific flags only
+    spec = spec_from_args(ap.parse_args())
+
+so the flag names, choices, and defaults cannot drift between drivers
+again (asserted by ``tests/test_api.py::test_cli_flag_parity``).  Three
+ways to an :class:`ExperimentSpec`, in precedence order:
+
+* ``--spec path.json``    — load a spec verbatim (the JSON ``to_json``
+  emits; what checkpoints embed);
+* ``--preset <variant>``  — a Section-IV variants factory
+  (``repro.core.variants``), parameterized by ``--agents`` /
+  ``--local-steps`` / ``--step-size`` / ``--participation`` etc.; the
+  driver fields (``--blocks``/``--batch``/``--seq``/``--seed``/``--arch``)
+  and any *explicitly passed* structural flags (``--mix``, ``--compress``,
+  ``--compress-ratio``, ...) are overlaid on top of the preset, so
+  ``--preset compressed_fedavg --mix pallas`` means exactly what it says;
+* bare flags              — every flag maps onto one spec field (the
+  migration table in EXPERIMENTS.md lists the old-flag -> spec-field
+  correspondence).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.api.spec import (CompressionSpec, ExperimentSpec, MixerSpec,
+                            ModelSpec, OptimizerSpec, ParticipationSpec,
+                            RunSpec, TopologySpec)
+
+__all__ = ["add_spec_args", "spec_from_args", "get_preset"]
+
+_MIX_CHOICES = ["dense", "sparse", "pallas", "auto", "none",
+                "trimmed_mean", "median"]
+_COMPRESS_CHOICES = ["none", "topk", "randk", "int8", "gauss"]
+
+
+class _Track(argparse.Action):
+    """Store the value AND record that the flag was explicitly passed, so
+    the --preset path can overlay exactly what the user asked for (a flag
+    left at its default must not override the preset's choice)."""
+
+    def __call__(self, parser, namespace, values, option_string=None):
+        setattr(namespace, self.dest, values)
+        namespace._explicit.add(self.dest)
+
+
+class _TrackTrue(argparse.Action):
+    def __init__(self, option_strings, dest, **kwargs):
+        kwargs.update(nargs=0)
+        super().__init__(option_strings, dest, **kwargs)
+
+    def __call__(self, parser, namespace, values, option_string=None):
+        setattr(namespace, self.dest, True)
+        namespace._explicit.add(self.dest)
+
+
+def get_preset(name: str):
+    """Resolve a preset factory by name (imports the variants module so the
+    built-in presets are registered)."""
+    from repro.api.spec import PRESETS
+    from repro.core import variants  # noqa: F401 — populates PRESETS
+    return PRESETS.get(name)
+
+
+def preset_names() -> tuple:
+    from repro.api.spec import PRESETS
+    from repro.core import variants  # noqa: F401 — populates PRESETS
+    return PRESETS.names()
+
+
+def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Register the shared spec-mapped flags (one source of truth)."""
+    ap.set_defaults(_explicit=set())
+    g = ap.add_argument_group("experiment spec",
+                              "shared across train/dryrun/serve; every flag "
+                              "maps onto one ExperimentSpec field")
+    g.add_argument("--spec", default=None, metavar="PATH",
+                   help="load the full ExperimentSpec from a JSON file "
+                        "(overrides every other spec flag)")
+    g.add_argument("--preset", default=None, metavar="VARIANT",
+                   help="a repro.core.variants preset (e.g. fedavg_full, "
+                        "compressed_diffusion); parameterized by --agents/"
+                        "--local-steps/--step-size/--participation")
+    g.add_argument("--arch", default="smollm-360m",
+                   help="model architecture (ModelSpec.arch)")
+    g.add_argument("--smoke", action="store_true", default=True,
+                   help="reduced smoke config (default)")
+    g.add_argument("--full", dest="smoke", action="store_false",
+                   help="full-size model config")
+    g.add_argument("--agents", type=int, default=4,
+                   help="K (RunSpec.num_agents)")
+    g.add_argument("--local-steps", type=int, default=2,
+                   help="T (RunSpec.local_steps)")
+    g.add_argument("--step-size", type=float, default=0.5,
+                   help="mu (RunSpec.step_size)")
+    g.add_argument("--topology", default="ring", action=_Track,
+                   help="combination graph (TopologySpec.kind)")
+    g.add_argument("--participation", type=float, default=0.9,
+                   help="activation probability q (ParticipationSpec.q)")
+    g.add_argument("--participation-process", default="iid", action=_Track,
+                   choices=["iid", "markov", "cyclic"],
+                   help="agent-availability model (ParticipationSpec.kind)")
+    g.add_argument("--markov-corr", type=float, default=0.5,
+                   help="availability autocorrelation "
+                        "(ParticipationSpec.corr)")
+    g.add_argument("--num-groups", type=int, default=2,
+                   help="round-robin groups (ParticipationSpec.num_groups)")
+    g.add_argument("--drift-correction", action=_TrackTrue, default=False,
+                   help="eq. (31) mu/q_k step sizes "
+                        "(RunSpec.drift_correction)")
+    g.add_argument("--optimizer", default="adam", action=_Track,
+                   choices=["sgd", "momentum", "adam"],
+                   help="local-update gradient transform "
+                        "(OptimizerSpec.kind)")
+    g.add_argument("--mix", default="dense", choices=_MIX_CHOICES,
+                   action=_Track,
+                   help="combination-step backend (MixerSpec.kind)")
+    g.add_argument("--trim", type=int, default=1, action=_Track,
+                   help="per-side trim for --mix trimmed_mean "
+                        "(MixerSpec.trim)")
+    g.add_argument("--compress", default="none", choices=_COMPRESS_CHOICES,
+                   action=_Track,
+                   help="communication compressor (CompressionSpec.kind)")
+    g.add_argument("--compress-ratio", type=float, default=0.1,
+                   action=_Track,
+                   help="kept coordinate fraction (CompressionSpec.ratio)")
+    g.add_argument("--compress-sigma", type=float, default=0.0,
+                   action=_Track,
+                   help="Gaussian-mask noise scale (CompressionSpec.sigma)")
+    g.add_argument("--error-feedback", action=_TrackTrue, default=False,
+                   help="EF residual memory (CompressionSpec.error_feedback)")
+    g.add_argument("--comm-gamma", type=float, default=None, action=_Track,
+                   help="consensus step of the compressed exchange "
+                        "(CompressionSpec.gamma; default auto)")
+    g.add_argument("--blocks", type=int, default=20,
+                   help="block iterations (RunSpec.blocks)")
+    g.add_argument("--batch", type=int, default=2,
+                   help="per-agent batch (RunSpec.batch)")
+    g.add_argument("--seq", type=int, default=64,
+                   help="sequence length (RunSpec.seq)")
+    g.add_argument("--seed", type=int, default=0, help="RunSpec.seed")
+    return ap
+
+
+#: flags whose EXPLICIT use overrides the corresponding preset field:
+#: dest -> (sub-spec attribute, field name)
+_PRESET_OVERRIDES = {
+    "topology": ("topology", "kind"),
+    "mix": ("mixer", "kind"),
+    "trim": ("mixer", "trim"),
+    "compress": ("compression", "kind"),
+    "compress_ratio": ("compression", "ratio"),
+    "compress_sigma": ("compression", "sigma"),
+    "error_feedback": ("compression", "error_feedback"),
+    "comm_gamma": ("compression", "gamma"),
+    "optimizer": ("optimizer", "kind"),
+    "drift_correction": ("run", "drift_correction"),
+}
+
+
+def _run_overlay(spec: ExperimentSpec, args) -> ExperimentSpec:
+    """Overlay the driver fields (model + run extras) and any explicitly
+    passed structural flags onto a preset spec — a flag the user typed
+    wins over the preset's default, a flag left untouched does not."""
+    run = dataclasses.replace(spec.run, blocks=args.blocks, batch=args.batch,
+                              seq=args.seq, seed=args.seed)
+    model = ModelSpec(kind="transformer", arch=args.arch, smoke=args.smoke)
+    spec = spec.replace(run=run, model=model)
+    explicit = getattr(args, "_explicit", set())
+    for dest, (sub, field) in _PRESET_OVERRIDES.items():
+        if dest in explicit:
+            spec = spec.replace(**{sub: dataclasses.replace(
+                getattr(spec, sub), **{field: getattr(args, dest)})})
+    if "participation_process" in explicit:
+        spec = spec.replace(participation=ParticipationSpec(
+            kind=args.participation_process, q=args.participation,
+            corr=args.markov_corr, num_groups=args.num_groups))
+    return spec
+
+
+def spec_from_args(args) -> ExperimentSpec:
+    """Build the ExperimentSpec from parsed shared flags.
+
+    Precedence: ``--spec`` (verbatim) > ``--preset`` (+ driver overlay) >
+    bare flags.
+    """
+    if getattr(args, "spec", None):
+        with open(args.spec) as f:
+            return ExperimentSpec.from_json(f.read())
+    if getattr(args, "preset", None):
+        factory = get_preset(args.preset)
+        spec = factory(K=args.agents, T=args.local_steps, mu=args.step_size,
+                       q=args.participation, corr=args.markov_corr,
+                       num_groups=args.num_groups)
+        return _run_overlay(spec, args)
+    return ExperimentSpec(
+        topology=TopologySpec(kind=args.topology),
+        participation=ParticipationSpec(
+            kind=args.participation_process, q=args.participation,
+            corr=args.markov_corr, num_groups=args.num_groups),
+        mixer=MixerSpec(kind=args.mix, trim=args.trim),
+        compression=CompressionSpec(
+            kind=args.compress, ratio=args.compress_ratio,
+            sigma=args.compress_sigma, error_feedback=args.error_feedback,
+            gamma=args.comm_gamma),
+        optimizer=OptimizerSpec(kind=args.optimizer),
+        model=ModelSpec(kind="transformer", arch=args.arch,
+                        smoke=args.smoke),
+        run=RunSpec(num_agents=args.agents, local_steps=args.local_steps,
+                    step_size=args.step_size,
+                    drift_correction=args.drift_correction,
+                    blocks=args.blocks, batch=args.batch, seq=args.seq,
+                    seed=args.seed))

@@ -1,0 +1,258 @@
+"""ExperimentSpec — the declarative description of one Algorithm-1 run.
+
+Every experiment the repo can run is one frozen, JSON-round-trippable tree
+of sub-specs:
+
+    ExperimentSpec
+      ├─ TopologySpec        which graph backs the combination matrix A
+      ├─ ParticipationSpec   the agent-availability model (eq. 18 default)
+      ├─ MixerSpec           combination-step backend (core/mixing.py)
+      ├─ CompressionSpec     wire compressor + exchange mode (CommPipeline)
+      ├─ OptimizerSpec       local-update gradient transform
+      ├─ ModelSpec           what the agents train (transformer arch or an
+      │                      externally supplied loss)
+      └─ RunSpec             scalar hyper-parameters (K, T, mu, ...) and
+                             driver settings (blocks, batch, seed)
+
+Each sub-spec selects its implementation through a string ``kind`` resolved
+against a :class:`Registry` in :mod:`repro.api.build` — registering a new
+backend is one ``@REGISTRY.register("name")`` decorator, and every CLI,
+checkpoint, and test picks it up through the same spec field.  The spec is
+pure data (no jax / no model imports): hash it, diff it, store it next to
+the checkpoint (:func:`repro.checkpoint.save_experiment`), rebuild the
+exact engine from it (:func:`repro.api.build`).
+
+Round trip: ``spec == ExperimentSpec.from_json(spec.to_json())`` exactly
+(tested per preset in ``tests/test_api.py``).
+"""
+
+import dataclasses
+import json
+from typing import Any, Optional, Union
+
+__all__ = [
+    "Registry",
+    "TopologySpec",
+    "ParticipationSpec",
+    "MixerSpec",
+    "CompressionSpec",
+    "OptimizerSpec",
+    "ModelSpec",
+    "RunSpec",
+    "ExperimentSpec",
+    "PRESETS",
+]
+
+
+class Registry:
+    """String-keyed implementation registry behind one spec ``kind`` field.
+
+    >>> MIXERS = Registry("mixer")
+    >>> @MIXERS.register("dense")
+    ... def _build_dense(spec, topology, num_agents): ...
+
+    Unknown keys fail with the full list of registered alternatives —
+    misspelled spec fields and JSON files must not die in a KeyError three
+    layers down.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, Any] = {}
+
+    def register(self, name: str):
+        def deco(fn):
+            if name in self._entries:
+                raise ValueError(
+                    f"{self.kind} {name!r} is already registered")
+            self._entries[name] = fn
+            return fn
+        return deco
+
+    def get(self, name: str):
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} kind {name!r} — registered "
+                f"{self.kind} kinds: {sorted(self._entries)}") from None
+
+    def names(self) -> tuple:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+
+#: named experiment presets (the Section-IV variants factories register
+#: here; resolve through :func:`repro.api.get_preset`, which imports them)
+PRESETS = Registry("preset")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Graph behind the base combination matrix A (core/topology.py)."""
+
+    kind: str = "ring"           # ring|grid|full|fedavg|erdos|<registered>
+    kwargs: tuple = ()           # extra make_topology kwargs, sorted (k, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSpec:
+    """Agent-availability model (core/schedules.py)."""
+
+    kind: str = "iid"            # iid|markov|cyclic|<registered>
+    q: Any = 1.0                 # activation probability (scalar or tuple)
+    corr: float = 0.5            # markov: availability autocorrelation
+    num_groups: int = 2          # cyclic: round-robin group count
+
+
+@dataclasses.dataclass(frozen=True)
+class MixerSpec:
+    """Combination-step backend (core/mixing.py)."""
+
+    kind: str = "dense"          # dense|sparse|pallas|auto|none|
+                                 # trimmed_mean|median|<registered>
+    tile_m: int = 512            # pallas tile
+    interpret: Optional[bool] = None   # pallas interpret override
+    trim: int = 1                # trimmed_mean: per-side trim count
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Wire compressor + exchange mode (core/compression.py, CommPipeline)."""
+
+    kind: str = "none"           # none|topk|randk|int8|gauss|<registered>
+    ratio: float = 1.0           # kept fraction (topk/randk/gauss)
+    sigma: float = 0.0           # Gaussian-mask noise scale
+    error_feedback: bool = False
+    mode: str = "auto"           # auto|identity|direct|diff
+    gamma: Optional[float] = None      # consensus step (None: auto)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Local-update gradient transform (repro/optim)."""
+
+    kind: str = "sgd"            # sgd|momentum|adam|<registered>
+    kwargs: tuple = ()           # transform kwargs, sorted (k, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """What the agents train.
+
+    ``kind="transformer"`` resolves ``arch`` through repro.configs and
+    trains the repo's transformer family; ``kind="external"`` means the
+    caller supplies ``loss_fn`` to :func:`repro.api.build` (the regression /
+    theory workloads of the paper figures).
+    """
+
+    kind: str = "external"       # external|transformer|<registered>
+    arch: str = "smollm-360m"
+    smoke: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Scalar hyper-parameters of Algorithm 1 + driver settings."""
+
+    num_agents: int = 4          # K
+    local_steps: int = 1         # T
+    step_size: float = 0.01      # mu
+    drift_correction: bool = False     # eq. (31)
+    blocks: int = 20             # driver: block iterations
+    batch: int = 2               # driver: per-agent batch
+    seq: int = 64                # driver: sequence length (LM models)
+    seed: int = 0
+
+
+_SUBSPECS = (TopologySpec, ParticipationSpec, MixerSpec, CompressionSpec,
+             OptimizerSpec, ModelSpec, RunSpec)
+
+
+def _tuplify(v):
+    """JSON arrays come back as lists; specs store tuples (hashable,
+    equality-stable round trip)."""
+    if isinstance(v, list):
+        return tuple(_tuplify(x) for x in v)
+    return v
+
+
+def _from_dict(cls, d: dict):
+    if not isinstance(d, dict):
+        raise ValueError(f"{cls.__name__} expects an object, got {d!r}")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = set(d) - set(fields)
+    if unknown:
+        raise ValueError(f"unknown {cls.__name__} field(s) "
+                         f"{sorted(unknown)} — known fields: "
+                         f"{sorted(fields)}")
+    kwargs = {}
+    for name, value in d.items():
+        ftype = fields[name].type
+        if isinstance(ftype, type) and dataclasses.is_dataclass(ftype):
+            kwargs[name] = _from_dict(ftype, value)
+        else:
+            kwargs[name] = _tuplify(value)
+    return cls(**kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The full declarative experiment description (see module docstring)."""
+
+    topology: TopologySpec = TopologySpec()
+    participation: ParticipationSpec = ParticipationSpec()
+    mixer: MixerSpec = MixerSpec()
+    compression: CompressionSpec = CompressionSpec()
+    optimizer: OptimizerSpec = OptimizerSpec()
+    model: ModelSpec = ModelSpec()
+    run: RunSpec = RunSpec()
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        return _from_dict(cls, d)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **changes) -> "ExperimentSpec":
+        return dataclasses.replace(self, **changes)
+
+    # -- derived views ------------------------------------------------------
+    def stationary_q(self):
+        """Stationary per-agent activation probability implied by the
+        participation spec (what the Lemma-1 surrogates consume)."""
+        p = self.participation
+        if p.kind == "cyclic":
+            return 1.0 / p.num_groups
+        return p.q
+
+    def to_diffusion_config(self):
+        """The :class:`repro.core.diffusion.DiffusionConfig` this spec
+        denotes — the scalar-hyper-parameter view both engines consume
+        (pluggable components are built separately by the registries)."""
+        from repro.core.diffusion import DiffusionConfig
+        r, c = self.run, self.compression
+        return DiffusionConfig(
+            num_agents=r.num_agents, local_steps=r.local_steps,
+            step_size=r.step_size, topology=self.topology.kind,
+            topology_kwargs=tuple(self.topology.kwargs),
+            participation=self.stationary_q(),
+            drift_correction=r.drift_correction, mix=self.mixer.kind,
+            compress=c.kind, compress_ratio=c.ratio, compress_sigma=c.sigma,
+            error_feedback=c.error_feedback, comm_mode=c.mode,
+            comm_gamma=c.gamma)
+
+    def q_vector(self):
+        """(K,) stationary activation probabilities (numpy)."""
+        return self.to_diffusion_config().q_vector()

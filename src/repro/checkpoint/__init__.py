@@ -1,1 +1,8 @@
-from repro.checkpoint.store import save_checkpoint, load_checkpoint  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    load_checkpoint,
+    load_experiment,
+    load_meta,
+    load_spec,
+    save_checkpoint,
+    save_experiment,
+)

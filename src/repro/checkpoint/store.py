@@ -3,6 +3,13 @@
 Leaves are flattened with their tree paths as archive keys, so restoring
 validates structure as well as shapes.  Host-local: for sharded trees the
 caller gathers (small models) or saves per-process shards (addressable data).
+
+Experiment checkpoints (:func:`save_experiment`) store the FULL
+:class:`repro.core.state.EngineState` — params, optimizer state,
+participation-process state, and communication memory — as ONE pytree, plus
+the :class:`repro.api.ExperimentSpec` JSON in the metadata, so
+``load_spec(path)`` + :func:`repro.api.build` rebuild the exact engine with
+zero flags (``repro.launch.serve --checkpoint dir`` does exactly that).
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ def _path_str(path) -> str:
             parts.append(str(p.key))
         elif hasattr(p, "idx"):
             parts.append(str(p.idx))
+        elif hasattr(p, "name"):          # GetAttrKey (EngineState fields)
+            parts.append(str(p.name))
         else:
             parts.append(str(p))
     return "/".join(parts)
@@ -66,3 +75,51 @@ def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, dict]:
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
     return tree, meta
+
+
+# ---------------------------------------------------------------------------
+# experiment checkpoints: EngineState as one object + the spec alongside
+# ---------------------------------------------------------------------------
+
+def load_meta(path: str) -> dict:
+    """Read just the metadata of a checkpoint (no tree restore)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["__meta__"]))
+
+
+def save_experiment(path: str, state: PyTree, *, spec=None, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    """Save a full :class:`repro.core.state.EngineState` as one object.
+
+    ``spec`` (an :class:`repro.api.ExperimentSpec`) is embedded as JSON in
+    the metadata under the reserved ``"spec"`` key, so the checkpoint is
+    self-describing: :func:`load_spec` + ``repro.api.build`` reconstruct the
+    exact engine, and :func:`load_experiment` restores the state into it.
+    """
+    meta = dict(metadata or {})
+    if spec is not None:
+        meta["spec"] = spec.to_json(indent=None)
+    save_checkpoint(path, state, step=step, metadata=meta)
+
+
+def load_spec(path: str):
+    """The :class:`repro.api.ExperimentSpec` embedded in a checkpoint, or
+    None for spec-less (plain-pytree) checkpoints."""
+    meta = load_meta(path)
+    if "spec" not in meta:
+        return None
+    from repro.api.spec import ExperimentSpec   # lazy: checkpoint <-> api
+    return ExperimentSpec.from_json(meta["spec"])
+
+
+def load_experiment(path: str, like_state: PyTree) -> tuple[PyTree, dict]:
+    """Restore an :class:`EngineState` checkpoint into ``like_state``.
+
+    ``like_state`` controls which components are restored: a template with
+    ``opt_state=None`` restores only the params (and whatever other
+    components the template carries) even if the archive holds more —
+    serving, for instance, needs just the iterate.
+    """
+    return load_checkpoint(path, like_state)

@@ -7,6 +7,7 @@ processes (:mod:`repro.core.schedules`), consumed by two engines (stacked
 :mod:`repro.core.diffusion`, mesh-sharded :mod:`repro.core.sharded`) with
 identical semantics.
 """
+from repro.core.state import EngineState  # noqa: F401
 from repro.core.diffusion import (  # noqa: F401
     DiffusionConfig,
     DiffusionEngine,
@@ -23,11 +24,13 @@ from repro.core.participation import (  # noqa: F401
 )
 from repro.core.mixing import (  # noqa: F401
     CommPipeline,
+    CoordinateMedianMixer,
     DenseMixer,
     Mixer,
     NullMixer,
     PallasFusedMixer,
     SparseCirculantMixer,
+    TrimmedMeanMixer,
     make_mixer,
     make_pipeline,
 )
@@ -50,4 +53,9 @@ from repro.core.schedules import (  # noqa: F401
     ParticipationProcess,
 )
 from repro.core.msd import QuadraticProblem, theoretical_msd  # noqa: F401
-from repro.core.sharded import make_block_step, mix_dense, mix_sparse  # noqa: F401
+from repro.core.sharded import (  # noqa: F401
+    ShardedEngine,
+    make_block_step,
+    mix_dense,
+    mix_sparse,
+)

@@ -25,11 +25,14 @@ theory-validation tests run.  The mesh-sharded engine with identical
 semantics lives in :mod:`repro.core.sharded`; both consume the same
 scan/pipeline/process layers.
 
-State threading: stateful participation processes thread ``part_state``
-(:meth:`DiffusionEngine.block_step_stateful`), and stateful pipelines
-(error feedback) additionally thread the residual memory ``comm_state``
-(:meth:`DiffusionEngine.block_step_comm`); :meth:`DiffusionEngine.run`
-threads both automatically.
+State threading: both engines share ONE step contract,
+
+    engine.step(state: EngineState, block_batch, key) -> (EngineState, metrics)
+
+where :class:`repro.core.state.EngineState` bundles
+``params / opt_state / part_state / comm_state`` (absent components are
+``None``).  Construct the state with :meth:`DiffusionEngine.init_state`;
+:meth:`DiffusionEngine.run` does so automatically.
 """
 from __future__ import annotations
 
@@ -47,12 +50,14 @@ from repro.core import participation as part
 from repro.core import schedules
 from repro.core import topology as topo_lib
 from repro.core.mixing import mix_dense as mix_stacked  # noqa: F401 (compat)
+from repro.core.state import (EngineState, check_engine_state,
+                              init_engine_state)
 
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jax.Array]   # (agent_params, agent_batch) -> scalar
 
-__all__ = ["DiffusionConfig", "DiffusionEngine", "local_update_scan",
-           "mix_stacked", "network_msd"]
+__all__ = ["DiffusionConfig", "DiffusionEngine", "EngineState",
+           "local_update_scan", "mix_stacked", "network_msd"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,14 +174,13 @@ class DiffusionEngine:
         ("dense": exact paper baseline).
       participation: activation model — a schedules.ParticipationProcess;
         defaults to the paper's i.i.d. Bernoulli with the config's q vector.
-        Stateful processes require :meth:`block_step_stateful` (``run``
-        threads the state automatically).
+        Stateful processes carry their state in ``EngineState.part_state``
+        (:meth:`init_state` seeds it; ``run`` threads it automatically).
       compressor: communication-compression stage — a
         compression.Compressor; defaults to the config's ``compress`` /
         ``compress_ratio`` / ``error_feedback`` fields ("none": bit-identical
-        to the plain mixer).  Error feedback makes the pipeline stateful —
-        use :meth:`block_step_comm` (``run`` threads the state
-        automatically).
+        to the plain mixer).  Stateful pipelines (error feedback, diff mode)
+        carry their memory in ``EngineState.comm_state`` the same way.
     """
 
     def __init__(self, config: DiffusionConfig, loss_fn: LossFn,
@@ -202,90 +206,51 @@ class DiffusionEngine:
         self.compressor = self.pipeline.compressor
         self._grad_fn = jax.vmap(jax.grad(loss_fn))
 
-    # -- shared block body (local updates + combination) --------------------
-    def _apply_block(self, params: PyTree, opt_state: PyTree,
-                     comm_state: PyTree, active: jax.Array,
-                     key_comm: jax.Array, block_batch: PyTree):
+    # -- state construction -------------------------------------------------
+    def init_state(self, params: PyTree, opt_state: PyTree = None, *,
+                   key: jax.Array | None = None) -> EngineState:
+        """Bundle the initial :class:`EngineState` for :meth:`step`.
+
+        Fills ``part_state`` (stateful participation processes draw their
+        initial state from ``key``) and ``comm_state`` (stateful pipelines
+        allocate the EF residual / diff-mode reference, shaped like
+        ``params``); components the engine does not carry stay ``None``.
+        """
+        return init_engine_state(self.process, self.pipeline, params,
+                                 opt_state, key=key)
+
+    # -- the single block iteration (jit-compatible) ------------------------
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: EngineState, block_batch: PyTree,
+             key: jax.Array):
+        """One block iteration of Algorithm 1 — the unified step contract.
+
+        Args:
+          state: :class:`EngineState` with ``params`` leaves (K, ...) (see
+            :meth:`init_state`).
+          block_batch: pytree with leaves (T, K, ...) — one minibatch per
+            agent per local step.
+          key: PRNG key for this block (activation sampling + any
+            key-consuming compressor).
+        Returns:
+          ``(new_state, metrics)`` with ``metrics["active"]`` the realized
+          (K,) activation mask.
+        """
         cfg = self.config
+        check_engine_state(self.process, self.pipeline, self.compressor,
+                           state, "engine.init_state")
+        key_act, key_comm = jax.random.split(key)
+        active, part_state = self.process.sample(state.part_state,
+                                                 key_act)       # eq. (18)
         mus = part.step_size_matrix(cfg.step_size, active, self._q,
                                     cfg.drift_correction)       # (K,)
         params, opt_state = local_update_scan(
-            self._grad_fn, params, opt_state, mus, block_batch,
+            self._grad_fn, state.params, state.opt_state, mus, block_batch,
             local_steps=cfg.local_steps, grad_transform=self.grad_transform)
-        params, comm_state = self.pipeline(params, active, comm_state,
+        params, comm_state = self.pipeline(params, active, state.comm_state,
                                            key_comm)            # eq. (20)
-        return params, opt_state, comm_state
-
-    # -- single block iteration (jit-compatible) ---------------------------
-    @partial(jax.jit, static_argnums=0)
-    def block_step(self, params: PyTree, opt_state: PyTree, key: jax.Array,
-                   block_batch: PyTree):
-        """One block iteration of Algorithm 1 (stateless participation).
-
-        Args:
-          params: pytree with leaves (K, ...).
-          opt_state: per-agent optimizer state (or None for SGD).
-          key: PRNG key for this block (activation sampling).
-          block_batch: pytree with leaves (T, K, ...) — one minibatch per
-            agent per local step.
-        Returns:
-          (params, opt_state, active_mask)
-        """
-        if self.process.stateful:
-            raise ValueError(
-                f"{type(self.process).__name__} carries state; use "
-                "block_step_stateful (or run(), which threads it for you)")
-        if self.pipeline.stateful:
-            raise ValueError(
-                f"the {self.pipeline.mode}-mode pipeline with "
-                f"{self.compressor!r} carries communication state "
-                "(EF residual or diff-mode reference); use block_step_comm "
-                "(or run(), which threads it for you)")
-        key_act, key_comm = jax.random.split(key)
-        active, _ = self.process.sample((), key_act)            # eq. (18)
-        params, opt_state, _ = self._apply_block(
-            params, opt_state, (), active, key_comm, block_batch)
-        return params, opt_state, active
-
-    @partial(jax.jit, static_argnums=0)
-    def block_step_stateful(self, params: PyTree, opt_state: PyTree,
-                            part_state: PyTree, key: jax.Array,
-                            block_batch: PyTree):
-        """Block iteration threading the participation-process state.
-
-        Works for every process; for stateless ones it is bit-identical to
-        :meth:`block_step` given the same key.  Returns
-        ``(params, opt_state, part_state, active)``.
-        """
-        if self.pipeline.stateful:
-            raise ValueError(
-                f"the {self.pipeline.mode}-mode pipeline with "
-                f"{self.compressor!r} carries communication state "
-                "(EF residual or diff-mode reference); use block_step_comm "
-                "(or run(), which threads it for you)")
-        key_act, key_comm = jax.random.split(key)
-        active, part_state = self.process.sample(part_state, key_act)
-        params, opt_state, _ = self._apply_block(
-            params, opt_state, (), active, key_comm, block_batch)
-        return params, opt_state, part_state, active
-
-    @partial(jax.jit, static_argnums=0)
-    def block_step_comm(self, params: PyTree, opt_state: PyTree,
-                        part_state: PyTree, comm_state: PyTree,
-                        key: jax.Array, block_batch: PyTree):
-        """Block iteration threading BOTH the participation-process state
-        and the pipeline's error-feedback memory.
-
-        Works for every process/compressor combination; for stateless ones
-        it is bit-identical to :meth:`block_step_stateful` given the same
-        key (pass ``comm_state=()``).  Returns
-        ``(params, opt_state, part_state, comm_state, active)``.
-        """
-        key_act, key_comm = jax.random.split(key)
-        active, part_state = self.process.sample(part_state, key_act)
-        params, opt_state, comm_state = self._apply_block(
-            params, opt_state, comm_state, active, key_comm, block_batch)
-        return params, opt_state, part_state, comm_state, active
+        new_state = EngineState(params, opt_state, part_state, comm_state)
+        return new_state, {"active": active}
 
     # -- convenience runner -------------------------------------------------
     def run(self, params: PyTree, sampler: Callable[[jax.Array], PyTree],
@@ -299,23 +264,15 @@ class DiffusionEngine:
         Returns (params, opt_state, msd_history list).
         """
         key = jax.random.PRNGKey(seed)
-        part_state = self.process.init_state(jax.random.fold_in(key, 0x5EED))
-        comm_stateful = self.pipeline.stateful
-        comm_state = self.pipeline.init_state(params) if comm_stateful else ()
+        state = self.init_state(params, opt_state,
+                                key=jax.random.fold_in(key, 0x5EED))
         history = []
         for _ in range(num_blocks):
             key, k_batch, k_step = jax.random.split(key, 3)
-            batch = sampler(k_batch)
-            if comm_stateful:
-                params, opt_state, part_state, comm_state, _ = \
-                    self.block_step_comm(params, opt_state, part_state,
-                                         comm_state, k_step, batch)
-            else:
-                params, opt_state, part_state, _ = self.block_step_stateful(
-                    params, opt_state, part_state, k_step, batch)
+            state, _ = self.step(state, sampler(k_batch), k_step)
             if w_star is not None:
-                history.append(float(network_msd(params, w_star)))
-        return params, opt_state, history
+                history.append(float(network_msd(state.params, w_star)))
+        return state.params, state.opt_state, history
 
 
 def network_msd(params: PyTree, w_star: PyTree) -> jax.Array:

@@ -20,6 +20,10 @@ Backends differ only in *how* the contraction is executed:
   The flatten/unflatten layout is computed once per (treedef, shapes) and
   cached across steps.
 * :class:`NullMixer` — identity (K = 1, or mixing disabled).
+* :class:`TrimmedMeanMixer` / :class:`CoordinateMedianMixer` — robust
+  (Byzantine-tolerant) aggregation over the realized active set à la SLSGD
+  (arXiv:1903.06996); non-linear, so they pair with ``compress="none"``
+  only.
 
 Use :func:`make_mixer` to construct one; ``"auto"`` picks the Pallas kernel
 on TPU and the sparse path for bounded-degree topologies on other backends.
@@ -58,6 +62,8 @@ __all__ = [
     "DenseMixer",
     "SparseCirculantMixer",
     "PallasFusedMixer",
+    "TrimmedMeanMixer",
+    "CoordinateMedianMixer",
     "CommPipeline",
     "make_mixer",
     "make_pipeline",
@@ -122,12 +128,16 @@ class Mixer:
     """Combination-step backend: ``mixer(params, active) -> params``.
 
     ``params`` has leaves (K, ...); ``active`` is the (K,) activation mask in
-    {0, 1}.  Implementations must be jit-compatible (mask as data) and
-    semantically equal to
-    ``mix_dense(masked_combination(A, active), params)``.
+    {0, 1}.  Implementations must be jit-compatible (mask as data).  Linear
+    backends (``linear = True``) are semantically equal to
+    ``mix_dense(masked_combination(A, active), params)``; robust backends
+    (trimmed mean / median) set ``linear = False`` and only support the
+    identity pipeline (the compressed exchange modes correct through
+    ``mix(c) - c``, which presumes linearity).
     """
 
     name = "base"
+    linear = True
 
     def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
         raise NotImplementedError
@@ -288,6 +298,107 @@ class PallasFusedMixer(Mixer):
 
 
 # ---------------------------------------------------------------------------
+# robust aggregation (SLSGD, arXiv:1903.06996): Byzantine-tolerant backends
+# ---------------------------------------------------------------------------
+
+class _SortedRobustMixer(Mixer):
+    """Shared machinery for order-statistic (robust) combination backends.
+
+    SLSGD's *server* aggregation hosted on the Mixer seam: every active
+    agent receives the same coordinate-wise robust aggregate of the realized
+    active set (the fedavg / fully-connected setting — any topology argument
+    is ignored), while inactive agents keep their parameters exactly, so the
+    eq.-20 inactive-agent invariant survives.  Robust aggregation is NOT
+    linear, so the network mean is deliberately *not* preserved when
+    outliers are suppressed — that is the point.  ``linear = False``:
+    only the identity pipeline (``compress="none"``) is supported.
+
+    Implementation: per coordinate, sort the K values along the agent axis
+    with inactive agents pushed to +inf, so the S = |active| contributors
+    occupy the first S slots; subclasses supply data-dependent weights over
+    those sorted slots (jit-compatible — S is data, not structure).
+    """
+
+    linear = False
+
+    def __init__(self, num_agents: int):
+        if num_agents < 1:
+            raise ValueError(f"num_agents={num_agents} must be >= 1")
+        self.num_agents = int(num_agents)
+
+    def _slot_weights(self, S: jax.Array) -> jax.Array:
+        """(K,) weights over ascending sorted slots given S active agents.
+
+        Must put zero weight on every slot >= S (those hold +inf)."""
+        raise NotImplementedError
+
+    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+        K = self.num_agents
+        S = active.astype(jnp.float32).sum()
+        w = self._slot_weights(S)                          # (K,) float32
+
+        def leaf(p: jax.Array) -> jax.Array:
+            m = active.astype(jnp.float32).reshape(
+                (K,) + (1,) * (p.ndim - 1))
+            x = p.astype(jnp.float32)
+            srt = jnp.sort(jnp.where(m > 0, x, jnp.inf), axis=0)
+            wb = w.reshape((K,) + (1,) * (p.ndim - 1))
+            # wb > 0 only on slots < S, which hold finite values; the where
+            # keeps 0 * inf = nan out of the contraction
+            agg = jnp.sum(jnp.where(wb > 0, srt, 0.0) * wb, axis=0,
+                          keepdims=True)
+            return jnp.where(m > 0, agg.astype(p.dtype), p)
+
+        return jax.tree.map(leaf, params)
+
+
+class TrimmedMeanMixer(_SortedRobustMixer):
+    """Coordinate-wise trimmed mean over the active set (SLSGD eq. 4).
+
+    Per coordinate, drop the ``trim`` smallest and ``trim`` largest values
+    among the S active contributions and average the rest — tolerant to up
+    to ``trim`` Byzantine agents per side.  When fewer than ``2 trim + 1``
+    agents are active, the trim is clipped to ``floor((S - 1) / 2)`` so at
+    least the coordinate median survives.  ``trim = 0`` is the plain mean
+    over the active set.
+    """
+
+    name = "trimmed_mean"
+
+    def __init__(self, num_agents: int, trim: int = 1):
+        super().__init__(num_agents)
+        if not 0 <= trim < max(num_agents, 1):
+            raise ValueError(f"trim={trim} must lie in [0, {num_agents})")
+        self.trim = int(trim)
+
+    def _slot_weights(self, S: jax.Array) -> jax.Array:
+        idx = jnp.arange(self.num_agents, dtype=jnp.float32)
+        b = jnp.clip(jnp.minimum(float(self.trim),
+                                 jnp.floor((S - 1.0) / 2.0)), 0.0)
+        keep = ((idx >= b) & (idx < S - b)).astype(jnp.float32)
+        return keep / jnp.maximum(keep.sum(), 1.0)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"TrimmedMeanMixer(K={self.num_agents}, trim={self.trim})"
+
+
+class CoordinateMedianMixer(_SortedRobustMixer):
+    """Coordinate-wise median over the active set — the maximally robust
+    order statistic (breakdown point 1/2), at the cost of discarding the
+    most averaging; SLSGD's b -> (S-1)/2 limit."""
+
+    name = "median"
+
+    def _slot_weights(self, S: jax.Array) -> jax.Array:
+        idx = jnp.arange(self.num_agents, dtype=jnp.float32)
+        lo = jnp.clip(jnp.floor((S - 1.0) / 2.0), 0.0)
+        hi = jnp.clip(jnp.ceil((S - 1.0) / 2.0), 0.0)
+        w = 0.5 * ((idx == lo).astype(jnp.float32)
+                   + (idx == hi).astype(jnp.float32))
+        return w / jnp.maximum(w.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
 # CommPipeline: encode -> exchange/combine -> correct
 # ---------------------------------------------------------------------------
 
@@ -334,10 +445,10 @@ class CommPipeline:
     invariants survive any compressor.
 
     ``stateful`` pipelines (diff mode, or direct mode with error feedback)
-    carry a per-agent memory pytree threaded through the block step
-    alongside ``part_state`` — see
-    :meth:`repro.core.diffusion.DiffusionEngine.block_step_comm` and the
-    stateful signatures of :func:`repro.core.sharded.make_block_step`.
+    carry a per-agent memory pytree in ``EngineState.comm_state``,
+    allocated by ``engine.init_state`` and threaded by the unified
+    ``engine.step`` of both engines (:mod:`repro.core.diffusion`,
+    :mod:`repro.core.sharded`).
     """
 
     def __init__(self, mixer: Mixer,
@@ -358,6 +469,11 @@ class CommPipeline:
         if mode not in ("identity", "direct", "diff"):
             raise ValueError(f"unknown pipeline mode {mode!r} "
                              "(expected identity|direct|diff|auto)")
+        if mode != "identity" and not mixer.linear:
+            raise ValueError(
+                f"{type(mixer).__name__} is a robust (non-linear) backend; "
+                "the compressed exchange modes correct through mix(c) - c, "
+                "which presumes linear mixing — use compress='none'")
         if mode == "identity" and (self._ef() or not isinstance(
                 base, comp_lib.Identity)):
             raise ValueError("identity mode requires the Identity "
@@ -502,12 +618,13 @@ def _resolve_auto(topology: topo_lib.Topology | None,
 def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
                *, A=None, offsets: Sequence[int] | None = None,
                num_agents: int | None = None, tile_m: int = 512,
-               interpret: bool | None = None) -> Mixer:
+               interpret: bool | None = None, trim: int = 1) -> Mixer:
     """Build a mixing backend.
 
     Args:
-      name: "dense" | "sparse" | "pallas" | "auto" | "none", or an existing
-        :class:`Mixer` (returned unchanged).
+      name: "dense" | "sparse" | "pallas" | "auto" | "none" |
+        "trimmed_mean" | "median", or an existing :class:`Mixer` (returned
+        unchanged).
       topology: source of the base matrix A and of the circulant offsets for
         the sparse path; optional if ``A`` (and, for sparse, ``offsets``) are
         given directly.
@@ -515,6 +632,7 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
       offsets: circulant offsets override for the sparse path.
       num_agents: disables mixing when 1 (returns :class:`NullMixer`).
       tile_m / interpret: Pallas kernel knobs (see :class:`PallasFusedMixer`).
+      trim: per-side trim count for the "trimmed_mean" backend.
     """
     if isinstance(name, Mixer):
         return name
@@ -524,6 +642,14 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
         num_agents = int(np.asarray(A).shape[0])
     if name == "none" or (num_agents is not None and num_agents <= 1):
         return NullMixer()
+    if name in ("trimmed_mean", "median"):
+        # robust server aggregation over the active set; needs only K
+        if num_agents is None:
+            raise ValueError(f"{name!r} mixer needs num_agents "
+                             "(or a topology / A to infer it from)")
+        return (TrimmedMeanMixer(num_agents, trim=trim)
+                if name == "trimmed_mean"
+                else CoordinateMedianMixer(num_agents))
     if A is None:
         raise ValueError("make_mixer needs a topology or an explicit A")
     if name == "auto":
@@ -539,8 +665,8 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
         return SparseCirculantMixer(A, offsets)
     if name == "pallas":
         return PallasFusedMixer(A, tile_m=tile_m, interpret=interpret)
-    raise ValueError(f"unknown mixer {name!r} "
-                     "(expected dense|sparse|pallas|auto|none)")
+    raise ValueError(f"unknown mixer {name!r} (expected dense|sparse|"
+                     "pallas|auto|none|trimmed_mean|median)")
 
 
 def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
@@ -550,7 +676,8 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
                   gamma: float | None = None, A=None,
                   offsets: Sequence[int] | None = None,
                   num_agents: int | None = None, tile_m: int = 512,
-                  interpret: bool | None = None) -> CommPipeline:
+                  interpret: bool | None = None,
+                  trim: int = 1) -> CommPipeline:
     """Build the full combination pipeline (compressor stage + mixer).
 
     ``mix`` and the mixer kwargs go to :func:`make_mixer`; ``compress`` /
@@ -562,7 +689,7 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
     """
     mixer = make_mixer(mix, topology, A=A, offsets=offsets,
                        num_agents=num_agents, tile_m=tile_m,
-                       interpret=interpret)
+                       interpret=interpret, trim=trim)
     compressor = comp_lib.make_compressor(compress, ratio=compress_ratio,
                                           error_feedback=error_feedback,
                                           sigma=sigma)

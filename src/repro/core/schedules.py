@@ -58,10 +58,10 @@ def _as_q(q, num_agents: int | None) -> np.ndarray:
 class ParticipationProcess:
     """Availability model driving the activation mask of Algorithm 1.
 
-    ``stateful`` processes (Markov, cyclic) must have their state threaded
-    through block steps (``block_step_stateful`` / the stateful signature of
-    ``make_block_step``); stateless ones (i.i.d. Bernoulli) also work with
-    the classic key-only block step.
+    ``stateful`` processes (Markov, cyclic) carry their state in
+    ``EngineState.part_state`` — ``engine.init_state`` draws the initial
+    state and the unified ``engine.step`` threads it; stateless ones
+    (i.i.d. Bernoulli) leave it ``None``.
     """
 
     stateful: bool = False

@@ -19,6 +19,15 @@ engine (:mod:`repro.core.diffusion`):
   (i.i.d. Bernoulli by default; Markov / cyclic availability plug in the
   same way).
 
+Both engines speak the SAME step contract:
+
+    block_step(state: EngineState, block_batch, key) -> (EngineState, metrics)
+
+with :class:`repro.core.state.EngineState` bundling
+``params / opt_state / part_state / comm_state`` (absent components stay
+``None``, so one signature covers every process/compressor combination —
+the state is data, not call-shape).
+
 All paths are *data-oblivious*: the activation mask enters as arrays, so one
 compiled program serves every activation pattern.
 """
@@ -35,14 +44,12 @@ from repro.core import participation as part
 from repro.core import schedules
 from repro.core.diffusion import DiffusionConfig, local_update_scan
 from repro.core.mixing import mix_dense, mix_sparse  # noqa: F401 (compat)
+from repro.core.state import (EngineState, check_engine_state,
+                              init_engine_state)
 
 PyTree = Any
 
-__all__ = ["mix_dense", "mix_sparse", "make_block_step", "BlockState"]
-
-
-class BlockState(dict):
-    """Lightweight pytree-able container for (params, opt_state)."""
+__all__ = ["mix_dense", "mix_sparse", "make_block_step", "ShardedEngine"]
 
 
 def make_block_step(
@@ -53,7 +60,6 @@ def make_block_step(
     mix: str | mixing.Mixer | None = None,
     offsets: Sequence[int] = (),
     grad_transform=None,
-    param_dtype=jnp.float32,
     topology=None,
     participation: schedules.ParticipationProcess | None = None,
     tile_m: int = 512,
@@ -74,10 +80,9 @@ def make_block_step(
         the leading dim of every param leaf.
       A: (K, K) base combination matrix (device array); optional when
         ``topology`` is given or ``mix`` is already a Mixer.
-      mix: mixer backend name ("dense" | "sparse" | "pallas" | "auto" |
-        "none") or a prebuilt :class:`repro.core.mixing.Mixer`; defaults to
-        ``config.mix`` (so variants factories built with ``mix=...`` work
-        without repeating the choice here).
+      mix: mixer backend name (any :func:`repro.core.mixing.make_mixer`
+        name) or a prebuilt :class:`repro.core.mixing.Mixer`; defaults to
+        ``config.mix``.
       offsets: circulant offsets for the sparse path (derived from
         ``topology`` when omitted).
       grad_transform: optional ``(grads, state, params) -> (updates, state)``
@@ -98,20 +103,14 @@ def make_block_step(
         "auto" picks diff mode for sparsifiers, direct for int8).
 
     Returns:
-      For stateless participation (the default) and stateless compression:
-        ``block_step(params, opt_state, key, block_batch) ->
-          (params, opt_state, active)``.
-      Stateful processes (Markov, cyclic) additionally thread the process
-        state, and stateful pipelines (error feedback) the residual memory —
-        each inserted before ``key`` and returned in the same position, so
-        the fully stateful signature is
-        ``block_step(params, opt_state, part_state, comm_state, key,
-          block_batch) -> (params, opt_state, part_state, comm_state,
-          active)``.
-      Param leaves are (K, ...) and block-batch leaves (T, K, ...).  The
-      returned function carries ``.pipeline`` (the CommPipeline — use
-      ``pipeline.init_state(params)`` / ``pipeline.wire_bytes(params)``)
-      and ``.comm_stateful`` for driver introspection.
+      The unified-contract step function
+      ``block_step(state: EngineState, block_batch, key) ->
+      (EngineState, metrics)`` with ``metrics["active"]`` the realized (K,)
+      mask.  Param leaves are (K, ...) and block-batch leaves (T, K, ...).
+      The returned function carries ``.pipeline`` (the CommPipeline),
+      ``.process`` (the ParticipationProcess), ``.config``, and
+      ``.init_state(params, opt_state=None, key=None)`` which bundles the
+      initial state (stateful components allocated, absent ones ``None``).
     """
     K = config.num_agents
     process, q_np = schedules.resolve(config, participation)
@@ -135,57 +134,56 @@ def make_block_step(
         gamma=comm_gamma if comm_gamma is not None else config.comm_gamma)
     grad_fn = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0, 0))
 
-    def apply_block(params, opt_state, comm_state, active, key_loss,
-                    key_comm, block_batch):
+    # key_comm comes from a fold_in (not a wider split) so the activation
+    # and loss key streams are unchanged vs the uncompressed step
+    def block_step(state: EngineState, block_batch, key):
+        check_engine_state(process, pipeline, compressor, state,
+                           "block_step.init_state")
+        key_act, key_loss = jax.random.split(key)
+        key_comm = jax.random.fold_in(key, 0xC0)
+        active, part_state = process.sample(state.part_state, key_act)
         mus = part.step_size_matrix(config.step_size, active, q,
                                     config.drift_correction)
         params, opt_state = local_update_scan(
-            grad_fn, params, opt_state, mus, block_batch,
+            grad_fn, state.params, state.opt_state, mus, block_batch,
             local_steps=config.local_steps, grad_transform=grad_transform,
             loss_key=key_loss, num_agents=K)
-        params, comm_state = pipeline(params, active, comm_state, key_comm)
-        return params, opt_state, comm_state
+        params, comm_state = pipeline(params, active, state.comm_state,
+                                      key_comm)
+        new_state = EngineState(params, opt_state, part_state, comm_state)
+        return new_state, {"active": active}
 
-    # key_comm comes from a fold_in (not a wider split) so the activation
-    # and loss key streams are unchanged vs the uncompressed step
-    if process.stateful and pipeline.stateful:
-        def block_step(params, opt_state, part_state, comm_state, key,
-                       block_batch):
-            key_act, key_loss = jax.random.split(key)
-            key_comm = jax.random.fold_in(key, 0xC0)
-            active, part_state = process.sample(part_state, key_act)
-            params, opt_state, comm_state = apply_block(
-                params, opt_state, comm_state, active, key_loss, key_comm,
-                block_batch)
-            return params, opt_state, part_state, comm_state, active
-    elif process.stateful:
-        def block_step(params, opt_state, part_state, key, block_batch):
-            key_act, key_loss = jax.random.split(key)
-            key_comm = jax.random.fold_in(key, 0xC0)
-            active, part_state = process.sample(part_state, key_act)
-            params, opt_state, _ = apply_block(
-                params, opt_state, (), active, key_loss, key_comm,
-                block_batch)
-            return params, opt_state, part_state, active
-    elif pipeline.stateful:
-        def block_step(params, opt_state, comm_state, key, block_batch):
-            key_act, key_loss = jax.random.split(key)
-            key_comm = jax.random.fold_in(key, 0xC0)
-            active, _ = process.sample((), key_act)
-            params, opt_state, comm_state = apply_block(
-                params, opt_state, comm_state, active, key_loss, key_comm,
-                block_batch)
-            return params, opt_state, comm_state, active
-    else:
-        def block_step(params, opt_state, key, block_batch):
-            key_act, key_loss = jax.random.split(key)
-            key_comm = jax.random.fold_in(key, 0xC0)
-            active, _ = process.sample((), key_act)
-            params, opt_state, _ = apply_block(
-                params, opt_state, (), active, key_loss, key_comm,
-                block_batch)
-            return params, opt_state, active
+    def init_state(params, opt_state=None, *, key=None) -> EngineState:
+        return init_engine_state(process, pipeline, params, opt_state,
+                                 key=key)
 
     block_step.pipeline = pipeline
-    block_step.comm_stateful = pipeline.stateful
+    block_step.process = process
+    block_step.config = config
+    block_step.init_state = init_state
     return block_step
+
+
+class ShardedEngine:
+    """Engine-shaped wrapper over :func:`make_block_step` so the sharded
+    path exposes the exact object surface of
+    :class:`repro.core.diffusion.DiffusionEngine`:
+
+        state = engine.init_state(params, opt_state, key=...)
+        state, metrics = engine.step(state, block_batch, key)
+
+    All keyword arguments are forwarded to :func:`make_block_step`.
+    ``engine.step`` is the pure block-step function itself (jit/pjit it
+    directly; shard the EngineState components like their leaves).
+    """
+
+    def __init__(self, loss_fn, config: DiffusionConfig, A=None, **kwargs):
+        self.config = config
+        self.step = make_block_step(loss_fn, config, A, **kwargs)
+        self.pipeline = self.step.pipeline
+        self.process = self.step.process
+        self.init_state = self.step.init_state
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"ShardedEngine(K={self.config.num_agents}, "
+                f"pipeline={self.pipeline!r})")

@@ -1,0 +1,89 @@
+"""The single training-state object of the unified step contract.
+
+Both execution engines expose one block-iteration signature
+
+    engine.step(state: EngineState, block_batch, key) -> (EngineState, metrics)
+
+where :class:`EngineState` bundles everything Algorithm 1 threads between
+block iterations:
+
+* ``params``     — the agent-stacked iterate pytree, leaves ``(K, ...)``;
+* ``opt_state``  — per-agent gradient-transform state (``None`` for plain
+  SGD, the paper's algorithm);
+* ``part_state`` — participation-process state (``None`` for the stateless
+  i.i.d. Bernoulli model of eq. 18; Markov / cyclic availability carry a
+  mask or counter);
+* ``comm_state`` — communication-pipeline memory (``None`` for the
+  uncompressed / direct-stateless pipelines; error feedback carries the
+  residual, diff mode the reference copies).
+
+Absent components are ``None`` leaves, so ONE pytree structure covers every
+engine configuration: the state is jit-transparent, `jax.tree`-mappable,
+and checkpoints as a single object (:func:`repro.checkpoint.save_experiment`).
+Use ``engine.init_state(params, opt_state)`` to construct it — the engine
+fills in whichever process/pipeline state it actually carries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+PyTree = Any
+
+__all__ = ["EngineState", "init_engine_state", "check_engine_state"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """One pytree of everything a block step consumes and produces."""
+
+    params: PyTree
+    opt_state: PyTree = None
+    part_state: PyTree = None
+    comm_state: PyTree = None
+
+    def replace(self, **changes) -> "EngineState":
+        return dataclasses.replace(self, **changes)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        have = [f.name for f in dataclasses.fields(self)
+                if getattr(self, f.name) is not None]
+        return f"EngineState({', '.join(have)})"
+
+
+def init_engine_state(process, pipeline, params: PyTree,
+                      opt_state: PyTree = None, *,
+                      key=None) -> EngineState:
+    """The one definition of initial-state construction, shared by BOTH
+    engines: stateful participation processes draw their initial state from
+    ``key``, stateful pipelines allocate their memory shaped like
+    ``params``, and components the configuration does not carry stay None.
+    """
+    part_state = comm_state = None
+    if process.stateful:
+        part_state = process.init_state(
+            key if key is not None else jax.random.PRNGKey(0))
+    if pipeline.stateful:
+        comm_state = pipeline.init_state(params)
+    return EngineState(params, opt_state, part_state, comm_state)
+
+
+def check_engine_state(process, pipeline, compressor,
+                       state: EngineState, init_hint: str) -> None:
+    """Trace-time guard shared by both engines: a stateful process or
+    pipeline fed a None state component fails loudly, pointing at the
+    engine's init_state."""
+    if process.stateful and state.part_state is None:
+        raise ValueError(
+            f"{type(process).__name__} carries participation state but "
+            f"state.part_state is None; build the state with "
+            f"{init_hint}(params, opt_state, key=...)")
+    if pipeline.stateful and state.comm_state is None:
+        raise ValueError(
+            f"the {pipeline.mode}-mode pipeline with {compressor!r} "
+            "carries communication state (EF residual or diff-mode "
+            "reference) but state.comm_state is None; build the state "
+            f"with {init_hint}(params, ...)")

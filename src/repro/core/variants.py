@@ -1,14 +1,24 @@
 """Section IV — existing algorithms as special cases of Algorithm 1.
 
-Each factory returns a :class:`DiffusionConfig` (plus any extra structure)
-whose block recursion reduces *exactly* to the named algorithm.  The
-equivalences are asserted bit-for-bit in ``tests/test_variants.py``.
+Each factory returns an :class:`repro.api.ExperimentSpec` whose block
+recursion reduces *exactly* to the named algorithm; materialize it with
+:func:`repro.api.build` (``build(spec, loss_fn)``).  The equivalences are
+asserted bit-for-bit in ``tests/test_variants.py``, and
+``tests/test_api.py`` asserts ``build(spec)`` is bit-identical to
+constructing the engine by hand from a
+:class:`~repro.core.diffusion.DiffusionConfig` (the legacy path).
+
+Every factory is also registered as a named *preset*
+(``repro.api.spec.PRESETS``), so the launch drivers reach it as
+``--preset <name>`` through the shared spec front end.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import schedules
+from repro.api.spec import (CompressionSpec, ExperimentSpec, MixerSpec,
+                            ParticipationSpec, PRESETS, RunSpec,
+                            TopologySpec)
 from repro.core.diffusion import DiffusionConfig
 
 __all__ = [
@@ -21,18 +31,38 @@ __all__ = [
     "markov_asynchronous_diffusion",
     "compressed_diffusion",
     "compressed_fedavg",
+    "ExactDiffusionEngine",
 ]
 
 
-def fedavg_full(K: int, T: int, mu: float, *, mix: str = "dense") -> DiffusionConfig:
+def _q_field(q):
+    """Normalize a participation argument to a spec-storable value."""
+    return (tuple(float(x) for x in np.asarray(q, dtype=float).reshape(-1))
+            if np.ndim(q) else float(q))
+
+
+def _spec(*, K: int, T: int, mu: float, topology: str = "ring",
+          participation: ParticipationSpec | None = None, q=1.0,
+          mix: str = "dense",
+          compression: CompressionSpec | None = None) -> ExperimentSpec:
+    return ExperimentSpec(
+        topology=TopologySpec(kind=topology),
+        participation=(participation if participation is not None
+                       else ParticipationSpec(kind="iid", q=_q_field(q))),
+        mixer=MixerSpec(kind=mix),
+        compression=compression or CompressionSpec(),
+        run=RunSpec(num_agents=K, local_steps=T, step_size=mu))
+
+
+def fedavg_full(K: int, T: int, mu: float, *,
+                mix: str = "dense") -> ExperimentSpec:
     """FedAvg with full participation (paper eq. 39-40):
     q_k = 1, A_{iT} = (1/K) 11^T."""
-    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology="fedavg", participation=1.0, mix=mix)
+    return _spec(K=K, T=T, mu=mu, topology="fedavg", q=1.0, mix=mix)
 
 
 def fedavg_partial_uniform(K: int, T: int, mu: float, q: float,
-                           *, mix: str = "dense") -> DiffusionConfig:
+                           *, mix: str = "dense") -> ExperimentSpec:
     """FedAvg with partial participation (paper eq. 42-43).
 
     The paper's eq. (41) uses weights 1/S over the realized active set S_i.
@@ -44,31 +74,26 @@ def fedavg_partial_uniform(K: int, T: int, mu: float, q: float,
     expectation.  (Exact eq. (41) sampling — fixed-size uniform subsets — is
     provided by tests via explicit masks.)
     """
-    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology="fedavg", participation=q, mix=mix)
+    return _spec(K=K, T=T, mu=mu, topology="fedavg", q=q, mix=mix)
 
 
 def vanilla_diffusion(K: int, mu: float, topology: str = "ring",
-                      *, mix: str = "dense") -> DiffusionConfig:
+                      *, mix: str = "dense") -> ExperimentSpec:
     """Standard diffusion (paper eq. 44-45): q_k = 1, T = 1."""
-    return DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
-                           topology=topology, participation=1.0, mix=mix)
+    return _spec(K=K, T=1, mu=mu, topology=topology, q=1.0, mix=mix)
 
 
 def asynchronous_diffusion(K: int, mu: float, q, topology: str = "ring",
-                           *, mix: str = "dense") -> DiffusionConfig:
+                           *, mix: str = "dense") -> ExperimentSpec:
     """Asynchronous diffusion (paper eq. 46-47): T = 1, Bernoulli q_k."""
-    part = tuple(np.asarray(q, dtype=float).reshape(-1)) if np.ndim(q) else float(q)
-    return DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
-                           topology=topology, participation=part, mix=mix)
+    return _spec(K=K, T=1, mu=mu, topology=topology, q=q, mix=mix)
 
 
 def decentralized_fedavg(K: int, T: int, mu: float,
                          topology: str = "ring",
-                         *, mix: str = "dense") -> DiffusionConfig:
+                         *, mix: str = "dense") -> ExperimentSpec:
     """Decentralized FedAvg (paper eq. 48-49): q_k = 1, local updates, A."""
-    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology=topology, participation=1.0, mix=mix)
+    return _spec(K=K, T=T, mu=mu, topology=topology, q=1.0, mix=mix)
 
 
 # ---------------------------------------------------------------------------
@@ -76,40 +101,32 @@ def decentralized_fedavg(K: int, T: int, mu: float,
 # ---------------------------------------------------------------------------
 
 def cyclic_fedavg(K: int, T: int, mu: float, num_groups: int,
-                  *, mix: str = "dense"):
+                  *, mix: str = "dense") -> ExperimentSpec:
     """FedAvg with *cyclic client sampling*: the K clients are split into
     ``num_groups`` round-robin groups and exactly one group participates per
     block (deterministic, as in cyclic/incremental client-selection FL).
-
-    Returns ``(config, process)``; pass the process to the engine
-    (``DiffusionEngine(cfg, loss, participation=process)`` or
-    ``make_block_step(..., participation=process)``).  The stationary
-    activation frequency is 1/num_groups per agent, which the config's
-    ``participation`` mirrors so the Lemma-1 surrogates stay meaningful.
+    The stationary activation frequency is 1/num_groups per agent, which
+    ``spec.stationary_q()`` reflects so the Lemma-1 surrogates stay
+    meaningful.
     """
-    process = schedules.CyclicGroups(K, num_groups)
-    cfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                          topology="fedavg",
-                          participation=1.0 / num_groups, mix=mix)
-    return cfg, process
+    part = ParticipationSpec(kind="cyclic", q=1.0 / num_groups,
+                             num_groups=num_groups)
+    return _spec(K=K, T=T, mu=mu, topology="fedavg", participation=part,
+                 mix=mix)
 
 
 def markov_asynchronous_diffusion(K: int, mu: float, q, corr: float,
                                   topology: str = "ring",
-                                  *, mix: str = "dense"):
+                                  *, mix: str = "dense") -> ExperimentSpec:
     """Asynchronous diffusion under *bursty* availability: a two-state
     Markov chain per agent with stationary activation probability q and
     autocorrelation ``corr`` (the Rizk–Yuan–Sayed correlated-availability
     regime, arXiv:2402.05529).  ``corr = 0`` recovers
     :func:`asynchronous_diffusion` in distribution.
-
-    Returns ``(config, process)``.
     """
-    process = schedules.MarkovAvailability(q, corr, num_agents=K)
-    part = tuple(np.asarray(q, dtype=float).reshape(-1)) if np.ndim(q) else float(q)
-    cfg = DiffusionConfig(num_agents=K, local_steps=1, step_size=mu,
-                          topology=topology, participation=part, mix=mix)
-    return cfg, process
+    part = ParticipationSpec(kind="markov", q=_q_field(q), corr=float(corr))
+    return _spec(K=K, T=1, mu=mu, topology=topology, participation=part,
+                 mix=mix)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +138,7 @@ def compressed_diffusion(K: int, mu: float, *, topology: str = "ring",
                          ratio: float = 0.1, sigma: float = 0.0,
                          error_feedback: bool = True,
                          gamma: float | None = None,
-                         mix: str = "dense") -> DiffusionConfig:
+                         mix: str = "dense") -> ExperimentSpec:
     """Diffusion learning with a compressed combination step.
 
     The block recursion is Algorithm 1 with the eq.-20 exchange replaced by
@@ -134,26 +151,67 @@ def compressed_diffusion(K: int, mu: float, *, topology: str = "ring",
     ``compress="none"`` recovers :func:`asynchronous_diffusion` (T = 1) /
     :func:`decentralized_fedavg` (T > 1) bit-for-bit.
     """
-    part = tuple(np.asarray(q, dtype=float).reshape(-1)) if np.ndim(q) else float(q)
-    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology=topology, participation=part, mix=mix,
-                           compress=compress, compress_ratio=ratio,
-                           compress_sigma=sigma,
-                           error_feedback=error_feedback, comm_gamma=gamma)
+    comp = CompressionSpec(kind=compress, ratio=ratio, sigma=sigma,
+                           error_feedback=error_feedback, gamma=gamma)
+    return _spec(K=K, T=T, mu=mu, topology=topology, q=q, mix=mix,
+                 compression=comp)
 
 
 def compressed_fedavg(K: int, T: int, mu: float, q: float = 1.0, *,
                       compress: str = "int8", ratio: float = 1.0,
                       error_feedback: bool = True,
                       gamma: float | None = None,
-                      mix: str = "dense") -> DiffusionConfig:
+                      mix: str = "dense") -> ExperimentSpec:
     """FedAvg (a_lk = 1/K) with compressed model exchange — the
     communication-efficient federated regime (int8 uplink by default).
     ``compress="none"`` recovers :func:`fedavg_partial_uniform`."""
-    return DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
-                           topology="fedavg", participation=q, mix=mix,
-                           compress=compress, compress_ratio=ratio,
-                           error_feedback=error_feedback, comm_gamma=gamma)
+    comp = CompressionSpec(kind=compress, ratio=ratio,
+                           error_feedback=error_feedback, gamma=gamma)
+    return _spec(K=K, T=T, mu=mu, topology="fedavg", q=q, mix=mix,
+                 compression=comp)
+
+
+# ---------------------------------------------------------------------------
+# preset registry: uniform (K, T, mu, q, corr, num_groups) adapters so the
+# launchers' --preset flag can parameterize every factory from shared flags
+# ---------------------------------------------------------------------------
+
+def _register_presets():
+    adapters = {
+        "fedavg_full":
+            lambda K, T, mu, q, corr, num_groups: fedavg_full(K, T, mu),
+        "fedavg_partial_uniform":
+            lambda K, T, mu, q, corr, num_groups:
+                fedavg_partial_uniform(K, T, mu, q),
+        "vanilla_diffusion":
+            lambda K, T, mu, q, corr, num_groups: vanilla_diffusion(K, mu),
+        "asynchronous_diffusion":
+            lambda K, T, mu, q, corr, num_groups:
+                asynchronous_diffusion(K, mu, q),
+        "decentralized_fedavg":
+            lambda K, T, mu, q, corr, num_groups:
+                decentralized_fedavg(K, T, mu),
+        "cyclic_fedavg":
+            lambda K, T, mu, q, corr, num_groups:
+                cyclic_fedavg(K, T, mu, num_groups),
+        "markov_asynchronous_diffusion":
+            lambda K, T, mu, q, corr, num_groups:
+                markov_asynchronous_diffusion(K, mu, q, corr),
+        "compressed_diffusion":
+            lambda K, T, mu, q, corr, num_groups:
+                compressed_diffusion(K, mu, T=T, q=q),
+        "compressed_fedavg":
+            lambda K, T, mu, q, corr, num_groups:
+                compressed_fedavg(K, T, mu, q),
+    }
+    for name, fn in adapters.items():
+        def adapted(K, T, mu, q=1.0, corr=0.5, num_groups=2, _fn=fn):
+            return _fn(K, T, mu, q, corr, num_groups)
+        adapted.__name__ = name
+        PRESETS.register(name)(adapted)
+
+
+_register_presets()
 
 
 # ---------------------------------------------------------------------------
@@ -175,12 +233,15 @@ class ExactDiffusionEngine:
     framework hosts bias-corrected members of the same family.  (Combining
     exact diffusion with partial participation is open research — the
     correction state of an inactive agent would stale; we deliberately do
-    not claim it.)
+    not claim it.)  Accepts a :class:`DiffusionConfig` or an
+    :class:`~repro.api.spec.ExperimentSpec`.
     """
 
-    def __init__(self, config: DiffusionConfig, loss_fn):
+    def __init__(self, config, loss_fn):
         import jax
         import jax.numpy as jnp
+        if isinstance(config, ExperimentSpec):
+            config = config.to_diffusion_config()
         if config.local_steps != 1:
             raise ValueError("exact diffusion is defined for T = 1")
         self.config = config

@@ -23,10 +23,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.api.cli import add_spec_args, spec_from_args
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.configs.base import ArchBundle, InputShape, ModelConfig
 from repro.core.diffusion import DiffusionConfig
 from repro.core.sharded import make_block_step
+from repro.core.state import EngineState
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tf
 from repro.sharding import rules as sh
@@ -163,7 +165,8 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                         mesh=mesh, tp=tp)
     param_shardings = jax.tree.map(lambda s: s.sharding, param_sds,
                                    is_leaf=lambda x: isinstance(x, SDS))
-    if block_step.comm_stateful:
+    comm_sds = comm_shardings = None
+    if block_step.pipeline.stateful:
         # comm state (EF residual / diff-mode reference) is a tree of
         # params-shaped leaves: shard each leaf like the param it mirrors
         state_struct = jax.eval_shape(block_step.pipeline.init_state,
@@ -176,21 +179,19 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                     for l, s in zip(s_leaves, p_sh)])
         comm_shardings = jax.tree_util.tree_unflatten(s_def, p_sh)
 
-        def step(params, comm_state, key, batch):
-            new_params, _, comm_state, active = block_step(
-                params, None, comm_state, key, batch)
-            return new_params, comm_state, active
+    # the unified step contract: ONE EngineState in, one out — absent
+    # components (opt/part state here) are None leaves, so a single
+    # signature covers the stateless and comm-stateful paths
+    state_sds = EngineState(param_sds, None, None, comm_sds)
+    state_shardings = EngineState(param_shardings, None, None,
+                                  comm_shardings)
 
-        args = (param_sds, comm_sds, specs["key"], specs["batch"])
-        out_shardings = (param_shardings, comm_shardings, None)
-    else:
-        def step(params, key, batch):
-            new_params, _, active = block_step(params, None, key, batch)
-            return new_params, active
+    def step(state, key, batch):
+        new_state, metrics = block_step(state, batch, key)
+        return new_state, metrics["active"]
 
-        args = (param_sds, specs["key"], specs["batch"])
-        out_shardings = (param_shardings, None)
-    return step, args, out_shardings
+    args = (state_sds, specs["key"], specs["batch"])
+    return step, args, (state_shardings, None)
 
 
 def build_prefill_step(bundle: ArchBundle, shape: InputShape, mesh,
@@ -419,26 +420,24 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
+    # the spec-mapped flags are the SAME shared set train/serve use
+    # (repro/api/cli.py) — drivers cannot drift on names or defaults.
+    # dryrun-specific knobs (shapes, mesh, sweep, output) stay local.
+    add_spec_args(ap)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--mix", default=None,
-                    choices=[None, "dense", "sparse", "pallas", "auto"])
-    ap.add_argument("--compress", default=None,
-                    choices=[None, "none", "topk", "randk", "int8", "gauss"],
-                    help="communication compressor for the train step "
-                         "(core/compression.py)")
-    # same default ratio as launch/train.py so a dry-run reflects the step
-    # that actually trains
-    ap.add_argument("--compress-ratio", type=float, default=0.1)
-    ap.add_argument("--compress-sigma", type=float, default=0.0)
-    ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--arch-default-mix", action="store_true",
+                    help="deprecation shim: use the arch bundle's production "
+                         "mix path instead of the shared --mix flag")
     ap.add_argument("--no-tp", action="store_true",
                     help="replicate params over the model axis (pure DP)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", default=None)
     args = ap.parse_args()
+    spec = spec_from_args(args)
+    mix = None if args.arch_default_mix else spec.mixer.kind
+    compress = spec.compression.kind
 
     os.makedirs(args.out, exist_ok=True)
     combos = []
@@ -448,24 +447,24 @@ def main():
                 for mesh_kind in ("single", "multi"):
                     combos.append((arch, shape, mesh_kind))
     else:
-        combos.append((args.arch, args.shape, args.mesh))
+        combos.append((spec.model.arch, args.shape, args.mesh))
 
     failures = 0
     for arch, shape, mesh_kind in combos:
         tag = (f"{arch}_{shape}_{mesh_kind}"
-               + (f"_{args.mix}" if args.mix else "")
-               + (f"_{args.compress}" if args.compress else "")
-               + ("_ef" if args.error_feedback else "")
+               + (f"_{mix}" if mix else "")
+               + (f"_{compress}" if compress != "none" else "")
+               + ("_ef" if spec.compression.error_feedback else "")
                + ("_notp" if args.no_tp else ""))
         out_path = os.path.join(args.out, tag + ".json")
         try:
-            res = dryrun_one(arch, shape, mesh_kind, mix_override=args.mix,
+            res = dryrun_one(arch, shape, mesh_kind, mix_override=mix,
                              save_hlo=args.save_hlo,
                              tp=False if args.no_tp else None,
-                             compress=args.compress,
-                             compress_ratio=args.compress_ratio,
-                             compress_sigma=args.compress_sigma,
-                             error_feedback=args.error_feedback)
+                             compress=compress,
+                             compress_ratio=spec.compression.ratio,
+                             compress_sigma=spec.compression.sigma,
+                             error_feedback=spec.compression.error_feedback)
             with open(out_path, "w") as f:
                 json.dump(res, f, indent=1)
             print(f"OK   {tag}: compile={res['compile_seconds']}s "

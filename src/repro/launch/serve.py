@@ -3,11 +3,16 @@
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --batch 4 --prompt-len 64 --decode 32
 
-Serving a diffusion-trained model: pass ``--checkpoint ckpt.npz --agents K``
-to load the agent-stacked parameters written by ``repro.launch.train`` and
-extract the consensus model (the network average, i.e. one application of
-the FedAvg matrix) through the selected combination backend
-(``--mix dense|pallas|auto`` — the same Mixer layer the trainer uses).
+Serving a diffusion-trained model: ``--checkpoint ckpt.npz`` alone is
+enough for checkpoints written by ``repro.launch.train`` — they embed the
+:class:`repro.api.ExperimentSpec`, so the exact engine (agent count,
+architecture, combination backend) is rebuilt with ZERO flags and the
+consensus model (the network average, one application of the FedAvg matrix)
+is extracted through the trained mixer backend.  Spec-less (legacy / plain)
+checkpoints fall back to the flag path: ``--agents K`` marks an
+agent-stacked archive, ``--mix`` selects the consensus-extraction backend.
+The spec flags are the same shared set ``train`` and ``dryrun`` use
+(:mod:`repro.api.cli`).
 """
 from __future__ import annotations
 
@@ -17,26 +22,57 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import load_checkpoint
+from repro.api import EngineState, build, spec_from_args
+from repro.api.cli import add_spec_args
+from repro.checkpoint import load_checkpoint, load_experiment, load_spec
 from repro.configs import get_config
 from repro.core import make_mixer, make_topology
 from repro.models import transformer as tf
 
 
-def consensus_from_stacked(stacked, K: int, mix: str = "dense"):
+def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
+                           trim: int = 1):
     """Collapse (K, ...)-stacked agent params to the consensus (average)
     model via the mixing layer: one all-active FedAvg combination step makes
-    every agent hold the exact network mean; take agent 0."""
+    every agent hold the exact network mean; take agent 0.  Robust backends
+    (trimmed_mean / median) yield the outlier-suppressed aggregate instead."""
     topo = make_topology("fedavg", K)
-    mixer = make_mixer(mix, topo, num_agents=K)
+    mixer = make_mixer(mix, topo, num_agents=K, trim=trim)
     mixed = mixer(stacked, jnp.ones((K,), jnp.float32))
     return jax.tree.map(lambda x: x[0], mixed)
 
 
-def load_params(args, cfg, key):
+def load_params(args, key):
+    """Resolve (params, cfg) from the checkpoint spec, the legacy stacked
+    path, or fresh initialization."""
+    spec = load_spec(args.checkpoint) if args.checkpoint else None
+    if spec is not None and spec.model.kind == "external":
+        # the spec describes an externally supplied loss (regression /
+        # theory workloads) — nothing servable; fall back to the flag path
+        print(f"checkpoint spec has model kind 'external' (nothing to "
+              f"serve); falling back to --arch/--agents/--mix flags")
+        spec = None
+    if spec is not None:
+        # self-describing checkpoint: rebuild the exact engine, zero flags
+        eng = build(spec)
+        K = spec.run.num_agents
+        # eval_shape: the template only provides structure/shapes — no
+        # reason to materialize K full randomly initialized models
+        like = EngineState(jax.eval_shape(eng.init_params,
+                                          jax.random.PRNGKey(0)))
+        state, meta = load_experiment(args.checkpoint, like)
+        print(f"loaded spec checkpoint (K={K}, arch={spec.model.arch}, "
+              f"step={meta.get('step')}); extracting consensus via "
+              f"mix={spec.mixer.kind}")
+        params = consensus_from_stacked(state.params, K, spec.mixer.kind,
+                                        trim=spec.mixer.trim)
+        return params, eng.model.cfg
+
+    bundle = get_config(args.arch)
+    cfg = bundle.smoke if args.smoke else bundle.model
     params = tf.init_params(key, cfg)
     if not args.checkpoint:
-        return params
+        return params, cfg
     if args.agents > 1:
         like = jax.tree.map(
             lambda x: jnp.zeros((args.agents,) + x.shape, x.dtype), params)
@@ -44,36 +80,31 @@ def load_params(args, cfg, key):
         print(f"loaded stacked checkpoint (K={args.agents}, "
               f"step={meta.get('step')}); extracting consensus via "
               f"--mix {args.mix}")
-        return consensus_from_stacked(stacked, args.agents, args.mix)
+        return (consensus_from_stacked(stacked, args.agents, args.mix,
+                                       trim=args.trim), cfg)
     params, meta = load_checkpoint(args.checkpoint, params)
     print(f"loaded checkpoint (step={meta.get('step')})")
-    return params
+    return params, cfg
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
+    add_spec_args(ap)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=1.0)
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None,
-                    help="npz checkpoint (plain or agent-stacked)")
-    ap.add_argument("--agents", type=int, default=1,
-                    help="agent count of a stacked checkpoint (1 = plain)")
-    ap.add_argument("--mix", default="dense",
-                    choices=["dense", "pallas", "auto"],
-                    help="combination backend for consensus extraction")
+                    help="npz checkpoint (spec-embedding, agent-stacked, or "
+                         "plain)")
+    # deprecation shim: a spec-less checkpoint is a plain single model
+    # unless --agents says otherwise (spec checkpoints carry K themselves)
+    ap.set_defaults(agents=1)
     args = ap.parse_args()
+    spec_from_args(args)      # validate the shared flags map onto a spec
 
-    bundle = get_config(args.arch)
-    cfg = bundle.smoke if args.smoke else bundle.model
     key = jax.random.PRNGKey(args.seed)
     kp, kt, key = jax.random.split(key, 3)
-    params = load_params(args, cfg, kp)
+    params, cfg = load_params(args, kp)
 
     shape = (args.batch, args.prompt_len)
     if cfg.num_codebooks:

@@ -2,18 +2,26 @@
 assigned architecture on the local device set.
 
 On CPU this runs the reduced (smoke) configs; on a real TPU mesh it uses the
-same code path with the production mesh.  Example:
+same code path with the production mesh.  The experiment is described by ONE
+:class:`repro.api.ExperimentSpec`, built from the shared CLI front end
+(:mod:`repro.api.cli` — the same flag set ``dryrun`` and ``serve`` use):
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
       --agents 4 --local-steps 2 --blocks 20 --batch 2 --seq 64
 
-The combination-step backend is selectable (``--mix dense|sparse|pallas|auto``
-— "pallas" runs the fused mask+mix kernel; see EXPERIMENTS.md §Perf), as is
-the agent-availability model (``--participation-process iid|markov|cyclic``)
-and the communication compressor (``--compress topk|randk|int8|gauss`` with
-``--compress-ratio`` and ``--error-feedback``; with ``--mix pallas
---compress int8`` the fused dequantize+mix kernel runs.  See EXPERIMENTS.md
-§Compression).
+  # the same run, declaratively:
+  PYTHONPATH=src python -m repro.launch.train --spec experiment.json
+  PYTHONPATH=src python -m repro.launch.train --preset compressed_fedavg \
+      --agents 8 --step-size 0.01
+
+Every flag maps onto one spec field (EXPERIMENTS.md has the migration
+table): the combination backend (``--mix dense|sparse|pallas|auto|
+trimmed_mean|median``), the availability model (``--participation-process
+iid|markov|cyclic``), and the wire compressor (``--compress
+topk|randk|int8|gauss`` + ``--compress-ratio``/``--error-feedback``; with
+``--mix pallas --compress int8`` the fused dequantize+mix kernel runs).
+``--checkpoint`` saves the full EngineState with the spec embedded, so
+``serve --checkpoint`` rebuilds the exact engine with zero flags.
 """
 from __future__ import annotations
 
@@ -22,126 +30,37 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config
-from repro.core import schedules
-from repro.core.diffusion import DiffusionConfig
-from repro.core.sharded import make_block_step
+from repro.api import build, spec_from_args
+from repro.api.cli import add_spec_args
+from repro.checkpoint import save_experiment
 from repro.data.synthetic import lm_token_batch
 from repro.models import transformer as tf
-from repro.optim import adam, momentum, sgd
-from repro.checkpoint import save_checkpoint
-
-
-def make_process(kind: str, q: float, agents: int, *, markov_corr: float = 0.5,
-                 num_groups: int = 2) -> schedules.ParticipationProcess:
-    """Availability model factory shared by the launch drivers."""
-    if kind == "iid":
-        return schedules.IIDBernoulli(q, num_agents=agents)
-    if kind == "markov":
-        return schedules.MarkovAvailability(q, markov_corr, num_agents=agents)
-    if kind == "cyclic":
-        return schedules.CyclicGroups(agents, num_groups)
-    raise ValueError(f"unknown participation process {kind!r}")
-
-
-def build(arch: str, smoke: bool, agents: int, local_steps: int,
-          step_size: float, topology: str, participation: float,
-          optimizer: str, mix: str, process_kind: str = "iid",
-          markov_corr: float = 0.5, num_groups: int = 2,
-          compress: str = "none", compress_ratio: float = 1.0,
-          error_feedback: bool = False, comm_gamma: float | None = None,
-          compress_sigma: float = 0.0):
-    bundle = get_config(arch)
-    cfg = bundle.smoke if smoke else bundle.model
-    dcfg = DiffusionConfig(num_agents=agents, local_steps=local_steps,
-                           step_size=step_size, topology=topology,
-                           participation=participation, mix=mix,
-                           compress=compress, compress_ratio=compress_ratio,
-                           compress_sigma=compress_sigma,
-                           error_feedback=error_feedback,
-                           comm_gamma=comm_gamma)
-    topo = dcfg.make_topology() if agents > 1 else None
-    A = jnp.asarray(topo.A, jnp.float32) if topo else jnp.eye(1)
-    process = make_process(process_kind, participation, agents,
-                           markov_corr=markov_corr, num_groups=num_groups)
-    opt = {"sgd": sgd, "momentum": momentum, "adam": adam}[optimizer]()
-
-    def loss_fn(p, b, rng):
-        return tf.train_loss(p, cfg, b, rng, remat=False)
-
-    block_step = make_block_step(loss_fn, dcfg, A,
-                                 mix=mix if agents > 1 else "none",
-                                 topology=topo, grad_transform=opt.update,
-                                 participation=process)
-    return cfg, dcfg, block_step, opt, process
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--agents", type=int, default=4)
-    ap.add_argument("--local-steps", type=int, default=2)
-    ap.add_argument("--blocks", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=2, help="per-agent batch")
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--step-size", type=float, default=0.5)
-    ap.add_argument("--topology", default="ring")
-    ap.add_argument("--participation", type=float, default=0.9)
-    ap.add_argument("--participation-process", default="iid",
-                    choices=["iid", "markov", "cyclic"],
-                    help="agent-availability model (core/schedules.py)")
-    ap.add_argument("--markov-corr", type=float, default=0.5,
-                    help="availability autocorrelation for --participation-"
-                         "process markov")
-    ap.add_argument("--num-groups", type=int, default=2,
-                    help="round-robin groups for --participation-process "
-                         "cyclic")
-    ap.add_argument("--optimizer", default="adam",
-                    choices=["sgd", "momentum", "adam"])
-    ap.add_argument("--mix", default="dense",
-                    choices=["dense", "sparse", "pallas", "auto"],
-                    help="combination-step backend (core/mixing.py)")
-    ap.add_argument("--compress", default="none",
-                    choices=["none", "topk", "randk", "int8", "gauss"],
-                    help="communication compressor (core/compression.py)")
-    ap.add_argument("--compress-ratio", type=float, default=0.1,
-                    help="kept coordinate fraction for --compress "
-                         "topk|randk|gauss")
-    ap.add_argument("--compress-sigma", type=float, default=0.0,
-                    help="Gaussian-mask noise scale for --compress gauss "
-                         "(the DP knob; 0 = pure rand-k)")
-    ap.add_argument("--error-feedback", action="store_true",
-                    help="thread the EF residual memory through the block "
-                         "step (direct mode, e.g. --compress int8)")
-    ap.add_argument("--comm-gamma", type=float, default=None,
-                    help="consensus step size of the compressed exchange "
-                         "(default: auto — see core/mixing.CommPipeline)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--checkpoint", default=None)
+    add_spec_args(ap)
+    ap.add_argument("--checkpoint", default=None,
+                    help="save the final EngineState (+ embedded spec) here")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
 
-    cfg, dcfg, block_step, opt, process = build(
-        args.arch, args.smoke, args.agents, args.local_steps, args.step_size,
-        args.topology, args.participation, args.optimizer, args.mix,
-        args.participation_process, args.markov_corr, args.num_groups,
-        args.compress, args.compress_ratio, args.error_feedback,
-        args.comm_gamma, args.compress_sigma)
+    spec = spec_from_args(args)
+    eng = build(spec)                       # transformer model -> sharded
+    run = spec.run
+    K, T = run.num_agents, run.local_steps
+    cfg = eng.model.cfg
+    pipeline = eng.pipeline
 
-    key = jax.random.PRNGKey(args.seed)
-    K, T = args.agents, args.local_steps
+    key = jax.random.PRNGKey(run.seed)
     kp, key = jax.random.split(key)
-    params = jax.vmap(lambda k: tf.init_params(k, cfg))(jax.random.split(kp, K))
+    params = eng.init_params(kp)
     # state leaves mirror the stacked (K, ...) layout; step counter is shared
-    opt_state = opt.init(params) if args.optimizer != "sgd" else None
-    part_state = process.init_state(jax.random.fold_in(key, 0x5EED))
-    pipeline = block_step.pipeline
-    comm_state = pipeline.init_state(params) if pipeline.stateful else ()
-    if args.compress != "none":
+    opt_state = eng.optimizer.init(params)
+    state = eng.init_state(params, opt_state,
+                           key=jax.random.fold_in(key, 0x5EED))
+    if spec.compression.kind != "none":
         from repro.core.compression import dense_wire_bytes
         wire = pipeline.wire_bytes(params)
         if wire == 0:
@@ -152,54 +71,45 @@ def main():
             # pipeline.compressor reflects what actually runs (diff mode
             # unwraps the EF wrapper: the reference IS the feedback there)
             print(f"comm: {pipeline.compressor.name} "
-                  f"ratio={args.compress_ratio} "
+                  f"ratio={spec.compression.ratio} "
                   f"mode={pipeline.mode} gamma={pipeline.gamma}  "
                   f"{wire / 1e6:.2f} MB/combination on the wire "
                   f"({dense_wire / wire:.1f}x below dense f32)")
 
-    jit_step = jax.jit(block_step)
+    jit_step = jax.jit(eng.step)
 
     def sample_block(k):
         k_tok, k_img = jax.random.split(k)
-        shape = (T, K, args.batch, args.seq)
+        shape = (T, K, run.batch, run.seq)
         if cfg.num_codebooks:
             shape = shape + (cfg.num_codebooks,)
         batch = lm_token_batch(k_tok, shape, cfg.vocab_size)
         if cfg.img_tokens:
             batch["img_embeds"] = jax.random.normal(
-                k_img, (T, K, args.batch, cfg.img_tokens, tf.VISION_DIM),
+                k_img, (T, K, run.batch, cfg.img_tokens, tf.VISION_DIM),
                 jnp.float32) * 0.02
         return batch
 
-    eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b, remat=False)))
+    eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b,
+                                                            remat=False)))
 
     t0 = time.time()
-    for i in range(args.blocks):
+    for i in range(run.blocks):
         key, kb, ks = jax.random.split(key, 3)
         batch = sample_block(kb)
-        # state args mirror the make_block_step signature matrix:
-        # [part_state][comm_state] between opt_state and key
-        state_args = []
-        if process.stateful:
-            state_args.append(part_state)
-        if pipeline.stateful:
-            state_args.append(comm_state)
-        out = jit_step(params, opt_state, *state_args, ks, batch)
-        params, opt_state, *states, active = out
-        if process.stateful:
-            part_state = states.pop(0)
-        if pipeline.stateful:
-            comm_state = states.pop(0)
+        state, metrics = jit_step(state, batch, ks)
         if i % args.log_every == 0:
-            losses = eval_loss(params, jax.tree.map(lambda x: x[0], batch))
+            active = metrics["active"]
+            losses = eval_loss(state.params,
+                               jax.tree.map(lambda x: x[0], batch))
             print(f"block {i:4d}  active={int(active.sum())}/{K}  "
                   f"mean_loss={float(losses.mean()):.4f}  "
                   f"spread={float(losses.max() - losses.min()):.4f}  "
                   f"t={time.time() - t0:.1f}s")
 
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, params, step=args.blocks,
-                        metadata={"arch": args.arch})
+        save_experiment(args.checkpoint, state, spec=spec, step=run.blocks,
+                        metadata={"arch": spec.model.arch})
         print("saved", args.checkpoint)
 
 

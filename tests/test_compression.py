@@ -251,7 +251,8 @@ def test_pallas_int8_pipeline_threads_error_feedback():
 # engine threading (stacked + sharded)
 # ---------------------------------------------------------------------------
 
-def test_engine_stateful_pipeline_requires_comm_step():
+def test_engine_stateful_pipeline_requires_comm_state():
+    from repro.core import EngineState
     data = make_regression_problem(K=4, N=20)
     cfg = DiffusionConfig(num_agents=4, compress="topk", compress_ratio=0.5,
                           error_feedback=True)
@@ -259,15 +260,12 @@ def test_engine_stateful_pipeline_requires_comm_step():
     sampler = make_block_sampler(data, T=1, batch=1)
     batch = sampler(KEY)
     params = jnp.zeros((4, 2))
-    with pytest.raises(ValueError):
-        eng.block_step(params, None, KEY, batch)
-    with pytest.raises(ValueError):
-        eng.block_step_stateful(params, None, (), KEY, batch)
-    # block_step_comm threads the memory
-    comm = eng.pipeline.init_state(params)
-    p, _, _, comm, active = eng.block_step_comm(params, None, (), comm,
-                                                KEY, batch)
-    assert jax.tree.leaves(comm)[0].shape == (4, 2)
+    with pytest.raises(ValueError, match="init_state"):
+        eng.step(EngineState(params), batch, KEY)
+    # init_state allocates the memory; step threads it
+    state = eng.init_state(params)
+    state, _ = eng.step(state, batch, KEY)
+    assert jax.tree.leaves(state.comm_state)[0].shape == (4, 2)
 
 
 def test_engine_run_threads_comm_state_and_converges():
@@ -289,9 +287,11 @@ def test_engine_run_threads_comm_state_and_converges():
     assert np.mean(hist[-30:]) < 0.05 * hist[0]
 
 
-def test_sharded_signature_matrix():
-    """make_block_step inserts part_state / comm_state between opt_state
-    and key exactly per the documented signature matrix."""
+def test_sharded_unified_state_contract():
+    """Every process/compressor combination flows through the SAME
+    (state, batch, key) signature — stateful components live inside
+    EngineState, absent ones stay None (the old 4-way signature matrix is
+    gone)."""
     K = 6
     data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=3)
     cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
@@ -304,42 +304,45 @@ def test_sharded_signature_matrix():
     proc = CyclicGroups(K, 3)
 
     s = make_block_step(loss3, cfg, topology=topo)
-    assert not s.comm_stateful
-    p, _, a = jax.jit(s)(p0, None, KEY, batch)
+    assert not s.pipeline.stateful
+    st, m = jax.jit(s)(s.init_state(p0), batch, KEY)
+    assert st.part_state is None and st.comm_state is None
 
     s = make_block_step(loss3, cfg, topology=topo, compress="int8",
                         error_feedback=True)
-    assert s.comm_stateful
-    cs = s.pipeline.init_state(p0)
-    p, _, cs, a = jax.jit(s)(p0, None, cs, KEY, batch)
-    assert cs.shape == p0.shape
+    assert s.pipeline.stateful
+    st, m = jax.jit(s)(s.init_state(p0), batch, KEY)
+    assert st.comm_state.shape == p0.shape and st.part_state is None
 
     # sparsifier without EF: diff mode carries the reference copy
     s = make_block_step(loss3, cfg, topology=topo, compress="randk",
                         compress_ratio=0.5)
-    assert s.comm_stateful and s.pipeline.mode == "diff"
-    cs = s.pipeline.init_state(p0)
-    p, _, cs, a = jax.jit(s)(p0, None, cs, KEY, batch)
-    assert cs["ref"].shape == p0.shape
+    assert s.pipeline.stateful and s.pipeline.mode == "diff"
+    st, m = jax.jit(s)(s.init_state(p0), batch, KEY)
+    assert st.comm_state["ref"].shape == p0.shape
 
     s = make_block_step(loss3, cfg, topology=topo, participation=proc,
                         compress="int8")   # direct mode, no EF: stateless
-    assert not s.comm_stateful
-    ps = proc.init_state(None)
-    p, _, ps, a = jax.jit(s)(p0, None, ps, KEY, batch)
+    assert not s.pipeline.stateful
+    st, m = jax.jit(s)(s.init_state(p0), batch, KEY)
+    assert st.part_state is not None and st.comm_state is None
 
     s = make_block_step(loss3, cfg, topology=topo, participation=proc,
                         compress="topk", compress_ratio=0.5,
                         error_feedback=True)
-    ps, cs = proc.init_state(None), s.pipeline.init_state(p0)
+    st = s.init_state(p0)
     masks = []
     step = jax.jit(s)
     for i in range(3):
-        p0, _, ps, cs, a = step(p0, None, ps, cs, jax.random.PRNGKey(i),
-                                batch)
-        masks.append(np.asarray(a))
-    assert int(ps) == 3
+        st, m = step(st, batch, jax.random.PRNGKey(i))
+        masks.append(np.asarray(m["active"]))
+    assert int(st.part_state) == 3
     np.testing.assert_array_equal(np.stack(masks).sum(0), np.ones(K))
+
+    # missing comm state fails loudly, pointing at init_state
+    from repro.core import EngineState
+    with pytest.raises(ValueError, match="init_state"):
+        step(EngineState(p0, part_state=proc.init_state(None)), batch, KEY)
 
 
 def test_sharded_compress_none_bit_identical():
@@ -354,13 +357,14 @@ def test_sharded_compress_none_bit_identical():
     sampler = make_block_sampler(data, T=2, batch=1)
     batch = sampler(jax.random.PRNGKey(7))
     p0 = jnp.zeros((K, 2))
-    pa, _, aa = jax.jit(make_block_step(loss3, cfg, topology=topo))(
-        p0, None, KEY, batch)
-    pb, _, ab = jax.jit(make_block_step(loss3, cfg, topology=topo,
-                                        compress="none"))(p0, None, KEY,
-                                                          batch)
-    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
-    np.testing.assert_array_equal(np.asarray(aa), np.asarray(ab))
+    sa = make_block_step(loss3, cfg, topology=topo)
+    sb = make_block_step(loss3, cfg, topology=topo, compress="none")
+    sta, ma = jax.jit(sa)(sa.init_state(p0), batch, KEY)
+    stb, mb = jax.jit(sb)(sb.init_state(p0), batch, KEY)
+    np.testing.assert_array_equal(np.asarray(sta.params),
+                                  np.asarray(stb.params))
+    np.testing.assert_array_equal(np.asarray(ma["active"]),
+                                  np.asarray(mb["active"]))
 
 
 # ---------------------------------------------------------------------------
@@ -417,27 +421,32 @@ def test_make_compressor_validation_and_passthrough():
 
 
 def test_compressed_variants_factories():
-    cfg = variants.compressed_diffusion(8, mu=0.01, compress="topk",
-                                        ratio=0.2, error_feedback=True)
-    assert (cfg.compress, cfg.compress_ratio, cfg.error_feedback) == \
+    from repro.api import build
+    spec = variants.compressed_diffusion(8, mu=0.01, compress="topk",
+                                         ratio=0.2, error_feedback=True)
+    c = spec.compression
+    assert (c.kind, c.ratio, c.error_feedback) == ("topk", 0.2, True)
+    assert spec.run.local_steps == 1 and spec.topology.kind == "ring"
+    # ... and the DiffusionConfig view carries the same fields
+    dcfg = spec.to_diffusion_config()
+    assert (dcfg.compress, dcfg.compress_ratio, dcfg.error_feedback) == \
         ("topk", 0.2, True)
-    assert cfg.local_steps == 1 and cfg.topology == "ring"
-    # compress="none" recovers asynchronous diffusion exactly
+    # compress="none" recovers asynchronous diffusion exactly (spec equality)
     base = variants.asynchronous_diffusion(8, mu=0.01, q=0.5)
     none = variants.compressed_diffusion(8, mu=0.01, q=0.5, compress="none",
                                          ratio=1.0, error_feedback=False)
     assert none == base
     fa = variants.compressed_fedavg(8, T=5, mu=0.01, q=0.6)
-    assert fa.topology == "fedavg" and fa.compress == "int8"
-    assert fa.error_feedback
+    assert fa.topology.kind == "fedavg" and fa.compression.kind == "int8"
+    assert fa.compression.error_feedback
     # compress="none" with the factory's default error_feedback=True is
     # still the stateless identity pipeline (Identity never EF-wraps)
     data = make_regression_problem(K=8, N=20)
-    eng = DiffusionEngine(variants.compressed_diffusion(
+    eng = build(variants.compressed_diffusion(
         8, mu=0.01, compress="none"), data.loss_fn())
     assert eng.pipeline.mode == "identity" and not eng.pipeline.stateful
-    # the Gaussian-mask sigma knob threads from the config to the encoder
-    eng = DiffusionEngine(variants.compressed_diffusion(
+    # the Gaussian-mask sigma knob threads from the spec to the encoder
+    eng = build(variants.compressed_diffusion(
         8, mu=0.01, compress="gauss", ratio=0.5, sigma=0.3,
         error_feedback=False), data.loss_fn())
     assert eng.pipeline.compressor.sigma == 0.3

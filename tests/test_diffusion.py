@@ -50,14 +50,14 @@ def _drift_data():
 
 def _tail_mean(eng, sampler, blocks=700):
     """Time-averaged network mean over the second half of the run."""
-    params = jnp.zeros((8, 2))
+    state = eng.init_state(jnp.zeros((8, 2)))
     key = jax.random.PRNGKey(1)
     acc, n = np.zeros(2), 0
     for i in range(blocks):
         key, kb, ks = jax.random.split(key, 3)
-        params, _, _ = eng.block_step(params, None, ks, sampler(kb))
+        state, _ = eng.step(state, sampler(kb), ks)
         if i >= blocks // 2:
-            acc += np.asarray(params).mean(0)
+            acc += np.asarray(state.params).mean(0)
             n += 1
     return acc / n
 
@@ -137,7 +137,8 @@ def test_sparse_equals_dense_mixing(seed):
 
 
 def test_block_step_builder_matches_engine(data):
-    """core.sharded.make_block_step == DiffusionEngine.block_step."""
+    """core.sharded.make_block_step == DiffusionEngine.step under the
+    unified (state, batch, key) contract."""
     cfg = DiffusionConfig(num_agents=8, local_steps=2, step_size=0.02,
                           topology="ring", participation=0.7)
     eng = DiffusionEngine(cfg, data.loss_fn())
@@ -149,11 +150,16 @@ def test_block_step_builder_matches_engine(data):
     sampler = make_block_sampler(data, T=2, batch=2)
     key = jax.random.PRNGKey(42)
     batch = sampler(jax.random.PRNGKey(7))
-    p1, _, a1 = eng.block_step(params, None, key, batch)
-    p2, _, a2 = step(params, None, key, batch)
-    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
-    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5,
-                               atol=1e-6)
+    s1, m1 = eng.step(eng.init_state(params), batch, key)
+    s2, m2 = step(step.init_state(params), batch, key)
+    np.testing.assert_allclose(np.asarray(m1["active"]),
+                               np.asarray(m2["active"]))
+    np.testing.assert_allclose(np.asarray(s1.params), np.asarray(s2.params),
+                               rtol=1e-5, atol=1e-6)
+    # absent state components stay None in both engines' outputs
+    for s in (s1, s2):
+        assert s.opt_state is None
+        assert s.part_state is None and s.comm_state is None
 
 
 @pytest.mark.slow

@@ -20,24 +20,25 @@ def test_exact_diffusion_reduces_heterogeneity_bias():
                                    noise_high=0.05, w_star_spread=0.5)
     prob = data.problem()
     w_o = prob.w_opt(None)
-    cfg = vanilla_diffusion(K, mu=0.01, topology="ring")
+    spec = vanilla_diffusion(K, mu=0.01, topology="ring")
+    cfg = spec.to_diffusion_config()
     sampler = make_block_sampler(data, T=1, batch=8)
 
     def run_std():
         eng = DiffusionEngine(cfg, data.loss_fn())
-        params = jnp.zeros((K, 2))
+        state = eng.init_state(jnp.zeros((K, 2)))
         key = jax.random.PRNGKey(0)
         acc, n = np.zeros(2), 0
         for i in range(1200):
             key, kb, ks = jax.random.split(key, 3)
-            params, _, _ = eng.block_step(params, None, ks, sampler(kb))
+            state, _ = eng.step(state, sampler(kb), ks)
             if i >= 600:
-                acc += np.asarray(params).mean(0)
+                acc += np.asarray(state.params).mean(0)
                 n += 1
         return acc / n
 
     def run_exact():
-        eng = ExactDiffusionEngine(cfg, data.loss_fn())
+        eng = ExactDiffusionEngine(spec, data.loss_fn())  # spec accepted too
         w = jnp.zeros((K, 2))
         psi = w
         key = jax.random.PRNGKey(0)
@@ -64,9 +65,10 @@ def test_exact_diffusion_rejects_local_steps():
         ExactDiffusionEngine(cfg, data.loss_fn())
 
 
-def test_stateful_step_matches_stateless_for_iid():
-    """For the paper's i.i.d. process the state-threading block step must
-    reproduce the classic key-only block step bit-for-bit."""
+def test_unified_step_is_pure_and_state_minimal_for_iid():
+    """The unified step is a pure function of (state, batch, key), and for
+    the paper's i.i.d. process a bare EngineState(params) is the complete
+    state — init_state adds nothing."""
     K = 6
     data = make_regression_problem(K=K, N=40, seed=1)
     cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.02,
@@ -77,10 +79,15 @@ def test_stateful_step_matches_stateless_for_iid():
     params = jax.random.normal(jax.random.PRNGKey(0), (K, 2))
     key = jax.random.PRNGKey(42)
 
-    p1, _, active = eng.block_step(params, None, key, batch)
-    p2, _, _, active2 = eng.block_step_stateful(params, None, (), key, batch)
-    np.testing.assert_array_equal(np.asarray(active), np.asarray(active2))
-    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-6)
+    init = eng.init_state(params)
+    assert init.part_state is None and init.comm_state is None
+    from repro.core import EngineState
+    s1, m1 = eng.step(EngineState(params), batch, key)
+    s2, m2 = eng.step(init, batch, key)
+    np.testing.assert_array_equal(np.asarray(m1["active"]),
+                                  np.asarray(m2["active"]))
+    np.testing.assert_array_equal(np.asarray(s1.params),
+                                  np.asarray(s2.params))
 
 
 class _AllOff(schedules.ParticipationProcess):
@@ -111,14 +118,19 @@ def test_external_process_all_inactive_is_noop():
     eng = DiffusionEngine(cfg, data.loss_fn(), participation=_AllOff(K))
     sampler = make_block_sampler(data, T=2, batch=1)
     params = jnp.ones((K, 2)) * 2.0
-    out, _, state, active = eng.block_step_stateful(
-        params, None, jnp.zeros((), jnp.int32), jax.random.PRNGKey(7),
-        sampler(jax.random.PRNGKey(0)))
-    assert int(state) == 1 and float(active.sum()) == 0.0
-    np.testing.assert_allclose(np.asarray(out), 2.0)
+    state = eng.init_state(params, key=jax.random.PRNGKey(1))
+    assert int(state.part_state) == 0
+    state, metrics = eng.step(state, sampler(jax.random.PRNGKey(0)),
+                              jax.random.PRNGKey(7))
+    assert int(state.part_state) == 1
+    assert float(metrics["active"].sum()) == 0.0
+    np.testing.assert_allclose(np.asarray(state.params), 2.0)
 
 
-def test_stateless_block_step_rejects_stateful_process():
+def test_step_rejects_missing_state_for_stateful_process():
+    """A stateful process with part_state=None must fail loudly, pointing
+    at init_state (the old 3-method signature matrix is gone)."""
+    from repro.core import EngineState
     K = 4
     data = make_regression_problem(K=K, N=40, seed=2)
     cfg = DiffusionConfig(num_agents=K, local_steps=1, step_size=0.05,
@@ -127,9 +139,12 @@ def test_stateless_block_step_rejects_stateful_process():
                           participation=schedules.MarkovAvailability(
                               0.5, 0.5, num_agents=K))
     sampler = make_block_sampler(data, T=1, batch=1)
-    with pytest.raises(ValueError, match="stateful"):
-        eng.block_step(jnp.zeros((K, 2)), None, jax.random.PRNGKey(0),
-                       sampler(jax.random.PRNGKey(1)))
+    with pytest.raises(ValueError, match="init_state"):
+        eng.step(EngineState(jnp.zeros((K, 2))), sampler(jax.random.PRNGKey(1)),
+                 jax.random.PRNGKey(0))
+    assert not hasattr(eng, "block_step")
+    assert not hasattr(eng, "block_step_stateful")
+    assert not hasattr(eng, "block_step_comm")
 
 
 def test_pure_dp_pspecs_replicate_params():

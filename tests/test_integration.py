@@ -90,27 +90,28 @@ def test_multidevice_block_step_subprocess():
         key = jax.random.PRNGKey(42)
         params = jax.random.normal(jax.random.PRNGKey(0), (K, 2))
 
+        from repro.core.state import EngineState
         outs = {}
         for mix in ("dense", "sparse"):
             step = make_block_step(loss3, cfg, A, mix=mix,
                                    offsets=topo.neighbor_offsets_ring())
+            p_shard = EngineState(NamedSharding(mesh, P("data", None)))
             with mesh:
                 jstep = jax.jit(step,
-                    in_shardings=(NamedSharding(mesh, P("data", None)), None,
-                                  None,
+                    in_shardings=(p_shard,
                                   jax.tree.map(lambda _: NamedSharding(
-                                      mesh, P(None, "data")), batch)),
-                    out_shardings=(NamedSharding(mesh, P("data", None)),
-                                   None, None))
-                p, _, act = jstep(params, None, key, batch)
-            outs[mix] = np.asarray(p)
+                                      mesh, P(None, "data")), batch),
+                                  None),
+                    out_shardings=(p_shard, None))
+                st, m = jstep(EngineState(params), batch, key)
+            outs[mix] = np.asarray(st.params)
 
         # reference: single-device stacked engine
         eng = DiffusionEngine(cfg, data.loss_fn())
-        ref, _, act_ref = eng.block_step(params, None, key, batch)
+        ref_state, _ = eng.step(eng.init_state(params), batch, key)
         for mix, got in outs.items():
-            np.testing.assert_allclose(got, np.asarray(ref), rtol=1e-5,
-                                       atol=1e-6, err_msg=mix)
+            np.testing.assert_allclose(got, np.asarray(ref_state.params),
+                                       rtol=1e-5, atol=1e-6, err_msg=mix)
         print("MULTIDEVICE_OK")
     """)
     env = dict(os.environ)
@@ -140,14 +141,15 @@ def test_train_driver_e2e_loss_decreases():
         topo = dcfg.make_topology()
         opt = adam()
         loss_fn = lambda p, b, r: tf.train_loss(p, cfg, b, remat=False)
-        step = jax.jit(make_block_step(loss_fn, dcfg,
-                                       jnp.asarray(topo.A, jnp.float32),
-                                       mix="dense",
-                                       grad_transform=opt.update))
+        block_step = make_block_step(loss_fn, dcfg,
+                                     jnp.asarray(topo.A, jnp.float32),
+                                     mix="dense",
+                                     grad_transform=opt.update)
+        step = jax.jit(block_step)
         key = jax.random.PRNGKey(0)
         params = jax.vmap(lambda k: tf.init_params(k, cfg))(
             jax.random.split(key, K))
-        state = opt.init(params)
+        state = block_step.init_state(params, opt.init(params))
         # FIXED dataset (memorization task) so loss genuinely decreases
         data = lm_token_batch(jax.random.PRNGKey(9), (T, K, 2, 32),
                               cfg.vocab_size)
@@ -156,8 +158,9 @@ def test_train_driver_e2e_loss_decreases():
         l0 = float(eval_loss(params, jax.tree.map(lambda x: x[0], data)).mean())
         for i in range(30):
             key, ks = jax.random.split(key)
-            params, state, _ = step(params, state, ks, data)
-        l1 = float(eval_loss(params, jax.tree.map(lambda x: x[0], data)).mean())
+            state, _ = step(state, data, ks)
+        l1 = float(eval_loss(state.params,
+                             jax.tree.map(lambda x: x[0], data)).mean())
         assert l1 < 0.7 * l0, (l0, l1)
         print("E2E_OK", l0, "->", l1)
     """)

@@ -143,8 +143,8 @@ def test_engine_pallas_backend_matches_dense():
         eng = DiffusionEngine(cfg, data.loss_fn(),
                               mixer=make_mixer(mix, cfg.make_topology(),
                                                tile_m=128, interpret=True))
-        p, _, a = eng.block_step(params, None, key, batch)
-        outs[mix] = (np.asarray(p), np.asarray(a))
+        s, m = eng.step(eng.init_state(params), batch, key)
+        outs[mix] = (np.asarray(s.params), np.asarray(m["active"]))
     np.testing.assert_array_equal(outs["dense"][1], outs["pallas"][1])
     np.testing.assert_allclose(outs["pallas"][0], outs["dense"][0], atol=1e-5)
 
@@ -230,7 +230,8 @@ def test_engine_run_threads_markov_state():
 
 
 def test_sharded_step_with_cyclic_process():
-    """make_block_step with a stateful process threads (state, mask)."""
+    """make_block_step with a stateful process threads the state through
+    EngineState.part_state."""
     from repro.core.sharded import make_block_step
     K = 6
     data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=3)
@@ -239,19 +240,119 @@ def test_sharded_step_with_cyclic_process():
     topo = cfg.make_topology()
     proc = CyclicGroups(K, 3)
     loss3 = lambda p, b, rng: data.loss_fn()(p, b)
-    step = jax.jit(make_block_step(loss3, cfg, topology=topo, mix="sparse",
-                                   participation=proc))
+    block_step = make_block_step(loss3, cfg, topology=topo, mix="sparse",
+                                 participation=proc)
+    step = jax.jit(block_step)
     sampler = make_block_sampler(data, T=2, batch=1)
-    params = jnp.zeros((K, 2))
-    state = proc.init_state(None)
+    state = block_step.init_state(jnp.zeros((K, 2)))
     masks = []
     for i in range(3):
-        params, _, state, active = step(params, None, state,
-                                        jax.random.PRNGKey(i),
-                                        sampler(jax.random.PRNGKey(10 + i)))
-        masks.append(np.asarray(active))
-    assert int(state) == 3
+        state, metrics = step(state, sampler(jax.random.PRNGKey(10 + i)),
+                              jax.random.PRNGKey(i))
+        masks.append(np.asarray(metrics["active"]))
+    assert int(state.part_state) == 3
     np.testing.assert_array_equal(np.stack(masks).sum(0), np.ones(K))
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation (SLSGD trimmed mean / coordinate median)
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_outlier_parity_under_partial_participation():
+    """SLSGD parity gate: with one Byzantine agent in the ACTIVE set, the
+    trimmed mean equals the numpy trimmed mean over the active values (the
+    outlier contributes nothing), and inactive agents keep their params."""
+    from repro.core import TrimmedMeanMixer
+    K = 8
+    key = jax.random.PRNGKey(3)
+    vals = jax.random.normal(key, (K, 5))
+    vals = vals.at[2].set(1e4)                       # Byzantine outlier
+    params = {"w": vals}
+    active = jnp.asarray([1, 1, 1, 0, 1, 1, 0, 1], jnp.float32)
+    out = TrimmedMeanMixer(K, trim=1)(params, active)
+
+    act_idx = np.where(np.asarray(active) > 0)[0]
+    v = np.asarray(vals)[act_idx]                    # (S, 5) active values
+    srt = np.sort(v, axis=0)
+    expected = srt[1:-1].mean(axis=0)                # trim 1 each side
+    for k in act_idx:
+        np.testing.assert_allclose(np.asarray(out["w"][k]), expected,
+                                   rtol=1e-5, atol=1e-5)
+    for k in (3, 6):                                 # inactive: frozen
+        np.testing.assert_array_equal(np.asarray(out["w"][k]),
+                                      np.asarray(vals[k]))
+    # the outlier's magnitude is gone from every active agent's iterate
+    assert np.abs(np.asarray(out["w"])[act_idx]).max() < 10.0
+
+
+def test_coordinate_median_matches_numpy():
+    from repro.core import CoordinateMedianMixer
+    K = 7
+    vals = jax.random.normal(jax.random.PRNGKey(5), (K, 4))
+    active = jnp.asarray([1, 0, 1, 1, 1, 0, 1], jnp.float32)
+    out = CoordinateMedianMixer(K)({"w": vals}, active)
+    act_idx = np.where(np.asarray(active) > 0)[0]
+    expected = np.median(np.asarray(vals)[act_idx], axis=0)
+    for k in act_idx:
+        np.testing.assert_allclose(np.asarray(out["w"][k]), expected,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_trimmed_mean_degenerate_active_sets():
+    """Fewer than 2 trim + 1 active agents: the trim clips down to the
+    median rather than dying; zero active agents freeze everyone."""
+    from repro.core import TrimmedMeanMixer
+    K = 6
+    vals = jnp.asarray(np.arange(K, dtype=np.float32)[:, None])
+    mixer = TrimmedMeanMixer(K, trim=2)
+    out = mixer({"w": vals}, jnp.asarray([1, 1, 0, 0, 0, 0], jnp.float32))
+    # S=2 <= 2*trim: clipped to b=0 -> plain mean of {0, 1}
+    np.testing.assert_allclose(np.asarray(out["w"][:2, 0]), 0.5, atol=1e-6)
+    out = mixer({"w": vals}, jnp.zeros((K,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(vals))
+
+
+def test_robust_mixer_in_engine_suppresses_outlier():
+    """End-to-end: a DiffusionEngine with the trimmed-mean backend keeps
+    training sane while one agent broadcasts garbage every block (via its
+    poisoned iterate), where the linear fedavg mixer is dragged away."""
+    from repro.core import TrimmedMeanMixer, make_mixer
+    K = 8
+    data = make_regression_problem(K=K, N=60, M=2, rho=0.1, seed=0)
+    cfg = DiffusionConfig(num_agents=K, local_steps=1, step_size=0.05,
+                          topology="fedavg", participation=0.9)
+    sampler = make_block_sampler(data, T=1, batch=2)
+    w_o = data.problem().w_opt(np.full(K, 0.9))
+
+    def poisoned_run(mixer):
+        eng = DiffusionEngine(cfg, data.loss_fn(), mixer=mixer)
+        state = eng.init_state(jnp.zeros((K, 2)))
+        key = jax.random.PRNGKey(0)
+        for i in range(120):
+            key, kb, ks = jax.random.split(key, 3)
+            # agent 0 is Byzantine: overwrite its iterate before the step
+            poisoned = state.params.at[0].set(100.0)
+            state = state.replace(params=poisoned)
+            state, _ = eng.step(state, sampler(kb), ks)
+        dists = np.linalg.norm(np.asarray(state.params)[1:]
+                               - np.asarray(w_o), axis=1)
+        return float(np.median(dists))
+
+    d_robust = poisoned_run(TrimmedMeanMixer(K, trim=1))
+    d_linear = poisoned_run(make_mixer("dense", cfg.make_topology()))
+    assert d_robust < 1.0, d_robust
+    assert d_robust < 0.1 * d_linear, (d_robust, d_linear)
+
+
+def test_robust_mixer_rejects_compressed_pipeline():
+    from repro.core import CommPipeline, TrimmedMeanMixer
+    from repro.core.compression import make_compressor
+    with pytest.raises(ValueError, match="robust"):
+        CommPipeline(TrimmedMeanMixer(8, trim=1),
+                     make_compressor("topk", ratio=0.5))
+    # identity pipeline is fine
+    pipe = CommPipeline(TrimmedMeanMixer(8, trim=1))
+    assert pipe.mode == "identity" and not pipe.stateful
 
 
 def test_process_validation():

@@ -90,11 +90,13 @@ def test_pipeline_feeds_engine():
     dcfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=1e-2,
                            topology="ring", participation=0.9)
     topo = dcfg.make_topology()
-    step = jax.jit(make_block_step(
+    block_step = make_block_step(
         lambda p, b, r: tf.train_loss(p, cfg, b, remat=False), dcfg,
-        jnp.asarray(topo.A, jnp.float32), mix="dense"))
+        jnp.asarray(topo.A, jnp.float32), mix="dense")
+    step = jax.jit(block_step)
     params = jax.vmap(lambda k: tf.init_params(k, cfg))(
         jax.random.split(jax.random.PRNGKey(0), K))
-    params, _, active = step(params, None, jax.random.PRNGKey(1), it.block(0))
-    for leaf in jax.tree.leaves(params):
+    state, _ = step(block_step.init_state(params), it.block(0),
+                    jax.random.PRNGKey(1))
+    for leaf in jax.tree.leaves(state.params):
         assert not bool(jnp.isnan(leaf).any())

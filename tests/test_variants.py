@@ -1,18 +1,22 @@
-"""Section IV: Algorithm 1 reduces exactly to known algorithms."""
+"""Section IV: Algorithm 1 reduces exactly to known algorithms.
+
+The variants factories return declarative ExperimentSpecs; repro.api.build
+materializes them (bit-identical to the legacy constructor path — asserted
+in tests/test_api.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import build
 from repro.core import variants
-from repro.core.diffusion import DiffusionEngine
 from repro.data.synthetic import make_block_sampler, make_regression_problem
 
 K = 6
 
 
-def _run(cfg, data, blocks=40, seed=0):
-    eng = DiffusionEngine(cfg, data.loss_fn())
-    sampler = make_block_sampler(data, T=cfg.local_steps, batch=1)
+def _run(spec, data, blocks=40, seed=0):
+    eng = build(spec, data.loss_fn())
+    sampler = make_block_sampler(data, T=spec.run.local_steps, batch=1)
     params = jnp.zeros((K, 2))
     params, _, _ = eng.run(params, sampler, blocks, seed=seed)
     return np.asarray(params)
@@ -22,8 +26,8 @@ def test_fedavg_full_reduction():
     """q=1, A=(1/K)11^T: after every block, all agents hold the same model
     (eq. 39-40: exact average)."""
     data = make_regression_problem(K=K, N=50, seed=0)
-    cfg = variants.fedavg_full(K, T=3, mu=0.02)
-    out = _run(cfg, data)
+    spec = variants.fedavg_full(K, T=3, mu=0.02)
+    out = _run(spec, data)
     np.testing.assert_allclose(out, np.broadcast_to(out.mean(0), out.shape),
                                atol=1e-6)
 
@@ -31,10 +35,10 @@ def test_fedavg_full_reduction():
 def test_fedavg_manual_equivalence():
     """Algorithm 1 with fedavg topology == hand-rolled FedAvg, same seeds."""
     data = make_regression_problem(K=K, N=50, seed=1)
-    cfg = variants.fedavg_full(K, T=2, mu=0.05)
-    eng = DiffusionEngine(cfg, data.loss_fn())
+    spec = variants.fedavg_full(K, T=2, mu=0.05)
+    eng = build(spec, data.loss_fn())
     sampler = make_block_sampler(data, T=2, batch=1)
-    params = jnp.zeros((K, 2))
+    state = eng.init_state(jnp.zeros((K, 2)))
     loss_g = jax.vmap(jax.grad(data.loss_fn()))
 
     manual = jnp.zeros((K, 2))
@@ -42,44 +46,44 @@ def test_fedavg_manual_equivalence():
     for i in range(10):
         key, kb, ks = jax.random.split(key, 3)
         batch = sampler(kb)
-        params, _, _ = eng.block_step(params, None, ks, batch)
+        state, _ = eng.step(state, batch, ks)
         # manual FedAvg with the same batches
         for t in range(2):
             bt = jax.tree.map(lambda x: x[t], batch)
             manual = manual - 0.05 * loss_g(manual, bt)
         manual = jnp.broadcast_to(manual.mean(0), manual.shape)
-    np.testing.assert_allclose(np.asarray(params), np.asarray(manual),
+    np.testing.assert_allclose(np.asarray(state.params), np.asarray(manual),
                                rtol=1e-5, atol=1e-6)
 
 
 def test_vanilla_diffusion_reduction():
     """T=1, q=1: Algorithm 1 == classical ATC diffusion, same seeds."""
     data = make_regression_problem(K=K, N=50, seed=2)
-    cfg = variants.vanilla_diffusion(K, mu=0.05, topology="ring")
-    eng = DiffusionEngine(cfg, data.loss_fn())
+    spec = variants.vanilla_diffusion(K, mu=0.05, topology="ring")
+    eng = build(spec, data.loss_fn())
     A = np.asarray(eng.topology.A, dtype=np.float32)
     sampler = make_block_sampler(data, T=1, batch=1)
     loss_g = jax.vmap(jax.grad(data.loss_fn()))
 
-    params = jnp.zeros((K, 2))
+    state = eng.init_state(jnp.zeros((K, 2)))
     manual = jnp.zeros((K, 2))
     key = jax.random.PRNGKey(0)
     for i in range(10):
         key, kb, ks = jax.random.split(key, 3)
         batch = sampler(kb)
-        params, _, _ = eng.block_step(params, None, ks, batch)
+        state, _ = eng.step(state, batch, ks)
         bt = jax.tree.map(lambda x: x[0], batch)
         psi = manual - 0.05 * loss_g(manual, bt)          # adapt (eq. 44)
         manual = jnp.asarray(A).T @ psi                   # combine (eq. 45)
-    np.testing.assert_allclose(np.asarray(params), np.asarray(manual),
+    np.testing.assert_allclose(np.asarray(state.params), np.asarray(manual),
                                rtol=1e-5, atol=1e-6)
 
 
 def test_asynchronous_diffusion_is_T1(rng=None):
     data = make_regression_problem(K=K, N=50, seed=3)
-    cfg = variants.asynchronous_diffusion(K, mu=0.03, q=0.6)
-    assert cfg.local_steps == 1
-    out = _run(cfg, data, blocks=200)
+    spec = variants.asynchronous_diffusion(K, mu=0.03, q=0.6)
+    assert spec.run.local_steps == 1
+    out = _run(spec, data, blocks=200)
     # converges near the drifted optimum
     w = data.problem().w_opt(np.full(K, 0.6))
     assert np.linalg.norm(out.mean(0) - w) < 0.3
@@ -87,8 +91,8 @@ def test_asynchronous_diffusion_is_T1(rng=None):
 
 def test_decentralized_fedavg_reduction():
     data = make_regression_problem(K=K, N=50, seed=4)
-    cfg = variants.decentralized_fedavg(K, T=4, mu=0.02)
-    assert cfg.local_steps == 4 and cfg.participation == 1.0
-    out = _run(cfg, data, blocks=300)
+    spec = variants.decentralized_fedavg(K, T=4, mu=0.02)
+    assert spec.run.local_steps == 4 and spec.participation.q == 1.0
+    out = _run(spec, data, blocks=300)
     w = data.problem().w_opt(None)
     assert np.linalg.norm(out.mean(0) - w) < 0.3
