@@ -11,6 +11,7 @@ through :func:`get_preset` / the launchers' ``--preset`` flag.
 from repro.api.spec import (  # noqa: F401
     CompressionSpec,
     ExperimentSpec,
+    GraphSpec,
     MixerSpec,
     ModelSpec,
     OptimizerSpec,
@@ -22,6 +23,7 @@ from repro.api.spec import (  # noqa: F401
 )
 from repro.api.build import (  # noqa: F401
     COMPRESSORS,
+    GRAPHS,
     MIXERS,
     MODELS,
     ModelBundle,

@@ -25,10 +25,11 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 
-from repro.api.spec import (CompressionSpec, ExperimentSpec, MixerSpec,
-                            ModelSpec, OptimizerSpec, ParticipationSpec,
-                            Registry, TopologySpec)
+from repro.api.spec import (CompressionSpec, ExperimentSpec, GraphSpec,
+                            MixerSpec, ModelSpec, OptimizerSpec,
+                            ParticipationSpec, Registry, TopologySpec)
 from repro.core import compression as comp_lib
+from repro.core import graphs as graph_lib
 from repro.core import mixing
 from repro.core import schedules
 from repro.core import topology as topo_lib
@@ -42,6 +43,7 @@ __all__ = [
     "build",
     "ModelBundle",
     "TOPOLOGIES",
+    "GRAPHS",
     "PARTICIPATION",
     "MIXERS",
     "COMPRESSORS",
@@ -50,6 +52,7 @@ __all__ = [
 ]
 
 TOPOLOGIES = Registry("topology")        # (TopologySpec, K) -> Topology
+GRAPHS = Registry("graph")               # (GraphSpec, topology, K) -> process
 PARTICIPATION = Registry("participation")  # (ParticipationSpec, K) -> process
 MIXERS = Registry("mixer")               # (MixerSpec, topology, K) -> Mixer
 COMPRESSORS = Registry("compressor")     # (CompressionSpec,) -> Compressor
@@ -67,6 +70,28 @@ def _register_topologies():
 
 
 _register_topologies()
+
+
+# -- graph processes (time-varying topology, core/graphs.py) ----------------
+
+@GRAPHS.register("static")
+def _static_graph(spec: GraphSpec, topology, K: int):
+    return graph_lib.StaticGraph(topology)
+
+
+@GRAPHS.register("link_dropout")
+def _link_dropout(spec: GraphSpec, topology, K: int):
+    return graph_lib.LinkDropout(topology, drop=spec.drop, corr=spec.corr)
+
+
+@GRAPHS.register("gossip")
+def _gossip(spec: GraphSpec, topology, K: int):
+    return graph_lib.GossipMatching(topology)
+
+
+@GRAPHS.register("tv_erdos")
+def _tv_erdos(spec: GraphSpec, topology, K: int):
+    return graph_lib.TimeVaryingErdos(K, p=spec.p, topology=topology)
 
 
 # -- participation processes ------------------------------------------------
@@ -187,7 +212,13 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
     topology = (TOPOLOGIES.get(spec.topology.kind)(spec.topology, K)
                 if K > 1 else None)
     process = PARTICIPATION.get(spec.participation.kind)(spec.participation, K)
-    mixer = MIXERS.get(spec.mixer.kind)(spec.mixer, topology, K)
+    graph = (GRAPHS.get(spec.graph.kind)(spec.graph, topology, K)
+             if topology is not None else None)
+    # "auto" must not pick the sparse path for graphs that realize edges
+    # outside the base support; resolve before the registry lookup
+    mix_kind = graph_lib.resolve_mix_for_graph(spec.mixer.kind, graph)
+    mixer = MIXERS.get(mix_kind)(spec.mixer, topology, K)
+    graph_lib.check_mixer_support(mixer, graph)
     compressor = COMPRESSORS.get(spec.compression.kind)(spec.compression)
     optimizer = OPTIMIZERS.get(spec.optimizer.kind)(spec.optimizer)
     model = MODELS.get(spec.model.kind)(spec.model)
@@ -208,7 +239,8 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
                              "loss_fn (or select a self-contained model "
                              "spec, e.g. kind='transformer')")
         eng = DiffusionEngine(cfg, loss, grad_transform, mixer=mixer,
-                              participation=process, compressor=compressor)
+                              participation=process, compressor=compressor,
+                              graph=graph)
     else:
         loss = loss_fn if loss_fn is not None else (model.loss_rng if model
                                                     else None)
@@ -217,7 +249,7 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
                              "3-arg loss_fn for the sharded engine")
         eng = ShardedEngine(loss, cfg, topology=topology, mix=mixer,
                             participation=process, compress=compressor,
-                            grad_transform=grad_transform)
+                            graph=graph, grad_transform=grad_transform)
 
     eng.spec = spec
     eng.optimizer = optimizer

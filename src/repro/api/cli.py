@@ -31,15 +31,23 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-from repro.api.spec import (CompressionSpec, ExperimentSpec, MixerSpec,
-                            ModelSpec, OptimizerSpec, ParticipationSpec,
-                            RunSpec, TopologySpec)
+from repro.api.spec import (CompressionSpec, ExperimentSpec, GraphSpec,
+                            MixerSpec, ModelSpec, OptimizerSpec,
+                            ParticipationSpec, RunSpec, TopologySpec)
 
 __all__ = ["add_spec_args", "spec_from_args", "get_preset"]
 
 _MIX_CHOICES = ["dense", "sparse", "pallas", "auto", "none",
                 "trimmed_mean", "median"]
 _COMPRESS_CHOICES = ["none", "topk", "randk", "int8", "gauss"]
+
+
+def _gamma_arg(s: str):
+    """--comm-gamma accepts a float or the literal "auto" (spectral-gap
+    floor + observed-contraction anneal, see core/mixing.CommPipeline)."""
+    if s == "auto":
+        return s
+    return float(s)
 
 
 class _Track(argparse.Action):
@@ -102,7 +110,27 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
     g.add_argument("--step-size", type=float, default=0.5,
                    help="mu (RunSpec.step_size)")
     g.add_argument("--topology", default="ring", action=_Track,
-                   help="combination graph (TopologySpec.kind)")
+                   help="base combination graph (TopologySpec.kind)")
+    g.add_argument("--topology-hops", type=int, default=None, action=_Track,
+                   help="ring: neighbors per side (TopologySpec.kwargs)")
+    g.add_argument("--topology-p", type=float, default=None, action=_Track,
+                   help="erdos: edge probability (TopologySpec.kwargs)")
+    g.add_argument("--topology-seed", type=int, default=None, action=_Track,
+                   help="erdos: graph seed (TopologySpec.kwargs)")
+    g.add_argument("--topology-rows", type=int, default=None, action=_Track,
+                   help="grid: row count (TopologySpec.kwargs)")
+    g.add_argument("--graph", default="static", action=_Track,
+                   help="time variation of the combination graph "
+                        "(GraphSpec.kind): static|link_dropout|gossip|"
+                        "tv_erdos|<registered>")
+    g.add_argument("--link-drop", type=float, default=0.3, action=_Track,
+                   help="link_dropout: per-block edge failure probability "
+                        "(GraphSpec.drop)")
+    g.add_argument("--graph-corr", type=float, default=0.0, action=_Track,
+                   help="link_dropout: link-outage autocorrelation "
+                        "(GraphSpec.corr)")
+    g.add_argument("--graph-p", type=float, default=0.3, action=_Track,
+                   help="tv_erdos: per-block edge probability (GraphSpec.p)")
     g.add_argument("--participation", type=float, default=0.9,
                    help="activation probability q (ParticipationSpec.q)")
     g.add_argument("--participation-process", default="iid", action=_Track,
@@ -137,9 +165,15 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                    help="Gaussian-mask noise scale (CompressionSpec.sigma)")
     g.add_argument("--error-feedback", action=_TrackTrue, default=False,
                    help="EF residual memory (CompressionSpec.error_feedback)")
-    g.add_argument("--comm-gamma", type=float, default=None, action=_Track,
+    g.add_argument("--comm-gamma", type=_gamma_arg, default=None,
+                   action=_Track,
                    help="consensus step of the compressed exchange "
-                        "(CompressionSpec.gamma; default auto)")
+                        "(CompressionSpec.gamma): a float, or 'auto' to "
+                        "derive the CHOCO floor from the topology's "
+                        "spectral gap and anneal from the observed "
+                        "contraction (diff-mode pipelines, i.e. the "
+                        "sparsifying compressors; other modes keep the "
+                        "fixed default and warn)")
     g.add_argument("--blocks", type=int, default=20,
                    help="block iterations (RunSpec.blocks)")
     g.add_argument("--batch", type=int, default=2,
@@ -154,6 +188,10 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
 #: dest -> (sub-spec attribute, field name)
 _PRESET_OVERRIDES = {
     "topology": ("topology", "kind"),
+    "graph": ("graph", "kind"),
+    "link_drop": ("graph", "drop"),
+    "graph_corr": ("graph", "corr"),
+    "graph_p": ("graph", "p"),
     "mix": ("mixer", "kind"),
     "trim": ("mixer", "trim"),
     "compress": ("compression", "kind"),
@@ -164,6 +202,27 @@ _PRESET_OVERRIDES = {
     "optimizer": ("optimizer", "kind"),
     "drift_correction": ("run", "drift_correction"),
 }
+
+
+#: --topology-<k> flags that merge into TopologySpec.kwargs (satellite fix:
+#: spec_from_args used to forward only the kind, so hops/p/seed/rows were
+#: unreachable from the launchers)
+_TOPOLOGY_KWARG_FLAGS = {"topology_hops": "hops", "topology_p": "p",
+                         "topology_seed": "seed", "topology_rows": "rows"}
+
+
+def _topology_kwargs(args, base: tuple = (),
+                     explicit_only: bool = False) -> tuple:
+    """TopologySpec.kwargs from the --topology-* flags, merged over
+    ``base`` and returned as sorted (k, v) pairs."""
+    kwargs = dict(base)
+    explicit = getattr(args, "_explicit", set())
+    for dest, name in _TOPOLOGY_KWARG_FLAGS.items():
+        value = getattr(args, dest, None)
+        if value is None or (explicit_only and dest not in explicit):
+            continue
+        kwargs[name] = value
+    return tuple(sorted(kwargs.items()))
 
 
 def _run_overlay(spec: ExperimentSpec, args) -> ExperimentSpec:
@@ -179,6 +238,11 @@ def _run_overlay(spec: ExperimentSpec, args) -> ExperimentSpec:
         if dest in explicit:
             spec = spec.replace(**{sub: dataclasses.replace(
                 getattr(spec, sub), **{field: getattr(args, dest)})})
+    kwargs = _topology_kwargs(args, base=spec.topology.kwargs,
+                              explicit_only=True)
+    if kwargs != tuple(spec.topology.kwargs):
+        spec = spec.replace(topology=dataclasses.replace(
+            spec.topology, kwargs=kwargs))
     if "participation_process" in explicit:
         spec = spec.replace(participation=ParticipationSpec(
             kind=args.participation_process, q=args.participation,
@@ -202,7 +266,10 @@ def spec_from_args(args) -> ExperimentSpec:
                        num_groups=args.num_groups)
         return _run_overlay(spec, args)
     return ExperimentSpec(
-        topology=TopologySpec(kind=args.topology),
+        topology=TopologySpec(kind=args.topology,
+                              kwargs=_topology_kwargs(args)),
+        graph=GraphSpec(kind=args.graph, drop=args.link_drop,
+                        corr=args.graph_corr, p=args.graph_p),
         participation=ParticipationSpec(
             kind=args.participation_process, q=args.participation,
             corr=args.markov_corr, num_groups=args.num_groups),

@@ -4,7 +4,9 @@ Every experiment the repo can run is one frozen, JSON-round-trippable tree
 of sub-specs:
 
     ExperimentSpec
-      ├─ TopologySpec        which graph backs the combination matrix A
+      ├─ TopologySpec        which base graph backs the combination matrix A
+      ├─ GraphSpec           how that graph varies over time (core/graphs.py:
+      │                      static | link_dropout | gossip | tv_erdos)
       ├─ ParticipationSpec   the agent-availability model (eq. 18 default)
       ├─ MixerSpec           combination-step backend (core/mixing.py)
       ├─ CompressionSpec     wire compressor + exchange mode (CommPipeline)
@@ -33,6 +35,7 @@ from typing import Any, Optional, Union
 __all__ = [
     "Registry",
     "TopologySpec",
+    "GraphSpec",
     "ParticipationSpec",
     "MixerSpec",
     "CompressionSpec",
@@ -98,6 +101,22 @@ class TopologySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    """Time variation of the combination graph (core/graphs.py).
+
+    ``kind="static"`` wraps the base topology (bit-identical to the
+    pre-redesign baked-A path); the dynamic kinds sample a fresh
+    symmetric doubly-stochastic matrix every block.
+    """
+
+    kind: str = "static"         # static|link_dropout|gossip|tv_erdos|
+                                 # <registered>
+    drop: float = 0.3            # link_dropout: per-block edge failure prob
+    corr: float = 0.0            # link_dropout: link-outage autocorrelation
+    p: float = 0.3               # tv_erdos: per-block edge probability
+
+
+@dataclasses.dataclass(frozen=True)
 class ParticipationSpec:
     """Agent-availability model (core/schedules.py)."""
 
@@ -127,7 +146,9 @@ class CompressionSpec:
     sigma: float = 0.0           # Gaussian-mask noise scale
     error_feedback: bool = False
     mode: str = "auto"           # auto|identity|direct|diff
-    gamma: Optional[float] = None      # consensus step (None: auto)
+    gamma: Union[float, str, None] = None  # consensus step: float fixed,
+                                 # None legacy heuristic, "auto" spectral-
+                                 # gap floor + observed-contraction anneal
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,8 +188,8 @@ class RunSpec:
     seed: int = 0
 
 
-_SUBSPECS = (TopologySpec, ParticipationSpec, MixerSpec, CompressionSpec,
-             OptimizerSpec, ModelSpec, RunSpec)
+_SUBSPECS = (TopologySpec, GraphSpec, ParticipationSpec, MixerSpec,
+             CompressionSpec, OptimizerSpec, ModelSpec, RunSpec)
 
 
 def _tuplify(v):
@@ -203,6 +224,7 @@ class ExperimentSpec:
     """The full declarative experiment description (see module docstring)."""
 
     topology: TopologySpec = TopologySpec()
+    graph: GraphSpec = GraphSpec()
     participation: ParticipationSpec = ParticipationSpec()
     mixer: MixerSpec = MixerSpec()
     compression: CompressionSpec = CompressionSpec()
@@ -237,6 +259,22 @@ class ExperimentSpec:
             return 1.0 / p.num_groups
         return p.q
 
+    def graph_kwargs(self) -> tuple:
+        """The graph-process kwargs this spec denotes, as sorted (k, v)
+        pairs (what ``DiffusionConfig.graph_kwargs`` stores) — only the
+        fields the selected built-in kind actually consumes, so the static
+        default stays ``()`` and configs compare clean.  Registered
+        third-party kinds get every field: the registry builder picks what
+        it reads, and nothing is silently dropped on the config path."""
+        g = self.graph
+        if g.kind == "link_dropout":
+            return (("corr", g.corr), ("drop", g.drop))
+        if g.kind == "tv_erdos":
+            return (("p", g.p),)
+        if g.kind in ("static", "gossip"):
+            return ()
+        return (("corr", g.corr), ("drop", g.drop), ("p", g.p))
+
     def to_diffusion_config(self):
         """The :class:`repro.core.diffusion.DiffusionConfig` this spec
         denotes — the scalar-hyper-parameter view both engines consume
@@ -247,6 +285,7 @@ class ExperimentSpec:
             num_agents=r.num_agents, local_steps=r.local_steps,
             step_size=r.step_size, topology=self.topology.kind,
             topology_kwargs=tuple(self.topology.kwargs),
+            graph=self.graph.kind, graph_kwargs=self.graph_kwargs(),
             participation=self.stationary_q(),
             drift_correction=r.drift_correction, mix=self.mixer.kind,
             compress=c.kind, compress_ratio=c.ratio, compress_sigma=c.sigma,

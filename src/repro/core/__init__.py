@@ -3,9 +3,10 @@
 The execution stack is layered: one local-update scan + a staged
 combination pipeline (compressors :mod:`repro.core.compression` feeding
 mixing backends :mod:`repro.core.mixing`) + pluggable agent-availability
-processes (:mod:`repro.core.schedules`), consumed by two engines (stacked
-:mod:`repro.core.diffusion`, mesh-sharded :mod:`repro.core.sharded`) with
-identical semantics.
+processes (:mod:`repro.core.schedules`) + pluggable combination-graph
+processes (:mod:`repro.core.graphs` — the topology is a per-block runtime
+value), consumed by two engines (stacked :mod:`repro.core.diffusion`,
+mesh-sharded :mod:`repro.core.sharded`) with identical semantics.
 """
 from repro.core.state import EngineState  # noqa: F401
 from repro.core.diffusion import (  # noqa: F401
@@ -16,6 +17,14 @@ from repro.core.diffusion import (  # noqa: F401
     network_msd,
 )
 from repro.core.topology import Topology, make_topology  # noqa: F401
+from repro.core.graphs import (  # noqa: F401
+    GossipMatching,
+    GraphProcess,
+    LinkDropout,
+    StaticGraph,
+    TimeVaryingErdos,
+    make_graph_process,
+)
 from repro.core.participation import (  # noqa: F401
     sample_active,
     masked_combination,
@@ -31,6 +40,7 @@ from repro.core.mixing import (  # noqa: F401
     PallasFusedMixer,
     SparseCirculantMixer,
     TrimmedMeanMixer,
+    choco_gamma,
     make_mixer,
     make_pipeline,
 )

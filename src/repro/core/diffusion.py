@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression
+from repro.core import graphs as graph_lib
 from repro.core import mixing
 from repro.core import participation as part
 from repro.core import schedules
@@ -69,6 +70,8 @@ class DiffusionConfig:
     step_size: float = 0.01              # mu
     topology: str = "ring"               # ring|grid|full|fedavg|erdos
     topology_kwargs: tuple = ()          # extra kwargs as sorted (k, v) pairs
+    graph: str = "static"                # static|link_dropout|gossip|tv_erdos
+    graph_kwargs: tuple = ()             # graph-process kwargs, sorted (k, v)
     participation: Any = 1.0             # scalar or length-K sequence of q_k
     drift_correction: bool = False       # eq. (31): mu/q_k for active agents
     mix: str = "dense"                   # dense|sparse|pallas|auto|none
@@ -94,6 +97,14 @@ class DiffusionConfig:
     def make_topology(self) -> topo_lib.Topology:
         return topo_lib.make_topology(
             self.topology, self.num_agents, **dict(self.topology_kwargs))
+
+    def make_graph(self, topology: topo_lib.Topology | None = None):
+        """The :class:`repro.core.graphs.GraphProcess` this config denotes
+        (the static wrapper of the base topology by default)."""
+        topo = topology if topology is not None else self.make_topology()
+        return graph_lib.make_graph_process(
+            self.graph, topo, num_agents=self.num_agents,
+            **dict(self.graph_kwargs))
 
 
 def _bshape(v: jax.Array, leaf: jax.Array) -> jax.Array:
@@ -181,20 +192,32 @@ class DiffusionEngine:
         ``compress_ratio`` / ``error_feedback`` fields ("none": bit-identical
         to the plain mixer).  Stateful pipelines (error feedback, diff mode)
         carry their memory in ``EngineState.comm_state`` the same way.
+      graph: combination-graph model — a graphs.GraphProcess or a kind name
+        for :func:`repro.core.graphs.make_graph_process`; defaults to the
+        config's ``graph`` / ``graph_kwargs`` fields ("static": the base
+        topology every block, bit-identical to the pre-redesign baked-A
+        path).  The realized per-block matrix A_t flows into the
+        combination step as data; stateful graphs (correlated link
+        dropout) carry their link mask in ``EngineState.graph_state``.
     """
 
     def __init__(self, config: DiffusionConfig, loss_fn: LossFn,
                  grad_transform=None, *, mixer=None, participation=None,
-                 compressor=None):
+                 compressor=None, graph=None):
         self.config = config
         self.loss_fn = loss_fn
         self.grad_transform = grad_transform
         self.topology = config.make_topology()
         self.process, q = schedules.resolve(config, participation)
         self._q = jnp.asarray(q, dtype=jnp.float32)
+        self.graph = graph_lib.make_graph_process(
+            graph if graph is not None else config.graph, self.topology,
+            num_agents=config.num_agents, **dict(config.graph_kwargs))
         self.mixer = mixing.make_mixer(
-            mixer if mixer is not None else config.mix, self.topology,
-            num_agents=config.num_agents)
+            graph_lib.resolve_mix_for_graph(
+                mixer if mixer is not None else config.mix, self.graph),
+            self.topology, num_agents=config.num_agents)
+        graph_lib.check_mixer_support(self.mixer, self.graph)
         if compressor is None:
             compressor = compression.make_compressor(
                 config.compress, ratio=config.compress_ratio,
@@ -202,7 +225,8 @@ class DiffusionEngine:
                 sigma=config.compress_sigma)
         self.pipeline = mixing.CommPipeline(self.mixer, compressor,
                                             mode=config.comm_mode,
-                                            gamma=config.comm_gamma)
+                                            gamma=config.comm_gamma,
+                                            base_A=self.topology.A)
         self.compressor = self.pipeline.compressor
         self._grad_fn = jax.vmap(jax.grad(loss_fn))
 
@@ -212,12 +236,14 @@ class DiffusionEngine:
         """Bundle the initial :class:`EngineState` for :meth:`step`.
 
         Fills ``part_state`` (stateful participation processes draw their
-        initial state from ``key``) and ``comm_state`` (stateful pipelines
+        initial state from ``key``), ``comm_state`` (stateful pipelines
         allocate the EF residual / diff-mode reference, shaped like
-        ``params``); components the engine does not carry stay ``None``.
+        ``params``), and ``graph_state`` (stateful graph processes draw
+        their initial link mask); components the engine does not carry
+        stay ``None``.
         """
         return init_engine_state(self.process, self.pipeline, params,
-                                 opt_state, key=key)
+                                 opt_state, key=key, graph=self.graph)
 
     # -- the single block iteration (jit-compatible) ------------------------
     @partial(jax.jit, static_argnums=0)
@@ -238,18 +264,24 @@ class DiffusionEngine:
         """
         cfg = self.config
         check_engine_state(self.process, self.pipeline, self.compressor,
-                           state, "engine.init_state")
+                           state, "engine.init_state", graph=self.graph)
         key_act, key_comm = jax.random.split(key)
         active, part_state = self.process.sample(state.part_state,
                                                  key_act)       # eq. (18)
+        # the graph key is a fold, not a wider split, so the activation /
+        # compression key streams are unchanged vs the static-topology step
+        A_t, graph_state = self.graph.sample(state.graph_state,
+                                             jax.random.fold_in(key, 0x9A))
         mus = part.step_size_matrix(cfg.step_size, active, self._q,
                                     cfg.drift_correction)       # (K,)
         params, opt_state = local_update_scan(
             self._grad_fn, state.params, state.opt_state, mus, block_batch,
             local_steps=cfg.local_steps, grad_transform=self.grad_transform)
-        params, comm_state = self.pipeline(params, active, state.comm_state,
+        params, comm_state = self.pipeline(params, active, A_t,
+                                           state.comm_state,
                                            key_comm)            # eq. (20)
-        new_state = EngineState(params, opt_state, part_state, comm_state)
+        new_state = EngineState(params, opt_state, part_state, comm_state,
+                                graph_state)
         return new_state, {"active": active}
 
     # -- convenience runner -------------------------------------------------

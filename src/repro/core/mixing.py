@@ -1,10 +1,13 @@
 """Pluggable mixing backends for the combination step (paper eq. 20).
 
 Every backend implements the same contract: given an agent-stacked parameter
-pytree with leaves ``(K, ...)`` and an activation mask ``(K,)``, apply the
-per-sample-path masked combination matrix
+pytree with leaves ``(K, ...)``, an activation mask ``(K,)``, and the
+*realized* per-block combination matrix ``A_t`` (a device operand sampled
+each block by a :class:`repro.core.graphs.GraphProcess` — the topology is a
+runtime value, not a constructor constant), apply the per-sample-path
+masked combination matrix
 
-    w_k  <-  sum_l  a_lk(mask)  psi_l .
+    w_k  <-  sum_l  a_lk(mask, A_t)  psi_l .
 
 Backends differ only in *how* the contraction is executed:
 
@@ -65,6 +68,7 @@ __all__ = [
     "TrimmedMeanMixer",
     "CoordinateMedianMixer",
     "CommPipeline",
+    "choco_gamma",
     "make_mixer",
     "make_pipeline",
     "mix_dense",
@@ -80,6 +84,32 @@ _AUTO_SPARSE_MAX_OFFSETS = 8
 # ---------------------------------------------------------------------------
 # functional primitives (shared by the Mixer classes and legacy call sites)
 # ---------------------------------------------------------------------------
+
+def _tree_sq_norm(tree: PyTree) -> jax.Array:
+    """Sum of squares over every leaf (float32 scalar)."""
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+               for l in jax.tree.leaves(tree))
+
+
+def choco_gamma(spectral_gap: float, delta: float, beta: float) -> float:
+    """The CHOCO-Gossip consensus step size (Koloskova et al. 2019, Thm. 2):
+
+        gamma* = rho^2 delta / (16 rho + rho^2 + 4 beta^2
+                                + 2 rho beta^2 - 8 rho delta)
+
+    with ``rho`` the spectral gap 1 - |lambda_2(A)|, ``delta`` the
+    compressor contraction (E||C(x) - x||^2 <= (1 - delta)||x||^2), and
+    ``beta = ||I - A||_2``.  Provably convergent for any topology /
+    compressor pair, and famously conservative — the adaptive pipeline
+    uses it as the FLOOR and anneals toward 1 from the observed
+    contraction (see :class:`CommPipeline`).
+    """
+    rho = float(spectral_gap)
+    delta = float(delta)
+    beta = float(beta)
+    denom = (16.0 * rho + rho ** 2 + 4.0 * beta ** 2
+             + 2.0 * rho * beta ** 2 - 8.0 * rho * delta)
+    return float(np.clip(rho ** 2 * delta / max(denom, 1e-12), 1e-4, 1.0))
 
 def mix_dense(A_eff: jax.Array, params: PyTree) -> PyTree:
     """Combination step  w_k <- sum_l a_lk psi_l  over stacked agents.
@@ -125,21 +155,28 @@ def mix_sparse(A_eff: jax.Array, params: PyTree,
 # ---------------------------------------------------------------------------
 
 class Mixer:
-    """Combination-step backend: ``mixer(params, active) -> params``.
+    """Combination-step backend: ``mixer(params, active, A_t) -> params``.
 
-    ``params`` has leaves (K, ...); ``active`` is the (K,) activation mask in
-    {0, 1}.  Implementations must be jit-compatible (mask as data).  Linear
-    backends (``linear = True``) are semantically equal to
-    ``mix_dense(masked_combination(A, active), params)``; robust backends
-    (trimmed mean / median) set ``linear = False`` and only support the
-    identity pipeline (the compressed exchange modes correct through
-    ``mix(c) - c``, which presumes linearity).
+    ``params`` has leaves (K, ...); ``active`` is the (K,) activation mask
+    in {0, 1}; ``A_t`` is the realized (K, K) combination matrix for this
+    block — an operand, not baked state, so time-varying graphs
+    (:mod:`repro.core.graphs`) flow through one compiled program exactly
+    like activation masks do.  Implementations must be jit-compatible
+    (mask and matrix as data).  Linear backends (``linear = True``) are
+    semantically equal to ``mix_dense(masked_combination(A_t, active),
+    params)``; robust backends (trimmed mean / median) set
+    ``linear = False``, ignore ``A_t`` (server-style aggregation over the
+    active set), and only support the identity pipeline (the compressed
+    exchange modes correct through ``mix(c) - c``, which presumes
+    linearity).
     """
 
     name = "base"
     linear = True
+    uses_matrix = True        # False: A_t is accepted but ignored
 
-    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array) -> PyTree:
         raise NotImplementedError
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -150,35 +187,45 @@ class NullMixer(Mixer):
     """Identity combination step (K = 1 or mixing disabled)."""
 
     name = "none"
+    uses_matrix = False
 
-    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array | None = None) -> PyTree:
         return params
 
 
 class DenseMixer(Mixer):
-    """Dense einsum against the realized (K, K) matrix (baseline)."""
+    """Dense einsum against the realized (K, K) matrix (baseline).
+
+    Stateless: the matrix arrives per call (the graph layer owns it)."""
 
     name = "dense"
 
-    def __init__(self, A):
-        self.A = jnp.asarray(A, jnp.float32)
-
-    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
-        A_eff = part.masked_combination(self.A, active)
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array) -> PyTree:
+        A_eff = part.masked_combination(A_t, active)
         return mix_dense(A_eff, params)
 
 
 class SparseCirculantMixer(Mixer):
-    """Circulant roll/collective-permute path for bounded-degree topologies."""
+    """Circulant roll/collective-permute path for bounded-degree topologies.
+
+    Only the *offsets* (the static communication structure) are
+    constructor state; the realized matrix is a per-call operand.  Valid
+    whenever every nonzero off-diagonal of A_t lies on a base circulant
+    offset — dynamic graphs that stay within the base support
+    (link dropout, gossip matchings) qualify; tv_erdos does not
+    (:func:`repro.core.graphs.check_mixer_support` rejects it).
+    """
 
     name = "sparse"
 
-    def __init__(self, A, offsets: Sequence[int]):
-        self.A = jnp.asarray(A, jnp.float32)
+    def __init__(self, offsets: Sequence[int]):
         self.offsets = tuple(int(o) for o in offsets)
 
-    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
-        A_eff = part.masked_combination(self.A, active)
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array) -> PyTree:
+        A_eff = part.masked_combination(A_t, active)
         return mix_sparse(A_eff, params, self.offsets)
 
 
@@ -205,12 +252,14 @@ class PallasFusedMixer(Mixer):
     and cached, so repeated block steps pay zero layout overhead.
 
     ``interpret=None`` resolves per call: native on TPU, interpret elsewhere.
+
+    The kernel always took ``A`` as an operand; only the Python-side layout
+    cache is constructor state, so per-block matrices cost nothing extra.
     """
 
     name = "pallas"
 
-    def __init__(self, A, *, tile_m: int = 512, interpret: bool | None = None):
-        self.A = jnp.asarray(A, jnp.float32)
+    def __init__(self, *, tile_m: int = 512, interpret: bool | None = None):
         if tile_m % 128:
             raise ValueError(f"tile_m={tile_m} must be a multiple of 128")
         self.tile_m = int(tile_m)
@@ -232,7 +281,8 @@ class PallasFusedMixer(Mixer):
             self._layouts[key] = lay
         return lay
 
-    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array) -> PyTree:
         from repro.kernels.diffusion_mix import diffusion_mix
 
         leaves, treedef = jax.tree_util.tree_flatten(params)
@@ -240,8 +290,8 @@ class PallasFusedMixer(Mixer):
         flat = self._flatten(leaves, lay)
         interpret = (jax.default_backend() != "tpu"
                      if self.interpret is None else self.interpret)
-        mixed = diffusion_mix(self.A, active, flat, tile_m=lay.tile_m,
-                              interpret=interpret)
+        mixed = diffusion_mix(A_t.astype(jnp.float32), active, flat,
+                              tile_m=lay.tile_m, interpret=interpret)
         return self._unflatten(mixed, leaves, treedef, lay)
 
     def _flatten(self, leaves, lay) -> jax.Array:
@@ -260,8 +310,8 @@ class PallasFusedMixer(Mixer):
             off += n
         return jax.tree_util.tree_unflatten(treedef, outs)
 
-    def mix_int8(self, params: PyTree, active: jax.Array, key: jax.Array,
-                 *, want_messages: bool = False):
+    def mix_int8(self, params: PyTree, active: jax.Array, A_t: jax.Array,
+                 key: jax.Array, *, want_messages: bool = False):
         """Compressed combination: per-tile int8 stochastic quantization of
         the cached flatten layout, then the fused dequantize+mask+mix kernel
         (:func:`repro.kernels.diffusion_mix.diffusion_mix_int8`).
@@ -285,8 +335,9 @@ class PallasFusedMixer(Mixer):
         Wq = q.astype(jnp.int8).reshape(K, lay.M_padded)
         interpret = (jax.default_backend() != "tpu"
                      if self.interpret is None else self.interpret)
-        delta = diffusion_mix_int8(self.A, active, Wq, scales,
-                                   tile_m=lay.tile_m, interpret=interpret,
+        delta = diffusion_mix_int8(A_t.astype(jnp.float32), active, Wq,
+                                   scales, tile_m=lay.tile_m,
+                                   interpret=interpret,
                                    subtract_identity=True)
         delta_tree = self._unflatten(delta, leaves, treedef, lay)
         msgs = None
@@ -320,6 +371,7 @@ class _SortedRobustMixer(Mixer):
     """
 
     linear = False
+    uses_matrix = False
 
     def __init__(self, num_agents: int):
         if num_agents < 1:
@@ -332,7 +384,9 @@ class _SortedRobustMixer(Mixer):
         Must put zero weight on every slot >= S (those hold +inf)."""
         raise NotImplementedError
 
-    def __call__(self, params: PyTree, active: jax.Array) -> PyTree:
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array | None = None) -> PyTree:
+        # A_t ignored: server-style aggregation over the realized active set
         K = self.num_agents
         S = active.astype(jnp.float32).sum()
         w = self._slot_weights(S)                          # (K,) float32
@@ -449,11 +503,24 @@ class CommPipeline:
     allocated by ``engine.init_state`` and threaded by the unified
     ``engine.step`` of both engines (:mod:`repro.core.diffusion`,
     :mod:`repro.core.sharded`).
+
+    The consensus step ``gamma`` of the compressed modes accepts three
+    forms: a float (fixed), ``None`` (the legacy fixed heuristic — 1.0
+    lossless/direct, 0.5 top-k, ``ratio`` rand-k/Gaussian; kept so
+    existing presets stay bit-identical), or ``"auto"`` (diff mode only):
+    the CHOCO-optimal value derived from the base topology's spectral gap
+    (:func:`choco_gamma` — Koloskova et al. 2019, Thm. 2) as a floor,
+    annealed toward 1 from the *observed* per-block contraction of the
+    compression gap ``||psi - ref||`` (an EMA of how much of the gap each
+    transmission closes — the effective compressor delta on the actual
+    signal, which for top-k is far larger than the worst-case ``ratio``).
+    The EMA is a scalar in ``comm_state`` ("delta"), so the annealed gamma
+    checkpoints and restores with everything else.
     """
 
     def __init__(self, mixer: Mixer,
                  compressor: comp_lib.Compressor | None = None,
-                 *, mode: str = "auto", gamma: float | None = None):
+                 *, mode: str = "auto", gamma=None, base_A=None):
         self.mixer = mixer
         self.compressor = (compressor if compressor is not None
                            else comp_lib.Identity())
@@ -483,7 +550,34 @@ class CommPipeline:
             # wrapper would silently never run (diff uses encode_contractive)
             self.compressor = base
         self.mode = mode
-        if gamma is None:
+        self.adaptive = (gamma == "auto" and mode == "diff"
+                         and not isinstance(mixer, NullMixer))
+        if gamma == "auto" and not self.adaptive:
+            # the annealed gamma is defined by the diff-mode reference gap
+            # ||psi - ref||; other modes have no reference to observe, so
+            # "auto" degrades to the fixed defaults — say so, loudly
+            import warnings
+            warnings.warn(
+                f'comm_gamma="auto" anneals the diff-mode consensus step; '
+                f"this pipeline runs {mode!r} mode, so the fixed default "
+                "gamma is used instead", stacklevel=2)
+            gamma = None          # identity/direct: nothing to anneal
+        if self.adaptive:
+            if base_A is None:
+                raise ValueError(
+                    'comm_gamma="auto" derives its floor from the base '
+                    "topology's spectral gap — pass base_A (or build the "
+                    "pipeline through an engine / make_pipeline with a "
+                    "topology)")
+            A0 = np.asarray(base_A, np.float64)
+            rho = topo_lib.spectral_gap(A0)
+            beta = float(1.0 - np.linalg.eigvalsh(A0).min())  # ||I - A||_2
+            self._delta0 = float(min(max(getattr(base, "ratio", 1.0),
+                                         1e-3), 1.0))
+            self.gamma_floor = choco_gamma(rho, self._delta0, beta)
+            self.spectral_gap = float(rho)
+            self.gamma = "auto"
+        elif gamma is None:
             ratio = getattr(base, "ratio", 1.0)
             if mode != "diff" or ratio >= 1.0:
                 gamma = 1.0
@@ -491,7 +585,9 @@ class CommPipeline:
                 gamma = 0.5
             else:
                 gamma = float(ratio)
-        self.gamma = float(gamma)
+            self.gamma = float(gamma)
+        else:
+            self.gamma = float(gamma)
 
     def _ef(self) -> bool:
         return isinstance(self.compressor, comp_lib.ErrorFeedback)
@@ -516,8 +612,31 @@ class CommPipeline:
         if not self.stateful:
             return ()
         if self.mode == "diff":
-            return {"ref": jax.tree.map(jnp.zeros_like, params)}
+            state = {"ref": jax.tree.map(jnp.zeros_like, params)}
+            if self.adaptive:
+                # EMA of the observed compressor contraction, seeded at the
+                # worst-case delta (the sparsifier's kept ratio)
+                state["delta"] = jnp.asarray(self._delta0, jnp.float32)
+            return state
         return self.compressor.init_state(params)
+
+    def annealed_gamma(self, comm_state: PyTree) -> jax.Array:
+        """The consensus step an adaptive (gamma="auto") diff-mode pipeline
+        uses for a given comm_state: the CHOCO floor annealed toward 1 by
+        the observed-contraction EMA.
+
+        The interpolation is sqrt(delta) — halfway (geometrically) between
+        the worst-case CHOCO guidance gamma ~ delta and the lossless
+        gamma = 1: at delta -> 1 (lossless) it reaches 1, at delta -> 0 it
+        collapses to the provably-safe floor, and at the ~0.2 contraction
+        top-k typically shows at steady state it lands in the empirically
+        MSD-optimal band (see bench_graph_process's fixed-gamma sweep).
+        """
+        if not self.adaptive:
+            raise ValueError("annealed_gamma is defined for the adaptive "
+                             '(gamma="auto") diff-mode pipeline only')
+        d = jnp.sqrt(jnp.clip(comm_state["delta"], 0.0, 1.0))
+        return self.gamma_floor + (1.0 - self.gamma_floor) * d
 
     def wire_bytes(self, params: PyTree) -> int:
         """Value-payload bytes per combination step (see compression.py)."""
@@ -526,12 +645,15 @@ class CommPipeline:
                     else comp_lib.dense_wire_bytes(params))
         return self.compressor.wire_bytes(params)
 
-    def __call__(self, params: PyTree, active: jax.Array,
+    def __call__(self, params: PyTree, active: jax.Array, A_t: jax.Array,
                  comm_state: PyTree = (), key: jax.Array | None = None):
-        """Apply the pipeline; returns ``(params, comm_state)``."""
+        """Apply the pipeline; returns ``(params, comm_state)``.
+
+        ``A_t`` is the realized combination matrix for this block (sampled
+        by the engine's :class:`repro.core.graphs.GraphProcess`)."""
         if self.mode == "identity":
             # bit-identical to the plain mixer (the Mixer contract)
-            return self.mixer(params, active), comm_state
+            return self.mixer(params, active, A_t), comm_state
         if isinstance(self.mixer, NullMixer):
             # K = 1 / mixing disabled: the correction is identically zero
             return params, comm_state
@@ -539,7 +661,6 @@ class CommPipeline:
         base = self._base()
         if comp.needs_key and key is None:
             raise ValueError(f"{comp!r} needs a PRNG key; pass key=")
-        g = self.gamma
 
         def masked(new, old):
             """Per-agent select: active agents take ``new``, inactive keep
@@ -554,26 +675,55 @@ class CommPipeline:
             return jax.tree.map(leaf, new, old)
 
         if self.mode == "diff":
-            ref = comm_state["ref"]
+            ref_prev = comm_state["ref"]
             diff = jax.tree.map(lambda p, r: p - r.astype(p.dtype),
-                                params, ref)
+                                params, ref_prev)
             c = base.encode_contractive(diff, key)
             ref = masked(
-                jax.tree.map(lambda r, ci: r + ci.astype(r.dtype), ref, c),
-                ref)
-            mixed = self.mixer(ref, active)
+                jax.tree.map(lambda r, ci: r + ci.astype(r.dtype),
+                             ref_prev, c),
+                ref_prev)
+            mixed = self.mixer(ref, active, A_t)
+            if self.adaptive:
+                # observed compressor contraction on the actual signal:
+                # how much of the gap ||psi - ref|| this transmission
+                # closed — over the ACTIVE agents only (inactive agents
+                # transmit nothing, their gap never moves, and counting
+                # them would bias the EMA toward 0 under partial
+                # participation)
+                def act(tree):
+                    return jax.tree.map(
+                        lambda l: l * active.astype(l.dtype).reshape(
+                            (l.shape[0],) + (1,) * (l.ndim - 1)), tree)
+                pre = _tree_sq_norm(act(diff))
+                post = _tree_sq_norm(act(jax.tree.map(
+                    lambda p, r: p - r.astype(p.dtype), params, ref)))
+                delta_obs = jnp.clip(
+                    1.0 - jnp.sqrt(post / jnp.maximum(pre, 1e-30)), 0.0, 1.0)
+                # no active transmissions this block: nothing observed,
+                # leave the EMA where it is
+                delta_obs = jnp.where(pre > 1e-30, delta_obs,
+                                      comm_state["delta"])
+                delta = 0.9 * comm_state["delta"] + 0.1 * delta_obs
+                g = self.annealed_gamma({"delta": delta})
+                out = jax.tree.map(
+                    lambda p, mx, r: p + (g * (mx - r)).astype(p.dtype),
+                    params, mixed, ref)
+                return out, {"ref": ref, "delta": delta}
+            g = self.gamma
             out = jax.tree.map(lambda p, mx, r: p + g * (mx - r).astype(p.dtype),
                                params, mixed, ref)
             return out, {"ref": ref}
         # direct mode: inactive senders' messages are already annihilated by
         # the eq.-20 mask (off-diagonals need both endpoints active), so only
         # the EF residual needs explicit masking
+        g = self.gamma
         ef = self._ef()
         if (isinstance(base, comp_lib.Int8Stochastic)
                 and isinstance(self.mixer, PallasFusedMixer)):
             target = (jax.tree.map(lambda p, e: p + e.astype(p.dtype),
                                    params, comm_state) if ef else params)
-            delta, msgs = self.mixer.mix_int8(target, active, key,
+            delta, msgs = self.mixer.mix_int8(target, active, A_t, key,
                                               want_messages=ef)
             out = jax.tree.map(lambda p, d: p + g * d.astype(p.dtype),
                                params, delta)
@@ -586,7 +736,7 @@ class CommPipeline:
         msgs, new_state = comp.encode(params, comm_state, key)
         if ef:
             new_state = masked(new_state, comm_state)
-        mixed = self.mixer(msgs, active)
+        mixed = self.mixer(msgs, active, A_t)
         out = jax.tree.map(lambda p, mx, m: p + g * (mx - m), params,
                            mixed, msgs)
         return out, new_state
@@ -621,14 +771,17 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
                interpret: bool | None = None, trim: int = 1) -> Mixer:
     """Build a mixing backend.
 
+    The matrix is NOT baked into the mixer — it arrives per call as the
+    ``A_t`` operand (see :class:`Mixer`).  ``topology`` / ``A`` here only
+    inform the *structure*: the "auto" policy, the circulant offsets of
+    the sparse path, and the agent count.
+
     Args:
       name: "dense" | "sparse" | "pallas" | "auto" | "none" |
         "trimmed_mean" | "median", or an existing :class:`Mixer` (returned
         unchanged).
-      topology: source of the base matrix A and of the circulant offsets for
-        the sparse path; optional if ``A`` (and, for sparse, ``offsets``) are
-        given directly.
-      A: (K, K) base combination matrix override.
+      topology: source of the circulant offsets / auto policy / K.
+      A: (K, K) base matrix — used only to infer ``num_agents``.
       offsets: circulant offsets override for the sparse path.
       num_agents: disables mixing when 1 (returns :class:`NullMixer`).
       tile_m / interpret: Pallas kernel knobs (see :class:`PallasFusedMixer`).
@@ -636,10 +789,11 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
     """
     if isinstance(name, Mixer):
         return name
-    if A is None and topology is not None:
-        A = topology.A
-    if num_agents is None and A is not None:
-        num_agents = int(np.asarray(A).shape[0])
+    if num_agents is None:
+        if topology is not None:
+            num_agents = topology.num_agents
+        elif A is not None:
+            num_agents = int(np.asarray(A).shape[0])
     if name == "none" or (num_agents is not None and num_agents <= 1):
         return NullMixer()
     if name in ("trimmed_mean", "median"):
@@ -650,21 +804,19 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
         return (TrimmedMeanMixer(num_agents, trim=trim)
                 if name == "trimmed_mean"
                 else CoordinateMedianMixer(num_agents))
-    if A is None:
-        raise ValueError("make_mixer needs a topology or an explicit A")
     if name == "auto":
         name, offsets = _resolve_auto(topology, offsets)
     if name == "dense":
-        return DenseMixer(A)
+        return DenseMixer()
     if name == "sparse":
         if offsets is None:
             if topology is None:
                 raise ValueError("sparse mixer needs circulant offsets "
                                  "(pass offsets= or a topology)")
             offsets = topology.neighbor_offsets_ring()
-        return SparseCirculantMixer(A, offsets)
+        return SparseCirculantMixer(offsets)
     if name == "pallas":
-        return PallasFusedMixer(A, tile_m=tile_m, interpret=interpret)
+        return PallasFusedMixer(tile_m=tile_m, interpret=interpret)
     raise ValueError(f"unknown mixer {name!r} (expected dense|sparse|"
                      "pallas|auto|none|trimmed_mean|median)")
 
@@ -673,7 +825,7 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
                   *, compress: str | comp_lib.Compressor | None = None,
                   compress_ratio: float = 1.0, error_feedback: bool = False,
                   sigma: float = 0.0, mode: str = "auto",
-                  gamma: float | None = None, A=None,
+                  gamma=None, A=None,
                   offsets: Sequence[int] | None = None,
                   num_agents: int | None = None, tile_m: int = 512,
                   interpret: bool | None = None,
@@ -683,7 +835,8 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
     ``mix`` and the mixer kwargs go to :func:`make_mixer`; ``compress`` /
     ``compress_ratio`` / ``error_feedback`` / ``sigma`` go to
     :func:`repro.core.compression.make_compressor`; ``mode`` / ``gamma``
-    select the exchange scheme (see :class:`CommPipeline`).
+    select the exchange scheme (see :class:`CommPipeline`; ``gamma="auto"``
+    derives its floor from the topology's spectral gap).
     ``compress=None`` or ``"none"`` yields the bit-identical identity
     pipeline.
     """
@@ -693,4 +846,6 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
     compressor = comp_lib.make_compressor(compress, ratio=compress_ratio,
                                           error_feedback=error_feedback,
                                           sigma=sigma)
-    return CommPipeline(mixer, compressor, mode=mode, gamma=gamma)
+    if A is None and topology is not None:
+        A = topology.A
+    return CommPipeline(mixer, compressor, mode=mode, gamma=gamma, base_A=A)

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compression as comp_lib
+from repro.core import graphs as graph_lib
 from repro.core import mixing
 from repro.core import participation as part
 from repro.core import schedules
@@ -62,6 +63,7 @@ def make_block_step(
     grad_transform=None,
     topology=None,
     participation: schedules.ParticipationProcess | None = None,
+    graph: "str | graph_lib.GraphProcess | None" = None,
     tile_m: int = 512,
     interpret: bool | None = None,
     compress: str | comp_lib.Compressor | None = None,
@@ -91,6 +93,12 @@ def make_block_step(
         the "auto"/"sparse" backends without passing offsets explicitly.
       participation: activation model; defaults to the paper's i.i.d.
         Bernoulli with the config's q vector.
+      graph: combination-graph model — a
+        :class:`repro.core.graphs.GraphProcess` or kind name; defaults to
+        the config's ``graph`` / ``graph_kwargs`` ("static" wraps the base
+        topology, bit-identical to the pre-redesign baked-A step).  The
+        realized A_t is sampled per block inside the jitted step; stateful
+        graphs thread their link mask through ``EngineState.graph_state``.
       tile_m / interpret: Pallas mixer knobs.
       compress / compress_ratio / compress_sigma / error_feedback:
         communication-compression stage
@@ -115,11 +123,28 @@ def make_block_step(
     K = config.num_agents
     process, q_np = schedules.resolve(config, participation)
     q = jnp.asarray(q_np, dtype=jnp.float32)
-    mixer = mixing.make_mixer(mix if mix is not None else config.mix,
-                              topology, A=A,
+    mix_name = mix if mix is not None else config.mix
+    mixer = mixing.make_mixer(mix_name, topology, A=A,
                               offsets=tuple(offsets) or None,
                               num_agents=K, tile_m=tile_m,
                               interpret=interpret)
+    A_graph = A
+    if topology is None and A is None and not mixer.uses_matrix:
+        # mixers that ignore the matrix operand (K = 1 / robust server
+        # aggregation) run against an inert identity; matrix-consuming
+        # mixers without a topology still fail loudly in the graph build
+        A_graph = jnp.eye(K, dtype=jnp.float32)
+    graph_proc = graph_lib.make_graph_process(
+        graph if graph is not None else config.graph, topology, A=A_graph,
+        num_agents=K, **dict(config.graph_kwargs))
+    resolved = graph_lib.resolve_mix_for_graph(mix_name, graph_proc)
+    if resolved is not mix_name:
+        # "auto" picked the sparse path before the graph was known; the
+        # realized edges can leave the base support, so rebuild on the
+        # always-correct backend
+        mixer = mixing.make_mixer(resolved, topology, A=A, num_agents=K,
+                                  tile_m=tile_m, interpret=interpret)
+    graph_lib.check_mixer_support(mixer, graph_proc)
     compressor = comp_lib.make_compressor(
         compress if compress is not None else config.compress,
         ratio=(compress_ratio if compress_ratio is not None
@@ -131,34 +156,40 @@ def make_block_step(
     pipeline = mixing.CommPipeline(
         mixer, compressor,
         mode=comm_mode if comm_mode is not None else config.comm_mode,
-        gamma=comm_gamma if comm_gamma is not None else config.comm_gamma)
+        gamma=comm_gamma if comm_gamma is not None else config.comm_gamma,
+        base_A=topology.A if topology is not None else A)
     grad_fn = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0, 0))
 
-    # key_comm comes from a fold_in (not a wider split) so the activation
-    # and loss key streams are unchanged vs the uncompressed step
+    # key_comm / key_graph come from fold_ins (not a wider split) so the
+    # activation and loss key streams are unchanged vs the uncompressed /
+    # static-topology step
     def block_step(state: EngineState, block_batch, key):
         check_engine_state(process, pipeline, compressor, state,
-                           "block_step.init_state")
+                           "block_step.init_state", graph=graph_proc)
         key_act, key_loss = jax.random.split(key)
         key_comm = jax.random.fold_in(key, 0xC0)
         active, part_state = process.sample(state.part_state, key_act)
+        A_t, graph_state = graph_proc.sample(state.graph_state,
+                                             jax.random.fold_in(key, 0x9A))
         mus = part.step_size_matrix(config.step_size, active, q,
                                     config.drift_correction)
         params, opt_state = local_update_scan(
             grad_fn, state.params, state.opt_state, mus, block_batch,
             local_steps=config.local_steps, grad_transform=grad_transform,
             loss_key=key_loss, num_agents=K)
-        params, comm_state = pipeline(params, active, state.comm_state,
-                                      key_comm)
-        new_state = EngineState(params, opt_state, part_state, comm_state)
+        params, comm_state = pipeline(params, active, A_t,
+                                      state.comm_state, key_comm)
+        new_state = EngineState(params, opt_state, part_state, comm_state,
+                                graph_state)
         return new_state, {"active": active}
 
     def init_state(params, opt_state=None, *, key=None) -> EngineState:
         return init_engine_state(process, pipeline, params, opt_state,
-                                 key=key)
+                                 key=key, graph=graph_proc)
 
     block_step.pipeline = pipeline
     block_step.process = process
+    block_step.graph = graph_proc
     block_step.config = config
     block_step.init_state = init_state
     return block_step
@@ -182,6 +213,7 @@ class ShardedEngine:
         self.step = make_block_step(loss_fn, config, A, **kwargs)
         self.pipeline = self.step.pipeline
         self.process = self.step.process
+        self.graph = self.step.graph
         self.init_state = self.step.init_state
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid

@@ -15,7 +15,12 @@ block iterations:
   mask or counter);
 * ``comm_state`` — communication-pipeline memory (``None`` for the
   uncompressed / direct-stateless pipelines; error feedback carries the
-  residual, diff mode the reference copies).
+  residual, diff mode the reference copies — plus the annealed-gamma EMA
+  for adaptive pipelines);
+* ``graph_state`` — combination-graph-process state (``None`` for the
+  static topology and the i.i.d. dynamic graphs; Markov-correlated link
+  dropout carries the current link up/down mask —
+  :mod:`repro.core.graphs`).
 
 Absent components are ``None`` leaves, so ONE pytree structure covers every
 engine configuration: the state is jit-transparent, `jax.tree`-mappable,
@@ -44,6 +49,7 @@ class EngineState:
     opt_state: PyTree = None
     part_state: PyTree = None
     comm_state: PyTree = None
+    graph_state: PyTree = None
 
     def replace(self, **changes) -> "EngineState":
         return dataclasses.replace(self, **changes)
@@ -56,26 +62,33 @@ class EngineState:
 
 def init_engine_state(process, pipeline, params: PyTree,
                       opt_state: PyTree = None, *,
-                      key=None) -> EngineState:
+                      key=None, graph=None) -> EngineState:
     """The one definition of initial-state construction, shared by BOTH
     engines: stateful participation processes draw their initial state from
     ``key``, stateful pipelines allocate their memory shaped like
-    ``params``, and components the configuration does not carry stay None.
+    ``params``, stateful graph processes draw their initial link state from
+    a fold of ``key`` (distinct stream: the participation draw is
+    unchanged), and components the configuration does not carry stay None.
     """
-    part_state = comm_state = None
+    part_state = comm_state = graph_state = None
     if process.stateful:
         part_state = process.init_state(
             key if key is not None else jax.random.PRNGKey(0))
     if pipeline.stateful:
         comm_state = pipeline.init_state(params)
-    return EngineState(params, opt_state, part_state, comm_state)
+    if graph is not None and graph.stateful:
+        graph_state = graph.init_state(jax.random.fold_in(
+            key if key is not None else jax.random.PRNGKey(0), 0x9A))
+    return EngineState(params, opt_state, part_state, comm_state,
+                       graph_state)
 
 
 def check_engine_state(process, pipeline, compressor,
-                       state: EngineState, init_hint: str) -> None:
-    """Trace-time guard shared by both engines: a stateful process or
-    pipeline fed a None state component fails loudly, pointing at the
-    engine's init_state."""
+                       state: EngineState, init_hint: str,
+                       graph=None) -> None:
+    """Trace-time guard shared by both engines: a stateful process,
+    pipeline, or graph fed a None state component fails loudly, pointing
+    at the engine's init_state."""
     if process.stateful and state.part_state is None:
         raise ValueError(
             f"{type(process).__name__} carries participation state but "
@@ -87,3 +100,9 @@ def check_engine_state(process, pipeline, compressor,
             "carries communication state (EF residual or diff-mode "
             "reference) but state.comm_state is None; build the state "
             f"with {init_hint}(params, ...)")
+    if (graph is not None and graph.stateful
+            and state.graph_state is None):
+        raise ValueError(
+            f"{type(graph).__name__} carries graph state (the link "
+            "up/down mask) but state.graph_state is None; build the "
+            f"state with {init_hint}(params, opt_state, key=...)")

@@ -89,15 +89,17 @@ def metropolis_weights(adj: np.ndarray) -> np.ndarray:
 
     a_lk = 1 / max(deg_l, deg_k) for neighbors l != k; self weight completes
     the column to one.  Degrees exclude the self-loop.
+
+    Fully vectorized (no Python loops): the per-block Metropolis reweighting
+    of the dynamic graph processes (core/graphs.py) and validation at
+    K in the hundreds both lean on this being O(K^2) numpy ops.
     """
     adj = np.asarray(adj, dtype=bool)
     K = adj.shape[0]
-    deg = adj.sum(axis=1) - 1  # exclude self
-    A = np.zeros((K, K), dtype=np.float64)
-    for k in range(K):
-        for l in range(K):
-            if l != k and adj[l, k]:
-                A[l, k] = 1.0 / (1.0 + max(deg[l], deg[k]))
+    off = adj & ~np.eye(K, dtype=bool)
+    deg = off.sum(axis=1)
+    pair_deg = np.maximum(deg[:, None], deg[None, :])
+    A = np.where(off, 1.0 / (1.0 + pair_deg), 0.0)
     np.fill_diagonal(A, 1.0 - A.sum(axis=0))
     return A
 
@@ -136,18 +138,38 @@ def is_doubly_stochastic(A: np.ndarray, tol: float = 1e-8) -> bool:
 
 
 def is_primitive(A: np.ndarray, max_power: int | None = None) -> bool:
-    """A^m > 0 entrywise for some m (Assumption 1)."""
+    """A^m > 0 entrywise for some m (Assumption 1).
+
+    Reachability closure by repeated squaring — O(log max_power) boolean
+    matmuls instead of max_power dense products, so validating K in the
+    hundreds costs milliseconds (every realized dynamic graph can afford
+    the check, see core/graphs.py).
+    """
     A = np.asarray(A, dtype=np.float64)
     K = A.shape[0]
     if max_power is None:
         max_power = K * K + 1
-    P = (A > 0).astype(np.float64)
-    M = np.eye(K)
-    for _ in range(max_power):
-        M = np.minimum(M @ P + P, 1.0)
-        if (M > 0).all():
-            return True
-    return False
+
+    def bool_matmul(X, Y):
+        return (X.astype(np.float32) @ Y.astype(np.float32)) > 0
+
+    # exponentiation by squaring of the self-loop-closed pattern: result
+    # is reachability within EXACTLY max_power steps (the same walk-length
+    # bound the original per-step loop enforced), in O(log) matmuls
+    base = (A > 0) | np.eye(K, dtype=bool)
+    result = np.eye(K, dtype=bool)
+    n = int(max_power)
+    while n:
+        if n & 1:
+            result = bool_matmul(result, base)
+            if result.all():
+                return True
+        n >>= 1
+        if n:
+            base = bool_matmul(base, base)
+            if base.all():
+                return True
+    return bool(result.all())
 
 
 def perron_vector(A: np.ndarray) -> np.ndarray:

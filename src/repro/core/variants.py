@@ -16,8 +16,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.api.spec import (CompressionSpec, ExperimentSpec, MixerSpec,
-                            ParticipationSpec, PRESETS, RunSpec,
+from repro.api.spec import (CompressionSpec, ExperimentSpec, GraphSpec,
+                            MixerSpec, ParticipationSpec, PRESETS, RunSpec,
                             TopologySpec)
 from repro.core.diffusion import DiffusionConfig
 
@@ -29,6 +29,7 @@ __all__ = [
     "decentralized_fedavg",
     "cyclic_fedavg",
     "markov_asynchronous_diffusion",
+    "link_dropout_diffusion",
     "compressed_diffusion",
     "compressed_fedavg",
     "ExactDiffusionEngine",
@@ -43,10 +44,11 @@ def _q_field(q):
 
 def _spec(*, K: int, T: int, mu: float, topology: str = "ring",
           participation: ParticipationSpec | None = None, q=1.0,
-          mix: str = "dense",
+          mix: str = "dense", graph: GraphSpec | None = None,
           compression: CompressionSpec | None = None) -> ExperimentSpec:
     return ExperimentSpec(
         topology=TopologySpec(kind=topology),
+        graph=graph or GraphSpec(),
         participation=(participation if participation is not None
                        else ParticipationSpec(kind="iid", q=_q_field(q))),
         mixer=MixerSpec(kind=mix),
@@ -129,6 +131,25 @@ def markov_asynchronous_diffusion(K: int, mu: float, q, corr: float,
                  mix=mix)
 
 
+def link_dropout_diffusion(K: int, mu: float, *, drop: float = 0.3,
+                           corr: float = 0.0, T: int = 1, q=1.0,
+                           topology: str = "ring",
+                           mix: str = "dense") -> ExperimentSpec:
+    """Diffusion over a *time-varying* graph: every block, each link of the
+    base topology fails independently with probability ``drop`` (``corr``
+    makes outages bursty — a two-state Markov chain per link) and the
+    surviving adjacency is Metropolis-reweighted, so every realized
+    combination matrix stays symmetric doubly stochastic
+    (:class:`repro.core.graphs.LinkDropout`).  ``drop = 0`` recovers the
+    static Metropolis topology; with ``q < 1`` both the agents AND the
+    links are volatile — the full edge-device regime the paper motivates.
+    """
+    graph = GraphSpec(kind="link_dropout", drop=float(drop),
+                      corr=float(corr))
+    return _spec(K=K, T=T, mu=mu, topology=topology, q=q, mix=mix,
+                 graph=graph)
+
+
 # ---------------------------------------------------------------------------
 # beyond-paper: compressed communication (core/compression.py plug-ins)
 # ---------------------------------------------------------------------------
@@ -197,6 +218,9 @@ def _register_presets():
         "markov_asynchronous_diffusion":
             lambda K, T, mu, q, corr, num_groups:
                 markov_asynchronous_diffusion(K, mu, q, corr),
+        "link_dropout_diffusion":
+            lambda K, T, mu, q, corr, num_groups:
+                link_dropout_diffusion(K, mu, T=T, q=q),
         "compressed_diffusion":
             lambda K, T, mu, q, corr, num_groups:
                 compressed_diffusion(K, mu, T=T, q=q),

@@ -127,7 +127,8 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                      multi_pod: bool, mix_override: str | None = None,
                      tp: bool | None = None, compress: str | None = None,
                      compress_ratio: float = 0.1, compress_sigma: float = 0.0,
-                     error_feedback: bool = False):
+                     error_feedback: bool = False, graph: str = "static",
+                     graph_kwargs: tuple = ()):
     cfg = bundle.model
     pc = bundle.parallel
     tp = pc.tp if tp is None else tp
@@ -135,6 +136,7 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
     topo_cfg = DiffusionConfig(
         num_agents=K, local_steps=pc.local_steps, step_size=1e-3,
         topology=pc.topology if K > 2 else "full",
+        graph=graph if K > 1 else "static", graph_kwargs=graph_kwargs,
         participation=pc.participation)
     if K > 1:
         topo = topo_cfg.make_topology()
@@ -167,24 +169,40 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                                    is_leaf=lambda x: isinstance(x, SDS))
     comm_sds = comm_shardings = None
     if block_step.pipeline.stateful:
-        # comm state (EF residual / diff-mode reference) is a tree of
-        # params-shaped leaves: shard each leaf like the param it mirrors
+        # comm state: params-shaped leaves (EF residual / diff-mode
+        # reference) shard like the param they mirror, in flatten order;
+        # scalar bookkeeping (the adaptive-gamma EMA) replicates
         state_struct = jax.eval_shape(block_step.pipeline.init_state,
                                       param_sds)
         p_sh = jax.tree.leaves(param_shardings)
+        replicated = jax.NamedSharding(mesh, P())
         s_leaves, s_def = jax.tree_util.tree_flatten(state_struct)
-        assert len(s_leaves) == len(p_sh), "comm state != params layout"
+        array_count = sum(1 for l in s_leaves if l.ndim >= 1)
+        assert array_count == len(p_sh), "comm state != params layout"
+        p_iter = iter(p_sh)
+        s_sh = [next(p_iter) if l.ndim >= 1 else replicated
+                for l in s_leaves]
         comm_sds = jax.tree_util.tree_unflatten(
             s_def, [SDS(l.shape, l.dtype, sharding=s)
-                    for l, s in zip(s_leaves, p_sh)])
-        comm_shardings = jax.tree_util.tree_unflatten(s_def, p_sh)
+                    for l, s in zip(s_leaves, s_sh)])
+        comm_shardings = jax.tree_util.tree_unflatten(s_def, s_sh)
+
+    graph_sds = graph_shardings = None
+    if block_step.graph.stateful:
+        # graph state (the (K, K) link mask) is tiny: replicate it
+        g_struct = jax.eval_shape(block_step.graph.init_state,
+                                  SDS((2,), jnp.uint32))
+        replicated = jax.NamedSharding(mesh, P())
+        graph_sds = jax.tree.map(
+            lambda l: SDS(l.shape, l.dtype, sharding=replicated), g_struct)
+        graph_shardings = jax.tree.map(lambda l: replicated, g_struct)
 
     # the unified step contract: ONE EngineState in, one out — absent
     # components (opt/part state here) are None leaves, so a single
-    # signature covers the stateless and comm-stateful paths
-    state_sds = EngineState(param_sds, None, None, comm_sds)
+    # signature covers the stateless and comm/graph-stateful paths
+    state_sds = EngineState(param_sds, None, None, comm_sds, graph_sds)
     state_shardings = EngineState(param_shardings, None, None,
-                                  comm_shardings)
+                                  comm_shardings, graph_shardings)
 
     def step(state, key, batch):
         new_state, metrics = block_step(state, batch, key)
@@ -355,7 +373,8 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                save_hlo: str | None = None,
                tp: bool | None = None, compress: str | None = None,
                compress_ratio: float = 0.1, compress_sigma: float = 0.0,
-               error_feedback: bool = False) -> dict:
+               error_feedback: bool = False, graph: str = "static",
+               graph_kwargs: tuple = ()) -> dict:
     multi_pod = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = get_config(arch)
@@ -368,7 +387,9 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                                               compress=compress,
                                               compress_ratio=compress_ratio,
                                               compress_sigma=compress_sigma,
-                                              error_feedback=error_feedback)
+                                              error_feedback=error_feedback,
+                                              graph=graph,
+                                              graph_kwargs=graph_kwargs)
     elif shape.kind == "prefill":
         step, args, out_sh = build_prefill_step(bundle, shape, mesh, multi_pod)
     else:
@@ -402,6 +423,7 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
         "shape": shape_name,
         "mesh": mesh_kind,
         "mix": mix_override or "default",
+        "graph": graph,
         "compress": compress or "none",
         "compress_ratio": compress_ratio,
         "error_feedback": error_feedback,
@@ -453,6 +475,8 @@ def main():
     for arch, shape, mesh_kind in combos:
         tag = (f"{arch}_{shape}_{mesh_kind}"
                + (f"_{mix}" if mix else "")
+               + (f"_{spec.graph.kind}" if spec.graph.kind != "static"
+                  else "")
                + (f"_{compress}" if compress != "none" else "")
                + ("_ef" if spec.compression.error_feedback else "")
                + ("_notp" if args.no_tp else ""))
@@ -464,7 +488,9 @@ def main():
                              compress=compress,
                              compress_ratio=spec.compression.ratio,
                              compress_sigma=spec.compression.sigma,
-                             error_feedback=spec.compression.error_feedback)
+                             error_feedback=spec.compression.error_feedback,
+                             graph=spec.graph.kind,
+                             graph_kwargs=spec.graph_kwargs())
             with open(out_path, "w") as f:
                 json.dump(res, f, indent=1)
             print(f"OK   {tag}: compile={res['compile_seconds']}s "

@@ -38,7 +38,9 @@ def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
     (trimmed_mean / median) yield the outlier-suppressed aggregate instead."""
     topo = make_topology("fedavg", K)
     mixer = make_mixer(mix, topo, num_agents=K, trim=trim)
-    mixed = mixer(stacked, jnp.ones((K,), jnp.float32))
+    # the matrix is a call operand under the runtime-topology contract
+    mixed = mixer(stacked, jnp.ones((K,), jnp.float32),
+                  jnp.asarray(topo.A, jnp.float32))
     return jax.tree.map(lambda x: x[0], mixed)
 
 

@@ -17,7 +17,9 @@ same code path with the production mesh.  The experiment is described by ONE
 Every flag maps onto one spec field (EXPERIMENTS.md has the migration
 table): the combination backend (``--mix dense|sparse|pallas|auto|
 trimmed_mean|median``), the availability model (``--participation-process
-iid|markov|cyclic``), and the wire compressor (``--compress
+iid|markov|cyclic``), the time-varying combination graph (``--graph
+static|link_dropout|gossip|tv_erdos`` + ``--link-drop``; EXPERIMENTS.md
+§Dynamic topologies), and the wire compressor (``--compress
 topk|randk|int8|gauss`` + ``--compress-ratio``/``--error-feedback``; with
 ``--mix pallas --compress int8`` the fused dequantize+mix kernel runs).
 ``--checkpoint`` saves the full EngineState with the spec embedded, so
@@ -56,6 +58,11 @@ def main():
     key = jax.random.PRNGKey(run.seed)
     kp, key = jax.random.split(key)
     params = eng.init_params(kp)
+    if spec.graph.kind != "static":
+        g = eng.graph if hasattr(eng, "graph") else None
+        print(f"graph: {spec.graph.kind} — the combination matrix is "
+              f"resampled every block ({g!r}); "
+              f"stateful={bool(g is not None and g.stateful)}")
     # state leaves mirror the stacked (K, ...) layout; step counter is shared
     opt_state = eng.optimizer.init(params)
     state = eng.init_state(params, opt_state,

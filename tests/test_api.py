@@ -39,6 +39,9 @@ PRESET_SPECS = {
     "markov_asynchronous_diffusion":
         lambda: variants.markov_asynchronous_diffusion(K, mu=0.02, q=0.6,
                                                        corr=0.5),
+    "link_dropout_diffusion":
+        lambda: variants.link_dropout_diffusion(K, mu=0.02, drop=0.3,
+                                                corr=0.5, q=0.8),
     "compressed_diffusion":
         lambda: variants.compressed_diffusion(K, mu=0.02, T=2, q=0.8,
                                               compress="topk", ratio=0.5),
@@ -159,6 +162,12 @@ def _legacy_engine(name, loss):
             num_agents=K, local_steps=1, step_size=0.02, topology="ring",
             participation=0.6), loss,
             participation=MarkovAvailability(0.6, 0.5, num_agents=K))
+    if name == "link_dropout_diffusion":
+        return DiffusionEngine(DiffusionConfig(
+            num_agents=K, local_steps=1, step_size=0.02, topology="ring",
+            graph="link_dropout",
+            graph_kwargs=(("corr", 0.5), ("drop", 0.3)),
+            participation=0.8), loss)
     if name == "compressed_diffusion":
         return DiffusionEngine(DiffusionConfig(
             num_agents=K, local_steps=2, step_size=0.02, topology="ring",
@@ -282,6 +291,9 @@ FLAG_SETS = [
      "--comm-gamma", "0.3", "--optimizer", "momentum",
      "--mix", "sparse", "--arch", "smollm-360m"],
     ["--mix", "trimmed_mean", "--trim", "2"],
+    ["--graph", "link_dropout", "--link-drop", "0.4", "--graph-corr",
+     "0.2", "--topology-hops", "2", "--compress", "topk",
+     "--comm-gamma", "auto"],
 ]
 
 
@@ -347,6 +359,52 @@ def test_cli_preset_overlays_explicit_flags_only():
         ["--preset", "compressed_fedavg", "--agents", "8"]))
     assert bare.mixer.kind == "dense" and bare.compression.kind == "int8"
     assert bare.compression.ratio == 1.0       # factory default, not 0.1
+
+
+def test_cli_topology_kwargs_reach_the_spec():
+    """The fixed drop: --topology-hops/-p/-seed/-rows map onto
+    TopologySpec.kwargs (they used to be silently unreachable — only the
+    kind was forwarded)."""
+    got = spec_from_args(_parser_for("train").parse_args(
+        ["--topology", "erdos", "--topology-p", "0.4",
+         "--topology-seed", "7"]))
+    assert dict(got.topology.kwargs) == {"p": 0.4, "seed": 7}
+    got = spec_from_args(_parser_for("train").parse_args(
+        ["--topology", "ring", "--topology-hops", "3"]))
+    assert dict(got.topology.kwargs) == {"hops": 3}
+    # the kwargs genuinely reach make_topology through build()
+    data = make_regression_problem(K=8, N=20)
+    eng = build(got.replace(model=ModelSpec(kind="external"),
+                            run=RunSpec(num_agents=8)), data.loss_fn())
+    assert set(eng.topology.neighbor_offsets_ring()) == {-3, -2, -1, 1, 2, 3}
+    # ...and overlay a preset without clobbering untouched fields
+    overlaid = spec_from_args(_parser_for("train").parse_args(
+        ["--preset", "vanilla_diffusion", "--agents", "8",
+         "--topology-hops", "2"]))
+    assert dict(overlaid.topology.kwargs) == {"hops": 2}
+    assert overlaid.topology.kind == "ring"
+
+
+def test_cli_graph_flags_reach_the_spec():
+    """--graph/--link-drop/--graph-corr/--graph-p map onto GraphSpec and
+    overlay presets only when explicitly passed."""
+    got = spec_from_args(_parser_for("train").parse_args(
+        ["--graph", "link_dropout", "--link-drop", "0.4",
+         "--graph-corr", "0.25"]))
+    assert got.graph == variants.GraphSpec(kind="link_dropout", drop=0.4,
+                                           corr=0.25)
+    # preset overlay: an untouched --graph keeps the preset's choice
+    base = spec_from_args(_parser_for("train").parse_args(
+        ["--preset", "link_dropout_diffusion", "--agents", "8"]))
+    assert base.graph.kind == "link_dropout" and base.graph.drop == 0.3
+    over = spec_from_args(_parser_for("train").parse_args(
+        ["--preset", "link_dropout_diffusion", "--agents", "8",
+         "--link-drop", "0.6"]))
+    assert over.graph.drop == 0.6
+    # --comm-gamma auto parses to the string (not a float)
+    auto = spec_from_args(_parser_for("train").parse_args(
+        ["--compress", "topk", "--comm-gamma", "auto"]))
+    assert auto.compression.gamma == "auto"
 
 
 # ---------------------------------------------------------------------------

@@ -35,13 +35,14 @@ def test_identity_pipeline_bit_identical(kind, K):
     """compress="none" must be *bit-identical* to the bare mixer (the
     pipeline short-circuits; the Mixer contract is untouched)."""
     topo = make_topology(kind, K)
+    A = jnp.asarray(topo.A, jnp.float32)
     for seed in range(4):
         key = jax.random.fold_in(KEY, seed)
         params = _rand_tree(key, K)
         m = jax.random.bernoulli(key, 0.6, (K,)).astype(jnp.float32)
         for mix in ("dense", "sparse"):
-            ref = make_mixer(mix, topo)(params, m)
-            out, state = make_pipeline(mix, topo)(params, m)
+            ref = make_mixer(mix, topo)(params, m, A)
+            out, state = make_pipeline(mix, topo)(params, m, A)
             assert state == ()
             for lr, lo in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
                 np.testing.assert_array_equal(np.asarray(lo), np.asarray(lr))
@@ -55,6 +56,7 @@ def test_ratio_one_matches_dense_mixer(compress, kind, K):
     sparsifiers run diff mode, whose auto gamma is 1.0 at lossless ratio
     and whose reference tracks psi exactly)."""
     topo = make_topology(kind, K)
+    A = jnp.asarray(topo.A, jnp.float32)
     dense = make_mixer("dense", topo)
     pipe = make_pipeline("dense", topo, compress=compress,
                          compress_ratio=1.0)
@@ -66,8 +68,8 @@ def test_ratio_one_matches_dense_mixer(compress, kind, K):
         if state is None:
             state = pipe.init_state(params)
         m = jax.random.bernoulli(key, 0.6, (K,)).astype(jnp.float32)
-        ref = dense(params, m)
-        out, state = pipe(params, m, state,
+        ref = dense(params, m, A)
+        out, state = pipe(params, m, A, state,
                           jax.random.fold_in(KEY, 100 + seed))
         for lr, lo in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
             np.testing.assert_allclose(np.asarray(lo), np.asarray(lr),
@@ -86,6 +88,7 @@ def test_eq20_invariants_under_compression(compress, ratio, ef, mode):
     doubly-stochastic mixing preserves the network mean."""
     K = 8
     topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
     pipe = make_pipeline("dense", topo, compress=compress,
                          compress_ratio=ratio, error_feedback=ef,
                          mode=mode)
@@ -95,7 +98,7 @@ def test_eq20_invariants_under_compression(compress, ratio, ef, mode):
     # two rounds so diff mode runs once with a warm reference too
     for step in range(2):
         prev_state = state
-        out, state = pipe(params, m, state, jax.random.PRNGKey(9 + step))
+        out, state = pipe(params, m, A, state, jax.random.PRNGKey(9 + step))
         for li, lo in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
             for k in (1, 4):   # inactive agents frozen
                 np.testing.assert_allclose(np.asarray(lo[k]),
@@ -147,13 +150,14 @@ def test_diff_mode_reference_tracks_params():
     and hence the exchange perturbation — vanishes."""
     K = 8
     topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
     pipe = make_pipeline("dense", topo, compress="topk", compress_ratio=0.25)
     params = _rand_tree(KEY, K)
     state = pipe.init_state(params)
     m = jnp.ones((K,))
     gaps = []
     for i in range(12):
-        _, state = pipe(params, m, state, jax.random.fold_in(KEY, i))
+        _, state = pipe(params, m, A, state, jax.random.fold_in(KEY, i))
         gaps.append(max(float(jnp.abs(p - r).max()) for p, r in
                         zip(jax.tree.leaves(params),
                             jax.tree.leaves(state["ref"]))))
@@ -166,15 +170,16 @@ def test_int8_pipeline_error_is_quantization_bounded():
     on both the generic dense path and the fused Pallas path."""
     K = 8
     topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
     params = _rand_tree(KEY, K)
     m = jax.random.bernoulli(KEY, 0.7, (K,)).astype(jnp.float32)
-    ref = make_mixer("dense", topo)(params, m)
+    ref = make_mixer("dense", topo)(params, m, A)
     amax = max(float(jnp.abs(l).max()) for l in jax.tree.leaves(params))
     tol = 4.0 * amax / 127.0
     for mix in ("dense", "pallas"):
         pipe = make_pipeline(mix, topo, compress="int8", tile_m=128,
                              interpret=True)
-        out, _ = pipe(params, m, (), jax.random.PRNGKey(5))
+        out, _ = pipe(params, m, A, (), jax.random.PRNGKey(5))
         for lr, lo in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
             assert np.abs(np.asarray(lo) - np.asarray(lr)).max() < tol, mix
 
@@ -233,6 +238,7 @@ def test_pallas_int8_pipeline_threads_error_feedback():
     messages, so one round of EF makes the next message recover the drop."""
     K = 4
     topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
     pipe = make_pipeline("pallas", topo, compress="int8",
                          error_feedback=True, tile_m=128, interpret=True)
     params = _rand_tree(KEY, K)
@@ -240,7 +246,7 @@ def test_pallas_int8_pipeline_threads_error_feedback():
     for l in jax.tree.leaves(state):
         assert not np.asarray(l).any()
     m = jnp.ones((K,))
-    out, state = pipe(params, m, state, jax.random.PRNGKey(3))
+    out, state = pipe(params, m, A, state, jax.random.PRNGKey(3))
     # residual is bounded by one quantization step per coordinate
     for lp, ls in zip(jax.tree.leaves(params), jax.tree.leaves(state)):
         step = np.abs(np.asarray(lp)).max() / 127.0 + 1e-6
@@ -417,7 +423,7 @@ def test_make_compressor_validation_and_passthrough():
     with pytest.raises(ValueError):
         make_pipeline("dense", make_topology("ring", 4),
                       compress="int8")({"w": jnp.zeros((4, 4))},
-                                       jnp.ones((4,)))
+                                       jnp.ones((4,)), jnp.eye(4))
 
 
 def test_compressed_variants_factories():

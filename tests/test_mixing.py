@@ -32,6 +32,7 @@ def _rand_tree(key, K):
 @pytest.mark.parametrize("kind,K", [("ring", 8), ("ring", 12), ("grid", 12)])
 def test_backend_parity_random_masks(kind, K):
     topo = make_topology(kind, K)
+    A = jnp.asarray(topo.A, jnp.float32)
     mixers = {
         "dense": make_mixer("dense", topo),
         "sparse": make_mixer("sparse", topo),
@@ -41,9 +42,9 @@ def test_backend_parity_random_masks(kind, K):
         key = jax.random.fold_in(KEY, seed)
         params = _rand_tree(key, K)
         m = jax.random.bernoulli(key, 0.6, (K,)).astype(jnp.float32)
-        ref = mixers["dense"](params, m)
+        ref = mixers["dense"](params, m, A)
         for name in ("sparse", "pallas"):
-            out = mixers[name](params, m)
+            out = mixers[name](params, m, A)
             for leaf_r, leaf_o in zip(jax.tree.leaves(ref),
                                       jax.tree.leaves(out)):
                 np.testing.assert_allclose(
@@ -62,9 +63,10 @@ def test_pallas_mixer_on_transformer_pytree():
     params = jax.vmap(lambda k: tf.init_params(k, cfg))(
         jax.random.split(KEY, K))
     topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
     active = jnp.asarray([1.0, 0.0, 1.0, 1.0])
-    dense = make_mixer("dense", topo)(params, active)
-    pallas = make_mixer("pallas", topo, interpret=True)(params, active)
+    dense = make_mixer("dense", topo)(params, active, A)
+    pallas = make_mixer("pallas", topo, interpret=True)(params, active, A)
     for d, p in zip(jax.tree.leaves(dense), jax.tree.leaves(pallas)):
         np.testing.assert_allclose(np.asarray(p, np.float32),
                                    np.asarray(d, np.float32), atol=1e-5)
@@ -72,14 +74,15 @@ def test_pallas_mixer_on_transformer_pytree():
 
 def test_pallas_layout_cache_reused():
     topo = make_topology("ring", 4)
-    mixer = PallasFusedMixer(topo.A, tile_m=128, interpret=True)
+    A = jnp.asarray(topo.A, jnp.float32)
+    mixer = PallasFusedMixer(tile_m=128, interpret=True)
     params = _rand_tree(KEY, 4)
     m = jnp.ones((4,))
-    mixer(params, m)
+    mixer(params, m, A)
     assert len(mixer._layouts) == 1
-    mixer(params, m)                      # same structure: cache hit
+    mixer(params, m, A)                   # same structure: cache hit
     assert len(mixer._layouts) == 1
-    mixer({"w": params["w"]}, m)          # new structure: second entry
+    mixer({"w": params["w"]}, m, A)       # new structure: second entry
     assert len(mixer._layouts) == 2
 
 
@@ -88,10 +91,11 @@ def test_mixer_preserves_mean_and_inactive_agents():
     mixing preserves the network mean, inactive agents keep their params."""
     K = 8
     topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
     params = _rand_tree(KEY, K)
     m = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
     for name in ("dense", "sparse", "pallas"):
-        out = make_mixer(name, topo, tile_m=128, interpret=True)(params, m)
+        out = make_mixer(name, topo, tile_m=128, interpret=True)(params, m, A)
         for leaf_in, leaf_out in zip(jax.tree.leaves(params),
                                      jax.tree.leaves(out)):
             np.testing.assert_allclose(np.asarray(leaf_out.mean(0)),
@@ -123,7 +127,11 @@ def test_make_mixer_auto_policy_and_errors():
     assert isinstance(make_mixer("dense", None, A=ring.A), DenseMixer)
     assert isinstance(make_mixer(auto_ring), type(auto_ring))  # passthrough
     with pytest.raises(ValueError):
-        make_mixer("dense", None)
+        # the matrix is a call operand now, but sparse still needs its
+        # static structure (the circulant offsets) at construction
+        make_mixer("sparse", None)
+    with pytest.raises(ValueError):
+        make_mixer("trimmed_mean", None)   # robust backends need K
     with pytest.raises(ValueError):
         make_mixer("nope", ring)
 

@@ -1,4 +1,6 @@
 """Combination-matrix constructions satisfy Assumption 1."""
+import time
+
 import numpy as np
 import pytest
 
@@ -50,3 +52,70 @@ def test_metropolis_on_irregular_graph():
 def test_grid_requires_divisible():
     with pytest.raises(ValueError):
         T.make_topology("grid", 7)
+
+
+def _metropolis_loop_reference(adj):
+    """The pre-vectorization O(K^2) Python-loop Metropolis rule — the
+    ground truth the vectorized implementation must match bit-for-bit."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    deg = adj.sum(axis=1) - 1
+    A = np.zeros((n, n), dtype=np.float64)
+    for k in range(n):
+        for l in range(n):
+            if l != k and adj[l, k]:
+                A[l, k] = 1.0 / (1.0 + max(deg[l], deg[k]))
+    np.fill_diagonal(A, 1.0 - A.sum(axis=0))
+    return A
+
+
+@pytest.mark.parametrize("kind,n", [("ring", 8), ("grid", 12),
+                                    ("erdos", 31), ("full", 6)])
+def test_vectorized_metropolis_matches_loop_reference(kind, n):
+    topo = T.make_topology(kind, n)
+    np.testing.assert_array_equal(T.metropolis_weights(topo.adjacency),
+                                  _metropolis_loop_reference(topo.adjacency))
+
+
+def test_is_primitive_doubling_semantics():
+    """The repeated-squaring reachability agrees with the known cases,
+    including the negative ones the old loop caught."""
+    assert T.is_primitive(T.make_topology("ring", 20).A)
+    assert T.is_primitive(T.make_topology("fedavg", 8).A)
+    assert not T.is_primitive(np.eye(4))                       # disconnected
+    assert not T.is_primitive(np.kron(np.eye(2), np.ones((2, 2)) / 2))
+    # max_power bounds the walk length EXACTLY (not rounded up to a power
+    # of two): a path of n nodes needs walk length n - 1 end to end
+    path = np.eye(12, dtype=bool)
+    idx = np.arange(11)
+    path[idx, idx + 1] = path[idx + 1, idx] = True
+    A12 = T.metropolis_weights(path)
+    assert T.is_primitive(A12)
+    assert not T.is_primitive(A12, max_power=2)
+    path9 = np.eye(9, dtype=bool)
+    idx = np.arange(8)
+    path9[idx, idx + 1] = path9[idx + 1, idx] = True
+    A9 = T.metropolis_weights(path9)
+    assert not T.is_primitive(A9, max_power=5)   # needs length 8
+    assert not T.is_primitive(A9, max_power=7)
+    assert T.is_primitive(A9, max_power=8)
+
+
+def test_metropolis_and_primitivity_cheap_at_K256():
+    """Satellite gate: the vectorized Metropolis reweighting + validation
+    must be cheap at K in the hundreds (the dynamic graph processes
+    reweight EVERY block; the loop versions took seconds here)."""
+    adj = T.erdos_renyi_adjacency(256, 0.05, seed=1)
+    t0 = time.time()
+    for _ in range(5):
+        A = T.metropolis_weights(adj)
+    t_met = (time.time() - t0) / 5
+    t0 = time.time()
+    for _ in range(5):
+        ok = T.is_primitive(A)
+    t_prim = (time.time() - t0) / 5
+    assert ok
+    assert T.is_doubly_stochastic(A)
+    # generous CI-noise headroom: the vectorized forms run in ~1-10 ms
+    assert t_met < 0.25, f"metropolis_weights K=256 took {t_met:.3f}s"
+    assert t_prim < 0.5, f"is_primitive K=256 took {t_prim:.3f}s"
