@@ -631,6 +631,33 @@ def bench_graph_process():
          f"auto/fixed={gmsd['auto'] / gmsd['fixed']:.3f};"
          f"ok={gmsd['auto'] <= gmsd['fixed'] * 1.02}")
 
+    # graph-aware sparse offsets: on realized dynamic graphs an offset's
+    # whole coefficient row can die (every link at that offset failed this
+    # block); the skip_dead sparse path guards each roll with a segment
+    # mask (lax.cond), so the realized permute count is the LIVE offset
+    # count.  Demonstrate the drop under aggressive dropout on a hops-2
+    # ring (untimed row: the gate is the live count, not wall clock).
+    from repro.core.graphs import LinkDropout
+    from repro.core.mixing import count_live_offsets
+    from repro.core.participation import masked_combination
+    from repro.core.topology import make_topology
+    topo2 = make_topology("ring", 8, hops=2)
+    proc2 = LinkDropout(topo2, drop=0.85)
+    offs = topo2.neighbor_offsets_ring()
+    ones8 = jnp.ones((8,), jnp.float32)
+    draws = 100 if FAST else 400
+    live = []
+    for i in range(draws):
+        A_t, _ = proc2.sample((), jax.random.fold_in(jax.random.PRNGKey(5),
+                                                     i))
+        live.append(int(count_live_offsets(
+            masked_combination(A_t, ones8), offs)))
+    mean_live = float(np.mean(live))
+    _row("sparse_dead_offsets", 0.0,
+         f"offsets={len(offs)};mean_live={mean_live:.2f};"
+         f"permute_drop={1.0 - mean_live / len(offs):.2f};"
+         f"ok={mean_live < len(offs)}")
+
     # vectorized Metropolis reweighting + validation at K=256 (satellite
     # timing assertion: this is the per-block cost of the dynamic graphs)
     adj = erdos_renyi_adjacency(256, 0.05, seed=1)
@@ -652,6 +679,100 @@ def bench_graph_process():
     _row("metropolis_K256", 0.0,
          f"ok={ok};us={t_met * 1e6:.0f};"
          f"is_primitive_us={t_prim * 1e6:.0f}")
+
+
+def bench_byzantine():
+    """Byzantine-gradient attack benchmark (EXPERIMENTS.md §Robust
+    aggregation).
+
+    K = 12, heterogeneous regression, 3 sign-flip adversaries evenly
+    spaced on a ring (at most one per closed neighborhood).  Measured:
+    steady-state MSD of the HONEST agents for
+
+    * the clean network under the neighborhood trimmed mean (reference),
+    * the attacked network under the per-neighborhood trimmed mean on the
+      ring and on a 3x4 grid (graph-aware adversary placement) — must stay
+      within a bounded factor of clean,
+    * the attacked network under the GLOBAL trimmed mean on the ring
+      (trim = 1 < 3 adversaries: the SLSGD server setting leaks) and under
+      the linear fedavg mean — both degrade, by design.
+
+    The acceptance gate row checks nbr/clean bounded AND global >> nbr.
+    A run that diverges (non-finite MSD) counts as degraded.
+    """
+    from repro.api import build
+    from repro.api.spec import AttackSpec, MixerSpec, TopologySpec
+    from repro.core import variants
+    from repro.core.attacks import byzantine_indices
+
+    K = 12
+    blocks = 400 if FAST else 1200
+    data = make_regression_problem(K=K, N=100, M=2, rho=0.1, seed=8,
+                                   mean_scale=1.5, noise_low=0.01,
+                                   noise_high=0.05, w_star_spread=0.5)
+    w_o = np.asarray(data.problem().w_opt(None))
+    sampler = make_block_sampler(data, T=1, batch=2)
+    ring_byz = byzantine_indices(K, 3)                    # (0, 4, 8)
+    grid_byz = (0, 7, 9)   # 3x4 grid: pairwise distance >= 3 — at most
+    #                        one adversary per closed grid neighborhood
+
+    def run(label, spec, byz):
+        honest = [k for k in range(K) if k not in byz]
+        eng = build(spec, data.loss_fn())
+        p0 = jnp.zeros((K, 2))
+        state = eng.init_state(p0, eng.optimizer.init(p0))
+        key = jax.random.PRNGKey(0)
+        hist, diverged, steps = [], False, 0
+        t0 = time.time()
+        for i in range(blocks):
+            key, kb, ks = jax.random.split(key, 3)
+            state, _ = eng.step(state, sampler(kb), ks)
+            steps = i + 1
+            if i % 50 == 0 or i >= blocks * 3 // 4:
+                p = np.asarray(state.params, np.float64)
+                msd = float(np.mean(np.sum((p[honest] - w_o) ** 2, axis=1)))
+                if not np.isfinite(msd) or msd > 1e12:
+                    diverged = True
+                    break
+                if i >= blocks * 3 // 4:
+                    hist.append(msd)
+        # per-iteration wall clock over the iterations actually executed
+        # (a diverged run breaks early; dividing by `blocks` would feed a
+        # truncation-dependent number into the --check gate)
+        us = (time.time() - t0) / max(steps, 1) * 1e6
+        m = float("inf") if diverged or not hist else float(np.mean(hist))
+        _row(f"byz_{label}", us,
+             f"honest_msd={m:.4e};diverged={diverged}")
+        return m
+
+    base = variants.byzantine_robust_diffusion(K, mu=0.05, num_byzantine=3,
+                                               scale=3.0)
+    clean = run("clean_ring_nbr_trim",
+                base.replace(attack=AttackSpec(kind="none")), ring_byz)
+    nbr = run("attack_ring_nbr_trim", base, ring_byz)
+    grid = run("attack_grid_nbr_trim",
+               base.replace(topology=TopologySpec(kind="grid",
+                                                  kwargs=(("rows", 3),)),
+                            attack=AttackSpec(kind="sign_flip",
+                                              scale=3.0,
+                                              agents=grid_byz)),
+               grid_byz)
+    glb = run("attack_ring_global_trim",
+              base.replace(mixer=MixerSpec(kind="trimmed_mean", trim=1,
+                                           scope="global")), ring_byz)
+    fed = run("attack_fedavg_mean",
+              base.replace(mixer=MixerSpec(kind="dense"),
+                           topology=TopologySpec(kind="fedavg")), ring_byz)
+
+    # acceptance gate: neighborhood scope bounded under attack on BOTH
+    # graphs, global-scope-on-ring and the linear mean degraded (>= 10x
+    # the neighborhood MSD, or outright divergence)
+    bounded = nbr < 25.0 * clean and grid < 25.0 * clean
+    degraded = (not glb < 10.0 * nbr) and (not fed < 10.0 * nbr)
+    _row("byzantine_gate", 0.0,
+         f"nbr/clean={nbr / clean:.2f};grid/clean={grid / clean:.2f};"
+         f"global/nbr={glb / nbr:.1f};fedavg/nbr={fed / nbr:.1f};"
+         f"ok={bounded and degraded}")
 
 
 def bench_kernel_micro():
@@ -715,6 +836,7 @@ ALL_BENCHES = (
     bench_mix_backends,
     bench_compression,
     bench_graph_process,
+    bench_byzantine,
     bench_kernel_micro,
 )
 

@@ -9,6 +9,7 @@ backends register against the string-keyed registries in
 through :func:`get_preset` / the launchers' ``--preset`` flag.
 """
 from repro.api.spec import (  # noqa: F401
+    AttackSpec,
     CompressionSpec,
     ExperimentSpec,
     GraphSpec,
@@ -22,6 +23,7 @@ from repro.api.spec import (  # noqa: F401
     TopologySpec,
 )
 from repro.api.build import (  # noqa: F401
+    ATTACKS,
     COMPRESSORS,
     GRAPHS,
     MIXERS,

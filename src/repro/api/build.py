@@ -25,9 +25,10 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 
-from repro.api.spec import (CompressionSpec, ExperimentSpec, GraphSpec,
-                            MixerSpec, ModelSpec, OptimizerSpec,
+from repro.api.spec import (AttackSpec, CompressionSpec, ExperimentSpec,
+                            GraphSpec, MixerSpec, ModelSpec, OptimizerSpec,
                             ParticipationSpec, Registry, TopologySpec)
+from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
 from repro.core import graphs as graph_lib
 from repro.core import mixing
@@ -47,6 +48,7 @@ __all__ = [
     "PARTICIPATION",
     "MIXERS",
     "COMPRESSORS",
+    "ATTACKS",
     "OPTIMIZERS",
     "MODELS",
 ]
@@ -56,6 +58,7 @@ GRAPHS = Registry("graph")               # (GraphSpec, topology, K) -> process
 PARTICIPATION = Registry("participation")  # (ParticipationSpec, K) -> process
 MIXERS = Registry("mixer")               # (MixerSpec, topology, K) -> Mixer
 COMPRESSORS = Registry("compressor")     # (CompressionSpec,) -> Compressor
+ATTACKS = Registry("attack")             # (AttackSpec, K, inner) -> transform
 OPTIMIZERS = Registry("optimizer")       # (OptimizerSpec,) -> GradTransform
 MODELS = Registry("model")               # (ModelSpec,) -> ModelBundle | None
 
@@ -121,7 +124,7 @@ def _register_mixers():
             return mixing.make_mixer(_kind, topology, num_agents=K,
                                      tile_m=spec.tile_m,
                                      interpret=spec.interpret,
-                                     trim=spec.trim)
+                                     trim=spec.trim, scope=spec.scope)
 
 
 _register_mixers()
@@ -139,6 +142,21 @@ def _register_compressors():
 
 
 _register_compressors()
+
+
+# -- byzantine gradient attacks (core/attacks.py) ---------------------------
+
+def _register_attacks():
+    for kind in attack_lib.ATTACK_KINDS:
+        @ATTACKS.register(kind)
+        def _build(spec: AttackSpec, K: int, inner, _kind=kind):
+            return attack_lib.make_attack(
+                _kind, K, num_byzantine=spec.num_byzantine,
+                scale=spec.scale, agents=spec.agents, seed=spec.seed,
+                inner=inner)
+
+
+_register_attacks()
 
 
 # -- optimizers -------------------------------------------------------------
@@ -221,6 +239,20 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
     graph_lib.check_mixer_support(mixer, graph)
     compressor = COMPRESSORS.get(spec.compression.kind)(spec.compression)
     optimizer = OPTIMIZERS.get(spec.optimizer.kind)(spec.optimizer)
+    if spec.attack.kind != "none":
+        if grad_transform is not None:
+            # silently dropping the attack would report an honest network
+            # as attacked (and for "noise" leave optimizer.init allocating
+            # state the caller's transform cannot consume)
+            raise ValueError(
+                "spec.attack and an explicit grad_transform were both "
+                "supplied — compose them yourself via "
+                "repro.core.attacks.make_attack(..., inner=...) and pass "
+                "its .update as grad_transform, or drop one")
+        # the attack corrupts Byzantine gradients BEFORE the optimizer
+        # sees them; the composed transform replaces the optimizer surface
+        # (``engine.optimizer.init`` allocates the composed state)
+        optimizer = ATTACKS.get(spec.attack.kind)(spec.attack, K, optimizer)
     model = MODELS.get(spec.model.kind)(spec.model)
 
     if engine == "auto":
@@ -228,7 +260,8 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
     if engine not in ("stacked", "sharded"):
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected stacked|sharded|auto)")
-    if grad_transform is None and spec.optimizer.kind != "sgd":
+    if grad_transform is None and (spec.optimizer.kind != "sgd"
+                                   or spec.attack.kind != "none"):
         grad_transform = optimizer.update
 
     if engine == "stacked":

@@ -31,15 +31,17 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-from repro.api.spec import (CompressionSpec, ExperimentSpec, GraphSpec,
-                            MixerSpec, ModelSpec, OptimizerSpec,
+from repro.api.spec import (AttackSpec, CompressionSpec, ExperimentSpec,
+                            GraphSpec, MixerSpec, ModelSpec, OptimizerSpec,
                             ParticipationSpec, RunSpec, TopologySpec)
 
 __all__ = ["add_spec_args", "spec_from_args", "get_preset"]
 
 _MIX_CHOICES = ["dense", "sparse", "pallas", "auto", "none",
                 "trimmed_mean", "median"]
+_ROBUST_MIX_KINDS = ("trimmed_mean", "median")
 _COMPRESS_CHOICES = ["none", "topk", "randk", "int8", "gauss"]
+_ATTACK_CHOICES = ["none", "sign_flip", "noise", "shift"]
 
 
 def _gamma_arg(s: str):
@@ -154,6 +156,20 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
     g.add_argument("--trim", type=int, default=1, action=_Track,
                    help="per-side trim for --mix trimmed_mean "
                         "(MixerSpec.trim)")
+    g.add_argument("--robust-scope", default="global", action=_Track,
+                   choices=["global", "neighborhood"],
+                   help="robust-aggregation scope (MixerSpec.scope): "
+                        "global (SLSGD server aggregate over the active "
+                        "set) or neighborhood (per-agent over the realized "
+                        "A_t support)")
+    g.add_argument("--attack", default="none", choices=_ATTACK_CHOICES,
+                   action=_Track,
+                   help="Byzantine gradient adversary (AttackSpec.kind)")
+    g.add_argument("--attack-num", type=int, default=1, action=_Track,
+                   help="Byzantine agent count, evenly spaced "
+                        "(AttackSpec.num_byzantine)")
+    g.add_argument("--attack-scale", type=float, default=1.0, action=_Track,
+                   help="attack magnitude (AttackSpec.scale)")
     g.add_argument("--compress", default="none", choices=_COMPRESS_CHOICES,
                    action=_Track,
                    help="communication compressor (CompressionSpec.kind)")
@@ -194,6 +210,10 @@ _PRESET_OVERRIDES = {
     "graph_p": ("graph", "p"),
     "mix": ("mixer", "kind"),
     "trim": ("mixer", "trim"),
+    "robust_scope": ("mixer", "scope"),
+    "attack": ("attack", "kind"),
+    "attack_num": ("attack", "num_byzantine"),
+    "attack_scale": ("attack", "scale"),
     "compress": ("compression", "kind"),
     "compress_ratio": ("compression", "ratio"),
     "compress_sigma": ("compression", "sigma"),
@@ -250,6 +270,52 @@ def _run_overlay(spec: ExperimentSpec, args) -> ExperimentSpec:
     return spec
 
 
+def _check_robust_flags(args, spec: ExperimentSpec) -> ExperimentSpec:
+    """--trim / --robust-scope configure the robust mixer backends only:
+    explicitly passing them with a non-robust builtin kind used to be
+    silently swallowed (the value was stored on the spec and ignored) —
+    now it is an error.  Custom registered kinds are left alone (they may
+    consume the fields)."""
+    explicit = getattr(args, "_explicit", set())
+    offenders = [flag for dest, flag in (("trim", "--trim"),
+                                         ("robust_scope", "--robust-scope"))
+                 if dest in explicit]
+    builtin_nonrobust = spec.mixer.kind in ("dense", "sparse", "pallas",
+                                            "auto", "none")
+    if offenders and builtin_nonrobust:
+        raise ValueError(
+            f"{'/'.join(offenders)} only applies to the robust mixer "
+            f"backends (--mix {'|'.join(_ROBUST_MIX_KINDS)}); the "
+            f"{spec.mixer.kind!r} mixer ignores it — drop the flag or "
+            "pick a robust kind")
+    # the same silent-swallow class on the attack sub-flags: tuning an
+    # adversary that is never built would report an honest network as
+    # an attacked experiment
+    atk = [flag for dest, flag in (("attack_num", "--attack-num"),
+                                   ("attack_scale", "--attack-scale"))
+           if dest in explicit]
+    if atk and spec.attack.kind == "none":
+        raise ValueError(
+            f"{'/'.join(atk)} configures a Byzantine adversary but the "
+            'attack kind is "none" — pass --attack '
+            "sign_flip|noise|shift (or a preset that selects one)")
+    # ... and on the graph sub-flags: each is consumed by exactly one
+    # builtin kind (custom registered kinds receive every field and are
+    # exempt — spec.graph_kwargs() forwards them all)
+    consumers = {"link_drop": ("--link-drop", ("link_dropout",)),
+                 "graph_corr": ("--graph-corr", ("link_dropout",)),
+                 "graph_p": ("--graph-p", ("tv_erdos",))}
+    builtin_graphs = ("static", "link_dropout", "gossip", "tv_erdos")
+    if spec.graph.kind in builtin_graphs:
+        for dest, (flag, kinds) in consumers.items():
+            if dest in explicit and spec.graph.kind not in kinds:
+                raise ValueError(
+                    f"{flag} only applies to --graph {'|'.join(kinds)}; "
+                    f"the {spec.graph.kind!r} graph process ignores it — "
+                    "drop the flag or pick the matching kind")
+    return spec
+
+
 def spec_from_args(args) -> ExperimentSpec:
     """Build the ExperimentSpec from parsed shared flags.
 
@@ -264,8 +330,8 @@ def spec_from_args(args) -> ExperimentSpec:
         spec = factory(K=args.agents, T=args.local_steps, mu=args.step_size,
                        q=args.participation, corr=args.markov_corr,
                        num_groups=args.num_groups)
-        return _run_overlay(spec, args)
-    return ExperimentSpec(
+        return _check_robust_flags(args, _run_overlay(spec, args))
+    return _check_robust_flags(args, ExperimentSpec(
         topology=TopologySpec(kind=args.topology,
                               kwargs=_topology_kwargs(args)),
         graph=GraphSpec(kind=args.graph, drop=args.link_drop,
@@ -273,11 +339,14 @@ def spec_from_args(args) -> ExperimentSpec:
         participation=ParticipationSpec(
             kind=args.participation_process, q=args.participation,
             corr=args.markov_corr, num_groups=args.num_groups),
-        mixer=MixerSpec(kind=args.mix, trim=args.trim),
+        mixer=MixerSpec(kind=args.mix, trim=args.trim,
+                        scope=args.robust_scope),
         compression=CompressionSpec(
             kind=args.compress, ratio=args.compress_ratio,
             sigma=args.compress_sigma, error_feedback=args.error_feedback,
             gamma=args.comm_gamma),
+        attack=AttackSpec(kind=args.attack, num_byzantine=args.attack_num,
+                          scale=args.attack_scale),
         optimizer=OptimizerSpec(kind=args.optimizer),
         model=ModelSpec(kind="transformer", arch=args.arch,
                         smoke=args.smoke),
@@ -285,4 +354,4 @@ def spec_from_args(args) -> ExperimentSpec:
                     step_size=args.step_size,
                     drift_correction=args.drift_correction,
                     blocks=args.blocks, batch=args.batch, seq=args.seq,
-                    seed=args.seed))
+                    seed=args.seed)))

@@ -10,6 +10,7 @@ of sub-specs:
       ├─ ParticipationSpec   the agent-availability model (eq. 18 default)
       ├─ MixerSpec           combination-step backend (core/mixing.py)
       ├─ CompressionSpec     wire compressor + exchange mode (CommPipeline)
+      ├─ AttackSpec          Byzantine gradient adversaries (core/attacks.py)
       ├─ OptimizerSpec       local-update gradient transform
       ├─ ModelSpec           what the agents train (transformer arch or an
       │                      externally supplied loss)
@@ -39,6 +40,7 @@ __all__ = [
     "ParticipationSpec",
     "MixerSpec",
     "CompressionSpec",
+    "AttackSpec",
     "OptimizerSpec",
     "ModelSpec",
     "RunSpec",
@@ -135,6 +137,8 @@ class MixerSpec:
     tile_m: int = 512            # pallas tile
     interpret: Optional[bool] = None   # pallas interpret override
     trim: int = 1                # trimmed_mean: per-side trim count
+    scope: str = "global"        # robust backends: global (SLSGD server)
+                                 # | neighborhood (realized A_t support)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +153,25 @@ class CompressionSpec:
     gamma: Union[float, str, None] = None  # consensus step: float fixed,
                                  # None legacy heuristic, "auto" spectral-
                                  # gap floor + observed-contraction anneal
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """Byzantine gradient adversaries (core/attacks.py).
+
+    ``kind="none"`` is the honest network; the attack kinds corrupt the
+    local-update gradients of the Byzantine agents only (evenly spaced by
+    default, or the explicit ``agents`` tuple), composing in front of the
+    optimizer spec's transform.  The defense is selected independently on
+    the mixer spec (robust kinds + ``scope``).
+    """
+
+    kind: str = "none"           # none|sign_flip|noise|shift|<registered>
+    num_byzantine: int = 1       # adversary count (evenly spaced)
+    scale: float = 1.0           # attack magnitude (see core/attacks.py)
+    agents: tuple = ()           # explicit adversary indices (overrides
+                                 # num_byzantine placement)
+    seed: int = 0                # "noise" adversary PRNG seed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,7 +212,7 @@ class RunSpec:
 
 
 _SUBSPECS = (TopologySpec, GraphSpec, ParticipationSpec, MixerSpec,
-             CompressionSpec, OptimizerSpec, ModelSpec, RunSpec)
+             CompressionSpec, AttackSpec, OptimizerSpec, ModelSpec, RunSpec)
 
 
 def _tuplify(v):
@@ -228,6 +251,7 @@ class ExperimentSpec:
     participation: ParticipationSpec = ParticipationSpec()
     mixer: MixerSpec = MixerSpec()
     compression: CompressionSpec = CompressionSpec()
+    attack: AttackSpec = AttackSpec()
     optimizer: OptimizerSpec = OptimizerSpec()
     model: ModelSpec = ModelSpec()
     run: RunSpec = RunSpec()

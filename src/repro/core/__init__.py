@@ -41,8 +41,14 @@ from repro.core.mixing import (  # noqa: F401
     SparseCirculantMixer,
     TrimmedMeanMixer,
     choco_gamma,
+    count_live_offsets,
     make_mixer,
     make_pipeline,
+)
+from repro.core.attacks import (  # noqa: F401
+    byzantine_indices,
+    byzantine_mask,
+    make_attack,
 )
 from repro.core.compression import (  # noqa: F401
     CompressedGradients,

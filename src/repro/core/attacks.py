@@ -1,0 +1,162 @@
+"""Byzantine *gradient* adversaries for the local-update stage.
+
+The SLSGD line (Xie et al., arXiv:1903.06996) models Byzantine agents that
+corrupt what they *send*; in the diffusion setting with local updates the
+natural attack surface is the gradient an agent applies during its T local
+steps — the poisoned iterate then enters every neighbor's combination step.
+This module hosts the standard adversaries as engine ``grad_transform``
+layers (the same ``(grads, state, params) -> (updates, state)`` protocol
+the optimizers in :mod:`repro.optim` implement), so an attack composes
+with any optimizer, either engine, and every mixing backend:
+
+* ``sign_flip``   — Byzantine agents ascend: ``g -> -scale * g`` (the
+  classic gradient-reversal adversary).
+* ``noise``       — Byzantine agents replace their gradient with scaled
+  Gaussian noise ``scale * N(0, I)`` (fresh per local step; the PRNG
+  counter lives in the transform state so the attack stays jit-pure).
+* ``shift``       — coordinated constant-direction poisoning:
+  ``g -> g + scale * 1`` — every Byzantine agent pushes the SAME
+  direction, the hardest case for mean-style aggregation.
+
+Honest agents are untouched in every case.  Which agents are Byzantine is
+a *static* (K,) mask — evenly spaced by default
+(:func:`byzantine_indices`), or an explicit agent tuple — so one compiled
+program serves the whole run, exactly like the activation mask does for
+participation.
+
+Build one with :func:`make_attack` (optionally wrapping an inner optimizer
+transform), or declaratively through ``ExperimentSpec.attack``
+(:class:`repro.api.spec.AttackSpec` / the ``--attack`` CLI family), which
+:func:`repro.api.build` composes in front of the optimizer spec.  The
+defense lives on the Mixer seam: the robust backends of
+:mod:`repro.core.mixing` (``--mix trimmed_mean --robust-scope
+neighborhood``); ``benchmarks.run bench_byzantine`` measures attack vs
+defense head-to-head (EXPERIMENTS.md §Robust aggregation).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import GradTransform, sgd
+
+PyTree = Any
+
+__all__ = ["ATTACK_KINDS", "byzantine_indices", "byzantine_mask",
+           "make_attack"]
+
+ATTACK_KINDS = ("none", "sign_flip", "noise", "shift")
+
+
+def byzantine_indices(num_agents: int, num_byzantine: int) -> tuple:
+    """Evenly spaced Byzantine agent indices (deterministic).
+
+    Even spacing is the canonical *distributed* placement: on a ring it
+    puts at most one adversary in each closed neighborhood as long as
+    ``num_byzantine <= K // 3`` — exactly the regime a per-neighborhood
+    trimmed mean with ``trim = 1`` tolerates and a global ``trim = 1``
+    does not once ``num_byzantine > 1``.
+    """
+    if not 0 <= num_byzantine <= num_agents:
+        raise ValueError(f"num_byzantine={num_byzantine} must lie in "
+                         f"[0, {num_agents}]")
+    if num_byzantine == 0:
+        return ()
+    return tuple(int(round(i * num_agents / num_byzantine))
+                 for i in range(num_byzantine))
+
+
+def byzantine_mask(num_agents: int, num_byzantine: int = 1,
+                   agents: Sequence[int] = ()) -> np.ndarray:
+    """(K,) float32 {0,1} mask of Byzantine agents: explicit ``agents``
+    when given, evenly spaced otherwise."""
+    idx = (tuple(int(a) for a in agents) if agents
+           else byzantine_indices(num_agents, num_byzantine))
+    mask = np.zeros((num_agents,), np.float32)
+    for a in idx:
+        if not 0 <= a < num_agents:
+            raise ValueError(f"byzantine agent {a} out of range "
+                             f"[0, {num_agents})")
+        mask[a] = 1.0
+    return mask
+
+
+def make_attack(kind: str, num_agents: int, *, num_byzantine: int = 1,
+                scale: float = 1.0, agents: Sequence[int] = (),
+                seed: int = 0,
+                inner: GradTransform | None = None) -> GradTransform:
+    """Build a Byzantine gradient attack as a :class:`GradTransform`.
+
+    Args:
+      kind: "none" | "sign_flip" | "noise" | "shift".
+      num_agents: K (the leading axis of every gradient leaf).
+      num_byzantine: adversary count, evenly spaced (ignored when
+        ``agents`` is given).
+      scale: attack magnitude (see the module docstring per kind).
+      agents: explicit Byzantine agent indices (graph-aware placements,
+        e.g. pairwise-distance >= 3 on a grid).
+      seed: PRNG seed of the "noise" adversary.
+      inner: optimizer transform the corrupted gradients feed (default:
+        plain SGD — exact Algorithm 1 for the honest agents).
+
+    Returns:
+      A :class:`GradTransform`; for the stateless attacks its state is the
+      inner transform's state unchanged, for "noise" it is
+      ``{"t": counter, "inner": inner_state}`` (allocate via ``.init``).
+    """
+    inner_t = inner if inner is not None else sgd()
+    if kind in (None, "none"):
+        return inner_t
+    if kind not in ATTACK_KINDS:
+        raise ValueError(f"unknown attack kind {kind!r} "
+                         f"(expected one of {ATTACK_KINDS})")
+    mask = jnp.asarray(byzantine_mask(num_agents, num_byzantine, agents))
+    scale = float(scale)
+
+    def bshape(leaf: jax.Array) -> jax.Array:
+        return mask.astype(leaf.dtype).reshape(
+            (leaf.shape[0],) + (1,) * (leaf.ndim - 1))
+
+    def corrupt(grads: PyTree, key: jax.Array | None) -> PyTree:
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        out = []
+        for i, g in enumerate(leaves):
+            m = bshape(g)
+            if kind == "sign_flip":
+                bad = -scale * g
+            elif kind == "shift":
+                bad = g + jnp.asarray(scale, g.dtype)
+            else:  # noise
+                bad = scale * jax.random.normal(
+                    jax.random.fold_in(key, i), g.shape).astype(g.dtype)
+            out.append((1.0 - m) * g + m * bad)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    if kind != "noise":
+        def init(params: PyTree) -> PyTree:
+            return inner_t.init(params)
+
+        def update(grads, state, params):
+            return inner_t.update(corrupt(grads, None), state, params)
+
+        return GradTransform(init=init, update=update)
+
+    def init(params: PyTree) -> PyTree:
+        return {"t": jnp.zeros((), jnp.uint32),
+                "inner": inner_t.init(params)}
+
+    def update(grads, state, params):
+        if state is None:
+            raise ValueError(
+                'the "noise" attack derives fresh noise from a counter in '
+                "its transform state — allocate opt_state with "
+                "engine.optimizer.init(params) (or make_attack(...).init)")
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), state["t"])
+        upd, inner_state = inner_t.update(corrupt(grads, key),
+                                          state["inner"], params)
+        return upd, {"t": state["t"] + 1, "inner": inner_state}
+
+    return GradTransform(init=init, update=update)

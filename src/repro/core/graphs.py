@@ -397,7 +397,17 @@ def resolve_mix_for_graph(mix, graph: GraphProcess | None):
 def check_mixer_support(mixer, graph: GraphProcess | None) -> None:
     """Reject mixer/graph combinations that would silently drop edges: the
     sparse circulant backend only moves bytes along the base topology's
-    offsets, so it requires every realized A_t inside that support."""
+    offsets, so it requires every realized A_t inside that support.
+
+    Also tunes the sparse backend for the graph: dynamic processes can
+    realize matrices whose per-offset coefficient row is all-zero (every
+    link at that offset failed this block), so ``skip_dead`` is flipped on
+    — each roll/collective-permute is guarded by a segment mask and dead
+    offsets are skipped (:func:`repro.core.mixing.mix_sparse`).  The
+    robust backends compose with every graph in both scopes: the
+    neighborhood scope reads the realized support per call, so nothing is
+    rejected for link_dropout / gossip / tv_erdos.
+    """
     from repro.core import mixing  # local: mixing does not import graphs
     if (graph is not None and not graph.within_base_support
             and isinstance(mixer, mixing.SparseCirculantMixer)):
@@ -406,3 +416,7 @@ def check_mixer_support(mixer, graph: GraphProcess | None) -> None:
             f"topology's circulant offsets, but the {graph.name!r} graph "
             "process realizes edges outside that support — use "
             "mix='dense' or 'pallas'")
+    if (isinstance(mixer, mixing.SparseCirculantMixer)
+            and mixer._skip_dead_auto):
+        mixer.skip_dead = (graph is not None
+                           and not isinstance(graph, StaticGraph))

@@ -24,9 +24,14 @@ Backends differ only in *how* the contraction is executed:
   cached across steps.
 * :class:`NullMixer` — identity (K = 1, or mixing disabled).
 * :class:`TrimmedMeanMixer` / :class:`CoordinateMedianMixer` — robust
-  (Byzantine-tolerant) aggregation over the realized active set à la SLSGD
+  (Byzantine-tolerant) order-statistic aggregation à la SLSGD
   (arXiv:1903.06996); non-linear, so they pair with ``compress="none"``
-  only.
+  only.  ``scope="global"`` is the SLSGD server setting (one aggregate
+  over the whole realized active set, the topology ignored);
+  ``scope="neighborhood"`` aggregates per agent over the support of its
+  row of the realized ``A_t`` intersected with the active mask — the
+  decentralized setting the paper's eq. 20 actually describes, composing
+  with every dynamic :class:`repro.core.graphs.GraphProcess`.
 
 Use :func:`make_mixer` to construct one; ``"auto"`` picks the Pallas kernel
 on TPU and the sparse path for bounded-degree topologies on other backends.
@@ -73,6 +78,7 @@ __all__ = [
     "make_pipeline",
     "mix_dense",
     "mix_sparse",
+    "count_live_offsets",
 ]
 
 # sparse cost is one full-parameter roll+multiply PER DISTINCT CIRCULANT
@@ -124,7 +130,7 @@ def mix_dense(A_eff: jax.Array, params: PyTree) -> PyTree:
 
 
 def mix_sparse(A_eff: jax.Array, params: PyTree,
-               offsets: Sequence[int]) -> PyTree:
+               offsets: Sequence[int], *, skip_dead: bool = False) -> PyTree:
     """Circulant-offset mixing: w'_k = sum_o c_o[k] * w_{(k+o) mod K}.
 
     Valid whenever every nonzero off-diagonal of the base topology lies on a
@@ -134,20 +140,46 @@ def mix_sparse(A_eff: jax.Array, params: PyTree,
 
     ``jnp.roll`` along the (sharded) agent axis lowers to collective-permute
     under GSPMD, replacing the dense path's all-gather.
+
+    ``skip_dead`` guards every roll with a ``lax.cond`` on its coefficient
+    row being all-zero (segment mask): on a realized dynamic graph
+    (link dropout / gossip matchings) an offset whose every edge failed
+    this block contributes nothing, and the cond skips the permute instead
+    of moving bytes that are multiplied by zero.  Numerically identical to
+    the unguarded path (a dead offset adds exact zeros).
     """
     K = A_eff.shape[0]
     idx = jnp.arange(K)
     # c_o[k] = A_eff[(k + o) % K, k]
     coeffs = {o: A_eff[(idx + o) % K, idx] for o in (0, *offsets)}
+    live = ({o: jnp.any(coeffs[o] != 0) for o in offsets}
+            if skip_dead else None)
 
     def mix_leaf(p: jax.Array) -> jax.Array:
         out = coeffs[0].reshape((K,) + (1,) * (p.ndim - 1)).astype(p.dtype) * p
         for o in offsets:
             c = coeffs[o].reshape((K,) + (1,) * (p.ndim - 1)).astype(p.dtype)
-            out = out + c * jnp.roll(p, shift=-o, axis=0)
+            if skip_dead:
+                out = out + jax.lax.cond(
+                    live[o],
+                    lambda p_, c_, _o=o: c_ * jnp.roll(p_, shift=-_o, axis=0),
+                    lambda p_, c_: jnp.zeros_like(p_),
+                    p, c)
+            else:
+                out = out + c * jnp.roll(p, shift=-o, axis=0)
         return out
 
     return jax.tree.map(mix_leaf, params)
+
+
+def count_live_offsets(A_eff: jax.Array, offsets: Sequence[int]) -> jax.Array:
+    """How many circulant offsets carry any nonzero coefficient in this
+    realized matrix — the number of rolls/collective-permutes the
+    ``skip_dead`` sparse path actually executes (int32 scalar)."""
+    K = A_eff.shape[0]
+    idx = jnp.arange(K)
+    return sum(jnp.any(A_eff[(idx + int(o)) % K, idx] != 0).astype(jnp.int32)
+               for o in offsets)
 
 
 # ---------------------------------------------------------------------------
@@ -165,10 +197,12 @@ class Mixer:
     (mask and matrix as data).  Linear backends (``linear = True``) are
     semantically equal to ``mix_dense(masked_combination(A_t, active),
     params)``; robust backends (trimmed mean / median) set
-    ``linear = False``, ignore ``A_t`` (server-style aggregation over the
-    active set), and only support the identity pipeline (the compressed
-    exchange modes correct through ``mix(c) - c``, which presumes
-    linearity).
+    ``linear = False`` and only support the identity pipeline (the
+    compressed exchange modes correct through ``mix(c) - c``, which
+    presumes linearity).  Their ``scope="global"`` form ignores ``A_t``
+    (server-style aggregation over the active set, ``uses_matrix =
+    False``); ``scope="neighborhood"`` consumes it (per-agent aggregation
+    over the realized neighborhood).
     """
 
     name = "base"
@@ -220,13 +254,30 @@ class SparseCirculantMixer(Mixer):
 
     name = "sparse"
 
-    def __init__(self, offsets: Sequence[int]):
+    def __init__(self, offsets: Sequence[int],
+                 skip_dead: bool | None = None):
         self.offsets = tuple(int(o) for o in offsets)
+        # None = auto: graphs.check_mixer_support flips it on for dynamic
+        # graph processes, whose realized coefficient rows can go all-zero
+        # (a dead offset's roll is skipped via lax.cond; the static graph
+        # keeps the unguarded path — its rows are dead only under extreme
+        # participation masks, not worth the conditional in the hot loop).
+        # An auto decision is re-derived on every check_mixer_support call,
+        # so one instance reused across builds follows each build's graph;
+        # an explicit True/False is never touched.
+        self.skip_dead = skip_dead
+        self._skip_dead_auto = skip_dead is None
 
     def __call__(self, params: PyTree, active: jax.Array,
                  A_t: jax.Array) -> PyTree:
         A_eff = part.masked_combination(A_t, active)
-        return mix_sparse(A_eff, params, self.offsets)
+        return mix_sparse(A_eff, params, self.offsets,
+                          skip_dead=bool(self.skip_dead))
+
+    def live_offsets(self, active: jax.Array, A_t: jax.Array) -> jax.Array:
+        """Realized permute count for this (mask, matrix) draw."""
+        return count_live_offsets(part.masked_combination(A_t, active),
+                                  self.offsets)
 
 
 class _Layout(NamedTuple):
@@ -355,38 +406,77 @@ class PallasFusedMixer(Mixer):
 class _SortedRobustMixer(Mixer):
     """Shared machinery for order-statistic (robust) combination backends.
 
-    SLSGD's *server* aggregation hosted on the Mixer seam: every active
-    agent receives the same coordinate-wise robust aggregate of the realized
-    active set (the fedavg / fully-connected setting — any topology argument
-    is ignored), while inactive agents keep their parameters exactly, so the
+    Two scopes:
+
+    * ``scope="global"`` — SLSGD's *server* aggregation hosted on the Mixer
+      seam: every active agent receives the same coordinate-wise robust
+      aggregate of the realized active set (the fedavg / fully-connected
+      setting — the topology operand is ignored, ``uses_matrix = False``).
+    * ``scope="neighborhood"`` — the decentralized setting: each active
+      agent k aggregates over its *realized* neighborhood, the support of
+      column k of ``masked_combination(A_t, active)`` (self always
+      included) — i.e. the support of its row of ``A_t`` intersected with
+      the active mask.  ``uses_matrix = True``: the realized per-block
+      matrix of any dynamic :class:`repro.core.graphs.GraphProcess` flows
+      straight in, so link dropout / gossip / tv_erdos compose.  When a
+      neighborhood has fewer than ``2 trim + 1`` active members the trim
+      degrades gracefully (clipped per row, down to the local median /
+      the lone member's own value).
+
+    In both scopes inactive agents keep their parameters exactly, so the
     eq.-20 inactive-agent invariant survives.  Robust aggregation is NOT
     linear, so the network mean is deliberately *not* preserved when
     outliers are suppressed — that is the point.  ``linear = False``:
     only the identity pipeline (``compress="none"``) is supported.
 
-    Implementation: per coordinate, sort the K values along the agent axis
-    with inactive agents pushed to +inf, so the S = |active| contributors
-    occupy the first S slots; subclasses supply data-dependent weights over
-    those sorted slots (jit-compatible — S is data, not structure).
+    Implementation: per coordinate (and per target row in neighborhood
+    scope), sort the K values along the contributor axis with
+    non-contributors pushed to +inf, so the S contributors occupy the
+    first S slots; subclasses supply data-dependent weights over those
+    sorted slots (jit-compatible — S is data, not structure), and every
+    contraction keeps ``0 * inf = nan`` out via a where on the weights.
+
+    Cost note: the neighborhood scope sorts all K contributor slots per
+    target row — O(K^2 M log K) work and a (K, K)-shaped broadcast per
+    leaf — even though only max_degree + 1 members per row can ever
+    contribute on a bounded-degree base graph.  Fine at benchmark scale
+    (K <= a few dozen); a bounded-degree member gather / fused top-b
+    kernel is the ROADMAP follow-up for K in the hundreds.
     """
 
     linear = False
-    uses_matrix = False
+    uses_matrix = False       # per-instance: True for scope="neighborhood"
 
-    def __init__(self, num_agents: int):
+    def __init__(self, num_agents: int, scope: str = "global"):
         if num_agents < 1:
             raise ValueError(f"num_agents={num_agents} must be >= 1")
+        if scope not in ("global", "neighborhood"):
+            raise ValueError(f"scope={scope!r} must be 'global' or "
+                             "'neighborhood'")
         self.num_agents = int(num_agents)
+        self.scope = scope
+        self.uses_matrix = scope == "neighborhood"
 
     def _slot_weights(self, S: jax.Array) -> jax.Array:
-        """(K,) weights over ascending sorted slots given S active agents.
+        """(K,) weights over ascending sorted slots given S contributors.
 
-        Must put zero weight on every slot >= S (those hold +inf)."""
+        Must put zero weight on every slot >= S (those hold +inf), and on
+        every slot when S = 0 (nothing to aggregate)."""
         raise NotImplementedError
 
     def __call__(self, params: PyTree, active: jax.Array,
                  A_t: jax.Array | None = None) -> PyTree:
-        # A_t ignored: server-style aggregation over the realized active set
+        if self.scope == "neighborhood":
+            if A_t is None:
+                raise ValueError(
+                    f"{type(self).__name__}(scope='neighborhood') "
+                    "aggregates over the realized neighborhood and needs "
+                    "the A_t operand")
+            return self._neighborhood(params, active, A_t)
+        return self._global(params, active)
+
+    # -- scope="global": bit-identical to the pre-scope robust path --------
+    def _global(self, params: PyTree, active: jax.Array) -> PyTree:
         K = self.num_agents
         S = active.astype(jnp.float32).sum()
         w = self._slot_weights(S)                          # (K,) float32
@@ -405,22 +495,58 @@ class _SortedRobustMixer(Mixer):
 
         return jax.tree.map(leaf, params)
 
+    # -- scope="neighborhood": per-row masked sort over the realized A_t ---
+    def _neighborhood(self, params: PyTree, active: jax.Array,
+                      A_t: jax.Array) -> PyTree:
+        K = self.num_agents
+        m = active.astype(jnp.float32)
+        A_eff = part.masked_combination(A_t.astype(jnp.float32), active)
+        # l contributes to target k iff A_eff[l, k] != 0 (off-diagonals
+        # survive iff both endpoints are active and the realized edge
+        # exists); the renormalized self weight can hit exactly 0, so
+        # self-membership is forced — every agent hears itself
+        member = ((A_eff != 0) | jnp.eye(K, dtype=bool))   # (contrib, target)
+        S = member.astype(jnp.float32).sum(axis=0)         # (K,) per target
+        W = jax.vmap(self._slot_weights)(S)                # (K, K) per-row
+        mem_t = member.T                                   # (target, contrib)
+
+        def leaf(p: jax.Array) -> jax.Array:
+            x = p.astype(jnp.float32).reshape(K, -1)       # (K, M)
+
+            def row(mem_k, w_k):
+                # +inf padding pushes non-members past the S_k live slots
+                vals = jnp.where(mem_k[:, None], x, jnp.inf)
+                srt = jnp.sort(vals, axis=0)
+                wb = w_k[:, None]
+                return jnp.sum(jnp.where(wb > 0, srt, 0.0) * wb, axis=0)
+
+            agg = jax.vmap(row)(mem_t, W)                  # (K, M)
+            # inactive agents keep their params EXACTLY (no f32 roundtrip
+            # for wider dtypes) — same invariant as the global scope
+            out = jnp.where(m[:, None] > 0, agg.astype(p.dtype),
+                            p.reshape(K, -1))
+            return out.reshape(p.shape)
+
+        return jax.tree.map(leaf, params)
+
 
 class TrimmedMeanMixer(_SortedRobustMixer):
-    """Coordinate-wise trimmed mean over the active set (SLSGD eq. 4).
+    """Coordinate-wise trimmed mean (SLSGD eq. 4), global or per
+    neighborhood.
 
     Per coordinate, drop the ``trim`` smallest and ``trim`` largest values
-    among the S active contributions and average the rest — tolerant to up
-    to ``trim`` Byzantine agents per side.  When fewer than ``2 trim + 1``
-    agents are active, the trim is clipped to ``floor((S - 1) / 2)`` so at
-    least the coordinate median survives.  ``trim = 0`` is the plain mean
-    over the active set.
+    among the S contributions and average the rest — tolerant to up to
+    ``trim`` Byzantine agents per side (per neighborhood in neighborhood
+    scope).  When fewer than ``2 trim + 1`` members contribute, the trim
+    is clipped to ``floor((S - 1) / 2)`` so at least the coordinate median
+    survives.  ``trim = 0`` is the plain mean over the contributors.
     """
 
     name = "trimmed_mean"
 
-    def __init__(self, num_agents: int, trim: int = 1):
-        super().__init__(num_agents)
+    def __init__(self, num_agents: int, trim: int = 1,
+                 scope: str = "global"):
+        super().__init__(num_agents, scope=scope)
         if not 0 <= trim < max(num_agents, 1):
             raise ValueError(f"trim={trim} must lie in [0, {num_agents})")
         self.trim = int(trim)
@@ -433,13 +559,14 @@ class TrimmedMeanMixer(_SortedRobustMixer):
         return keep / jnp.maximum(keep.sum(), 1.0)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
-        return f"TrimmedMeanMixer(K={self.num_agents}, trim={self.trim})"
+        return (f"TrimmedMeanMixer(K={self.num_agents}, trim={self.trim}, "
+                f"scope={self.scope!r})")
 
 
 class CoordinateMedianMixer(_SortedRobustMixer):
-    """Coordinate-wise median over the active set — the maximally robust
-    order statistic (breakdown point 1/2), at the cost of discarding the
-    most averaging; SLSGD's b -> (S-1)/2 limit."""
+    """Coordinate-wise median — the maximally robust order statistic
+    (breakdown point 1/2), at the cost of discarding the most averaging;
+    SLSGD's b -> (S-1)/2 limit.  Global or per neighborhood."""
 
     name = "median"
 
@@ -449,7 +576,15 @@ class CoordinateMedianMixer(_SortedRobustMixer):
         hi = jnp.clip(jnp.ceil((S - 1.0) / 2.0), 0.0)
         w = 0.5 * ((idx == lo).astype(jnp.float32)
                    + (idx == hi).astype(jnp.float32))
+        # S = 0: every slot holds +inf — nothing to aggregate, weights die
+        # (the inactive-agent where already freezes the output; the guard
+        # keeps the masked-out aggregate finite: no inf in intermediates)
+        w = w * (S >= 1.0).astype(jnp.float32)
         return w / jnp.maximum(w.sum(), 1.0)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"CoordinateMedianMixer(K={self.num_agents}, "
+                f"scope={self.scope!r})")
 
 
 # ---------------------------------------------------------------------------
@@ -768,7 +903,8 @@ def _resolve_auto(topology: topo_lib.Topology | None,
 def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
                *, A=None, offsets: Sequence[int] | None = None,
                num_agents: int | None = None, tile_m: int = 512,
-               interpret: bool | None = None, trim: int = 1) -> Mixer:
+               interpret: bool | None = None, trim: int = 1,
+               scope: str = "global") -> Mixer:
     """Build a mixing backend.
 
     The matrix is NOT baked into the mixer — it arrives per call as the
@@ -786,6 +922,9 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
       num_agents: disables mixing when 1 (returns :class:`NullMixer`).
       tile_m / interpret: Pallas kernel knobs (see :class:`PallasFusedMixer`).
       trim: per-side trim count for the "trimmed_mean" backend.
+      scope: robust-aggregation scope — "global" (SLSGD server setting,
+        A_t ignored) or "neighborhood" (per-agent over the realized
+        neighborhood of A_t).
     """
     if isinstance(name, Mixer):
         return name
@@ -797,13 +936,14 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
     if name == "none" or (num_agents is not None and num_agents <= 1):
         return NullMixer()
     if name in ("trimmed_mean", "median"):
-        # robust server aggregation over the active set; needs only K
+        # robust aggregation; needs only K (and A_t per call for the
+        # neighborhood scope)
         if num_agents is None:
             raise ValueError(f"{name!r} mixer needs num_agents "
                              "(or a topology / A to infer it from)")
-        return (TrimmedMeanMixer(num_agents, trim=trim)
+        return (TrimmedMeanMixer(num_agents, trim=trim, scope=scope)
                 if name == "trimmed_mean"
-                else CoordinateMedianMixer(num_agents))
+                else CoordinateMedianMixer(num_agents, scope=scope))
     if name == "auto":
         name, offsets = _resolve_auto(topology, offsets)
     if name == "dense":
@@ -829,7 +969,7 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
                   offsets: Sequence[int] | None = None,
                   num_agents: int | None = None, tile_m: int = 512,
                   interpret: bool | None = None,
-                  trim: int = 1) -> CommPipeline:
+                  trim: int = 1, scope: str = "global") -> CommPipeline:
     """Build the full combination pipeline (compressor stage + mixer).
 
     ``mix`` and the mixer kwargs go to :func:`make_mixer`; ``compress`` /
@@ -842,7 +982,7 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
     """
     mixer = make_mixer(mix, topology, A=A, offsets=offsets,
                        num_agents=num_agents, tile_m=tile_m,
-                       interpret=interpret, trim=trim)
+                       interpret=interpret, trim=trim, scope=scope)
     compressor = comp_lib.make_compressor(compress, ratio=compress_ratio,
                                           error_feedback=error_feedback,
                                           sigma=sigma)

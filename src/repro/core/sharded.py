@@ -66,6 +66,8 @@ def make_block_step(
     graph: "str | graph_lib.GraphProcess | None" = None,
     tile_m: int = 512,
     interpret: bool | None = None,
+    trim: int = 1,
+    robust_scope: str = "global",
     compress: str | comp_lib.Compressor | None = None,
     compress_ratio: float | None = None,
     compress_sigma: float | None = None,
@@ -100,6 +102,9 @@ def make_block_step(
         realized A_t is sampled per block inside the jitted step; stateful
         graphs thread their link mask through ``EngineState.graph_state``.
       tile_m / interpret: Pallas mixer knobs.
+      trim / robust_scope: robust-backend knobs (per-side trim count, and
+        "global" vs "neighborhood" aggregation scope — see
+        :class:`repro.core.mixing.TrimmedMeanMixer`).
       compress / compress_ratio / compress_sigma / error_feedback:
         communication-compression stage
         (:func:`repro.core.compression.make_compressor`); ``compress`` also
@@ -127,7 +132,8 @@ def make_block_step(
     mixer = mixing.make_mixer(mix_name, topology, A=A,
                               offsets=tuple(offsets) or None,
                               num_agents=K, tile_m=tile_m,
-                              interpret=interpret)
+                              interpret=interpret, trim=trim,
+                              scope=robust_scope)
     A_graph = A
     if topology is None and A is None and not mixer.uses_matrix:
         # mixers that ignore the matrix operand (K = 1 / robust server
@@ -143,7 +149,8 @@ def make_block_step(
         # realized edges can leave the base support, so rebuild on the
         # always-correct backend
         mixer = mixing.make_mixer(resolved, topology, A=A, num_agents=K,
-                                  tile_m=tile_m, interpret=interpret)
+                                  tile_m=tile_m, interpret=interpret,
+                                  trim=trim, scope=robust_scope)
     graph_lib.check_mixer_support(mixer, graph_proc)
     compressor = comp_lib.make_compressor(
         compress if compress is not None else config.compress,

@@ -128,7 +128,8 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                      tp: bool | None = None, compress: str | None = None,
                      compress_ratio: float = 0.1, compress_sigma: float = 0.0,
                      error_feedback: bool = False, graph: str = "static",
-                     graph_kwargs: tuple = ()):
+                     graph_kwargs: tuple = (), trim: int = 1,
+                     robust_scope: str = "global"):
     cfg = bundle.model
     pc = bundle.parallel
     tp = pc.tp if tp is None else tp
@@ -153,7 +154,8 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                                  topology=topo, compress=compress,
                                  compress_ratio=compress_ratio,
                                  compress_sigma=compress_sigma,
-                                 error_feedback=error_feedback)
+                                 error_feedback=error_feedback,
+                                 trim=trim, robust_scope=robust_scope)
 
     # shardings
     inner = sh.param_pspecs(tf.param_specs(cfg), mesh, fsdp=pc.fsdp, tp=tp)
@@ -374,7 +376,8 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                tp: bool | None = None, compress: str | None = None,
                compress_ratio: float = 0.1, compress_sigma: float = 0.0,
                error_feedback: bool = False, graph: str = "static",
-               graph_kwargs: tuple = ()) -> dict:
+               graph_kwargs: tuple = (), trim: int = 1,
+               robust_scope: str = "global") -> dict:
     multi_pod = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = get_config(arch)
@@ -389,7 +392,9 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                                               compress_sigma=compress_sigma,
                                               error_feedback=error_feedback,
                                               graph=graph,
-                                              graph_kwargs=graph_kwargs)
+                                              graph_kwargs=graph_kwargs,
+                                              trim=trim,
+                                              robust_scope=robust_scope)
     elif shape.kind == "prefill":
         step, args, out_sh = build_prefill_step(bundle, shape, mesh, multi_pod)
     else:
@@ -490,7 +495,9 @@ def main():
                              compress_sigma=spec.compression.sigma,
                              error_feedback=spec.compression.error_feedback,
                              graph=spec.graph.kind,
-                             graph_kwargs=spec.graph_kwargs())
+                             graph_kwargs=spec.graph_kwargs(),
+                             trim=spec.mixer.trim,
+                             robust_scope=spec.mixer.scope)
             with open(out_path, "w") as f:
                 json.dump(res, f, indent=1)
             print(f"OK   {tag}: compile={res['compile_seconds']}s "

@@ -18,29 +18,84 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.api import EngineState, build, spec_from_args
+from repro.api import EngineState, TOPOLOGIES, build, spec_from_args
 from repro.api.cli import add_spec_args
 from repro.checkpoint import load_checkpoint, load_experiment, load_spec
 from repro.configs import get_config
-from repro.core import make_mixer, make_topology
+from repro.core import NullMixer, SparseCirculantMixer, make_mixer, \
+    make_topology
+from repro.core.topology import averaging_matrix, spectral_gap
 from repro.models import transformer as tf
+
+_CONSENSUS_MAX_ROUNDS = 512
 
 
 def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
-                           trim: int = 1):
-    """Collapse (K, ...)-stacked agent params to the consensus (average)
-    model via the mixing layer: one all-active FedAvg combination step makes
-    every agent hold the exact network mean; take agent 0.  Robust backends
-    (trimmed_mean / median) yield the outlier-suppressed aggregate instead."""
-    topo = make_topology("fedavg", K)
-    mixer = make_mixer(mix, topo, num_agents=K, trim=trim)
-    # the matrix is a call operand under the runtime-topology contract
-    mixed = mixer(stacked, jnp.ones((K,), jnp.float32),
-                  jnp.asarray(topo.A, jnp.float32))
+                           trim: int = 1, scope: str = "global",
+                           topology=None):
+    """Collapse (K, ...)-stacked agent params to the consensus model via
+    the mixing layer, over the topology the checkpoint was TRAINED on.
+
+    With the default ``topology=None`` (spec-less checkpoints) the base
+    graph is FedAvg and one all-active combination step makes every agent
+    hold the exact network mean — bit-identical to the legacy path.  With
+    an explicit topology:
+
+    * linear backends with arbitrary matrix support (dense / pallas) take
+      the exact (1/K) 11^T averaging matrix as their ``A_t`` operand — one
+      step, exact mean, any K;
+    * the sparse backend only moves bytes along its trained circulant
+      offsets, so the base-topology combination step is iterated until the
+      spectral gap has contracted the disagreement below f32 resolution
+      (capped at ``_CONSENSUS_MAX_ROUNDS`` with a warning when the cap
+      truncates convergence — very large sparse graphs should re-extract
+      with ``--mix dense``);
+    * matrix-oblivious backends (global robust aggregation, NullMixer)
+      apply once — iterating an idempotent aggregate is pure waste — and
+      the neighborhood-scoped robust backends iterate the trained
+      neighborhood structure (a robust local-consensus sweep).
+
+    Take agent 0 at the end.
+    """
+    topo = topology if topology is not None else make_topology("fedavg", K)
+    mixer = make_mixer(mix, topo, num_agents=K, trim=trim, scope=scope)
+    A = jnp.asarray(topo.A, jnp.float32)
+    ones = jnp.ones((K,), jnp.float32)
+    gap = spectral_gap(topo.A)
+    # backends that cannot apply an arbitrary matrix: sparse (bytes move
+    # only along trained offsets) and the non-linear robust aggregates
+    needs_support = isinstance(mixer, SparseCirculantMixer) or not mixer.linear
+    if (gap >= 1.0 - 1e-9 or isinstance(mixer, NullMixer)
+            or not getattr(mixer, "uses_matrix", True)):
+        rounds = 1
+    elif not needs_support:
+        # dense / pallas apply ANY matrix: one exact averaging step
+        A = jnp.asarray(averaging_matrix(K), jnp.float32)
+        rounds = 1
+    else:
+        # ||disagreement|| contracts by (1 - gap) per linear step: stop
+        # once the residual is below f32 resolution (offline path, not a
+        # hot loop)
+        needed = int(max(1, np.ceil(np.log(1e-7)
+                                    / np.log(max(1.0 - gap, 1e-12)))))
+        rounds = min(_CONSENSUS_MAX_ROUNDS, needed)
+        if rounds < needed:
+            warnings.warn(
+                f"consensus extraction capped at {rounds} combination "
+                f"rounds but the topology's spectral gap ({gap:.2e}) "
+                f"needs ~{needed} to converge — ~"
+                f"{(1.0 - gap) ** rounds:.0%} of the disagreement "
+                "remains; re-extract with --mix dense for the exact mean",
+                stacklevel=2)
+    mixed = stacked
+    for _ in range(rounds):
+        mixed = mixer(mixed, ones, A)
     return jax.tree.map(lambda x: x[0], mixed)
 
 
@@ -63,11 +118,24 @@ def load_params(args, key):
         like = EngineState(jax.eval_shape(eng.init_params,
                                           jax.random.PRNGKey(0)))
         state, meta = load_experiment(args.checkpoint, like)
+        # the consensus must come from the topology the agents TRAINED on
+        # (spec checkpoints used to hard-code FedAvg here); non-static
+        # graphs are approximated by their base topology
+        topo = (TOPOLOGIES.get(spec.topology.kind)(spec.topology, K)
+                if K > 1 else None)
+        if spec.graph.kind != "static":
+            warnings.warn(
+                f"checkpoint was trained on a time-varying graph "
+                f"({spec.graph.kind!r}); consensus extraction uses the "
+                f"base {spec.topology.kind!r} topology, not a realized "
+                "draw", stacklevel=2)
         print(f"loaded spec checkpoint (K={K}, arch={spec.model.arch}, "
               f"step={meta.get('step')}); extracting consensus via "
-              f"mix={spec.mixer.kind}")
+              f"mix={spec.mixer.kind} over topology={spec.topology.kind}")
         params = consensus_from_stacked(state.params, K, spec.mixer.kind,
-                                        trim=spec.mixer.trim)
+                                        trim=spec.mixer.trim,
+                                        scope=spec.mixer.scope,
+                                        topology=topo)
         return params, eng.model.cfg
 
     bundle = get_config(args.arch)
@@ -83,7 +151,8 @@ def load_params(args, key):
               f"step={meta.get('step')}); extracting consensus via "
               f"--mix {args.mix}")
         return (consensus_from_stacked(stacked, args.agents, args.mix,
-                                       trim=args.trim), cfg)
+                                       trim=args.trim,
+                                       scope=args.robust_scope), cfg)
     params, meta = load_checkpoint(args.checkpoint, params)
     print(f"loaded checkpoint (step={meta.get('step')})")
     return params, cfg

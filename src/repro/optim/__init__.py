@@ -1,1 +1,6 @@
-from repro.optim.optimizers import sgd, momentum, adam  # noqa: F401
+from repro.optim.optimizers import (  # noqa: F401
+    GradTransform,
+    adam,
+    momentum,
+    sgd,
+)

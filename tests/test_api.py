@@ -47,6 +47,10 @@ PRESET_SPECS = {
                                               compress="topk", ratio=0.5),
     "compressed_fedavg":
         lambda: variants.compressed_fedavg(K, T=2, mu=0.02, q=0.8),
+    "byzantine_robust_diffusion":
+        lambda: variants.byzantine_robust_diffusion(K, mu=0.02, q=0.9,
+                                                    num_byzantine=2,
+                                                    scale=3.0),
 }
 
 
@@ -178,6 +182,15 @@ def _legacy_engine(name, loss):
             num_agents=K, local_steps=2, step_size=0.02, topology="fedavg",
             participation=0.8, compress="int8", compress_ratio=1.0,
             error_feedback=True), loss)
+    if name == "byzantine_robust_diffusion":
+        from repro.core.attacks import make_attack
+        from repro.core.mixing import TrimmedMeanMixer
+        atk = make_attack("sign_flip", K, num_byzantine=2, scale=3.0)
+        return DiffusionEngine(DiffusionConfig(
+            num_agents=K, local_steps=1, step_size=0.02, topology="ring",
+            participation=0.9, mix="trimmed_mean"), loss,
+            grad_transform=atk.update,
+            mixer=TrimmedMeanMixer(K, trim=1, scope="neighborhood"))
     raise AssertionError(name)
 
 
@@ -291,6 +304,8 @@ FLAG_SETS = [
      "--comm-gamma", "0.3", "--optimizer", "momentum",
      "--mix", "sparse", "--arch", "smollm-360m"],
     ["--mix", "trimmed_mean", "--trim", "2"],
+    ["--mix", "trimmed_mean", "--robust-scope", "neighborhood",
+     "--attack", "sign_flip", "--attack-num", "2", "--attack-scale", "4.0"],
     ["--graph", "link_dropout", "--link-drop", "0.4", "--graph-corr",
      "0.2", "--topology-hops", "2", "--compress", "topk",
      "--comm-gamma", "auto"],
@@ -383,6 +398,63 @@ def test_cli_topology_kwargs_reach_the_spec():
          "--topology-hops", "2"]))
     assert dict(overlaid.topology.kwargs) == {"hops": 2}
     assert overlaid.topology.kind == "ring"
+
+
+def test_cli_robust_and_attack_flags_reach_the_spec():
+    """--robust-scope/--attack* map onto MixerSpec.scope / AttackSpec and
+    overlay presets only when explicitly passed."""
+    got = spec_from_args(_parser_for("train").parse_args(
+        ["--mix", "median", "--robust-scope", "neighborhood",
+         "--attack", "noise", "--attack-num", "3", "--attack-scale", "2.5"]))
+    assert got.mixer.kind == "median"
+    assert got.mixer.scope == "neighborhood"
+    assert got.attack.kind == "noise" and got.attack.num_byzantine == 3
+    assert got.attack.scale == 2.5
+    # preset overlay: untouched flags keep the preset's robust choices
+    base = spec_from_args(_parser_for("train").parse_args(
+        ["--preset", "byzantine_robust_diffusion", "--agents", "9"]))
+    assert base.mixer.kind == "trimmed_mean"
+    assert base.mixer.scope == "neighborhood"
+    assert base.attack.kind == "sign_flip"
+    over = spec_from_args(_parser_for("train").parse_args(
+        ["--preset", "byzantine_robust_diffusion", "--agents", "9",
+         "--robust-scope", "global", "--attack", "shift"]))
+    assert over.mixer.scope == "global" and over.attack.kind == "shift"
+
+
+def test_cli_trim_rejected_for_non_robust_mixers():
+    """The fixed silent forward: --trim / --robust-scope explicitly passed
+    with a non-robust builtin mixer kind now error instead of being stored
+    on the spec and ignored."""
+    for flags in (["--mix", "dense", "--trim", "2"],
+                  ["--trim", "2"],                       # default mix=dense
+                  ["--mix", "pallas", "--robust-scope", "neighborhood"],
+                  ["--preset", "vanilla_diffusion", "--trim", "2"]):
+        with pytest.raises(ValueError, match="robust"):
+            spec_from_args(_parser_for("serve").parse_args(flags))
+    # robust kinds keep taking them, and defaults never trip the check
+    ok = spec_from_args(_parser_for("serve").parse_args(
+        ["--mix", "trimmed_mean", "--trim", "2"]))
+    assert ok.mixer.trim == 2
+    spec_from_args(_parser_for("serve").parse_args([]))
+    spec_from_args(_parser_for("serve").parse_args(["--mix", "dense"]))
+    # same class on the attack sub-flags: tuning a never-built adversary
+    for flags in (["--attack-num", "3"], ["--attack-scale", "5.0"]):
+        with pytest.raises(ValueError, match="attack"):
+            spec_from_args(_parser_for("train").parse_args(flags))
+    got = spec_from_args(_parser_for("train").parse_args(
+        ["--attack", "sign_flip", "--attack-num", "3"]))
+    assert got.attack.num_byzantine == 3
+    # ... and on the graph sub-flags: each belongs to exactly one builtin
+    for flags in (["--link-drop", "0.5"],                 # default: static
+                  ["--graph", "gossip", "--link-drop", "0.5"],
+                  ["--graph", "link_dropout", "--graph-p", "0.4"],
+                  ["--graph", "tv_erdos", "--graph-corr", "0.2"]):
+        with pytest.raises(ValueError, match="graph"):
+            spec_from_args(_parser_for("train").parse_args(flags))
+    got = spec_from_args(_parser_for("train").parse_args(
+        ["--graph", "link_dropout", "--link-drop", "0.5"]))
+    assert got.graph.drop == 0.5
 
 
 def test_cli_graph_flags_reach_the_spec():

@@ -1,0 +1,282 @@
+"""Byzantine gradient attacks (core/attacks.py) and their interplay with
+the robust mixing backends: corruption is confined to the Byzantine rows,
+attacks compose with optimizers and both engines, the spec/CLI surface
+threads them, and — the property gate — per-neighborhood trimmed mean
+survives up to `trim` adversaries per neighborhood where the global scope
+and the linear mean do not."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.api import AttackSpec, build
+from repro.api.spec import MixerSpec, TopologySpec
+from repro.core import (DiffusionConfig, DiffusionEngine, TrimmedMeanMixer,
+                        byzantine_indices, byzantine_mask, make_attack,
+                        make_topology)
+from repro.core import variants
+from repro.data.synthetic import make_block_sampler, make_regression_problem
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# the attack transforms
+# ---------------------------------------------------------------------------
+
+def test_byzantine_placement():
+    assert byzantine_indices(12, 3) == (0, 4, 8)
+    assert byzantine_indices(8, 1) == (0,)
+    assert byzantine_indices(8, 0) == ()
+    mask = byzantine_mask(12, 3)
+    np.testing.assert_array_equal(np.where(mask > 0)[0], [0, 4, 8])
+    mask = byzantine_mask(12, agents=(0, 7, 9))
+    np.testing.assert_array_equal(np.where(mask > 0)[0], [0, 7, 9])
+    with pytest.raises(ValueError):
+        byzantine_mask(4, agents=(5,))
+    with pytest.raises(ValueError):
+        byzantine_indices(4, 5)
+    with pytest.raises(ValueError):
+        make_attack("nope", 4)
+
+
+def test_sign_flip_corrupts_only_byzantine_rows():
+    K = 8
+    atk = make_attack("sign_flip", K, num_byzantine=2, scale=3.0)
+    grads = {"w": jax.random.normal(KEY, (K, 4)),
+             "b": jax.random.normal(KEY, (K,))}
+    state = atk.init(jax.tree.map(jnp.zeros_like, grads))
+    upd, state2 = atk.update(grads, state, None)
+    byz = byzantine_indices(K, 2)
+    for leaf_g, leaf_u in zip(jax.tree.leaves(grads), jax.tree.leaves(upd)):
+        g, u = np.asarray(leaf_g), np.asarray(leaf_u)
+        for k in range(K):
+            if k in byz:
+                np.testing.assert_allclose(u[k], -3.0 * g[k], rtol=1e-6)
+            else:
+                np.testing.assert_array_equal(u[k], g[k])
+    assert state is None and state2 is None    # stateless on plain SGD
+
+
+def test_shift_attack_is_coordinated():
+    """Every Byzantine agent pushes the SAME constant direction."""
+    K = 6
+    atk = make_attack("shift", K, num_byzantine=2, scale=5.0)
+    grads = {"w": jnp.zeros((K, 3))}
+    upd, _ = atk.update(grads, atk.init(grads), None)
+    u = np.asarray(upd["w"])
+    byz = byzantine_indices(K, 2)
+    for k in range(K):
+        expected = 5.0 if k in byz else 0.0
+        np.testing.assert_allclose(u[k], expected)
+
+
+def test_noise_attack_is_stateful_and_fresh():
+    """The noise adversary draws fresh noise per call via the counter in
+    its transform state; honest rows are untouched; a missing state fails
+    loudly pointing at init."""
+    K = 6
+    atk = make_attack("noise", K, num_byzantine=1, scale=2.0, seed=3)
+    grads = {"w": jnp.ones((K, 4))}
+    state = atk.init(jax.tree.map(jnp.zeros_like, grads))
+    assert int(state["t"]) == 0
+    u1, state = atk.update(grads, state, None)
+    u2, state = atk.update(grads, state, None)
+    assert int(state["t"]) == 2
+    assert not np.allclose(np.asarray(u1["w"][0]), np.asarray(u2["w"][0]))
+    np.testing.assert_array_equal(np.asarray(u1["w"][1:]),
+                                  np.ones((K - 1, 4)))
+    with pytest.raises(ValueError, match="init"):
+        atk.update(grads, None, None)
+
+
+def test_attack_composes_with_inner_optimizer():
+    """Corruption happens BEFORE the optimizer: the momentum buffer of a
+    Byzantine agent accumulates the flipped gradient."""
+    from repro.optim import momentum
+    K = 4
+    atk = make_attack("sign_flip", K, num_byzantine=1, scale=1.0,
+                      inner=momentum(beta=0.5))
+    grads = {"w": jnp.ones((K, 2))}
+    state = atk.init(jax.tree.map(jnp.zeros_like, grads))
+    upd, state = atk.update(grads, state, None)
+    u = np.asarray(upd["w"])
+    np.testing.assert_allclose(u[0], -1.0)     # byz momentum of -g
+    np.testing.assert_allclose(u[1:], 1.0)
+    assert np.asarray(state["w"]).shape == (K, 2)   # momentum buffer
+
+
+def test_attack_none_is_inner_passthrough():
+    from repro.optim import sgd
+    inner = sgd()
+    assert make_attack("none", 4, inner=inner) is inner
+
+
+# ---------------------------------------------------------------------------
+# spec / build threading
+# ---------------------------------------------------------------------------
+
+def test_attack_spec_roundtrip_and_build():
+    from repro.api import ExperimentSpec
+    spec = variants.byzantine_robust_diffusion(
+        8, mu=0.02, num_byzantine=2, scale=4.0).replace(
+        attack=AttackSpec(kind="noise", num_byzantine=2, scale=4.0,
+                          agents=(1, 5), seed=7))
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec and back.attack.agents == (1, 5)
+
+    data = make_regression_problem(K=8, N=30, M=2, rho=0.1, seed=0)
+    eng = build(spec, data.loss_fn())
+    assert eng.grad_transform is not None
+    params = jnp.zeros((8, 2))
+    opt_state = eng.optimizer.init(params)     # composed: counter + inner
+    assert int(opt_state["t"]) == 0
+    state = eng.init_state(params, opt_state)
+    sampler = make_block_sampler(data, T=1, batch=1)
+    state, _ = eng.step(state, sampler(jax.random.PRNGKey(1)),
+                        jax.random.PRNGKey(2))
+    assert int(state.opt_state["t"]) == 1      # one local step per block
+
+
+def test_attack_spec_with_explicit_grad_transform_rejected():
+    """Silently dropping a configured attack when the caller passes an
+    explicit grad_transform would report an honest network as attacked —
+    build() refuses the ambiguous combination."""
+    data = make_regression_problem(K=8, N=20)
+    spec = variants.byzantine_robust_diffusion(8, mu=0.02)
+    with pytest.raises(ValueError, match="grad_transform"):
+        build(spec, data.loss_fn(), grad_transform=lambda g, s, p: (g, s))
+
+
+def test_unknown_attack_kind_errors_with_registry_message():
+    from repro.api import ExperimentSpec
+    from repro.api.spec import RunSpec
+    data = make_regression_problem(K=4, N=20)
+    spec = ExperimentSpec(run=RunSpec(num_agents=4),
+                          attack=AttackSpec(kind="rootkit"))
+    with pytest.raises(ValueError, match="attack"):
+        build(spec, data.loss_fn())
+
+
+# ---------------------------------------------------------------------------
+# property gate: per-neighborhood tolerance vs global leakage
+# ---------------------------------------------------------------------------
+
+#: per-trim ring placements: neighborhoods have 2 trim + 1 members
+#: (hops = trim), every closed neighborhood holds at most `trim`
+#: adversaries, and the TOTAL count exceeds 2 trim (so the global trimmed
+#: mean — which discards only `trim` per side — must leak)
+_TRIM_PLACEMENTS = {
+    1: (12, (0, 4, 8)),                      # 3 singletons, nbhd size 3
+    2: (15, (0, 1, 5, 6, 10, 11)),           # period-5 pairs, nbhd size 5
+}
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 2))
+def test_neighborhood_trim_tolerance_property(seed, trim):
+    """For ANY honest values in [-1, 1] and ANY Byzantine magnitudes/signs
+    placed with at most `trim` per closed ring neighborhood, every honest
+    agent's neighborhood-trimmed output stays within [-1, 1]; the global
+    trimmed mean leaks because the total count exceeds what `trim` per
+    side can discard."""
+    rng = np.random.default_rng(seed)
+    K, byz = _TRIM_PLACEMENTS[trim]
+    hops = trim
+    topo = make_topology("ring", K, hops=hops)
+    A = jnp.asarray(topo.A, jnp.float32)
+    active = jnp.ones((K,), jnp.float32)
+    vals = rng.uniform(-1.0, 1.0, (K, 3)).astype(np.float32)
+    mags = rng.uniform(10.0, 1e4, (len(byz), 3)).astype(np.float32)
+    signs = rng.choice([-1.0, 1.0], (len(byz), 3)).astype(np.float32)
+    for i, b in enumerate(byz):
+        vals[b] = mags[i] * signs[i]
+    # sanity: every closed neighborhood holds at most `trim` adversaries
+    adj = topo.adjacency
+    for k in range(K):
+        assert sum(1 for b in byz if adj[b, k]) <= trim
+    honest = [k for k in range(K) if k not in byz]
+    params = {"w": jnp.asarray(vals)}
+    out_n = np.asarray(TrimmedMeanMixer(K, trim=trim, scope="neighborhood")(
+        params, active, A)["w"])
+    assert np.abs(out_n[honest]).max() <= 1.0 + 1e-5
+    out_g = np.asarray(TrimmedMeanMixer(K, trim=trim, scope="global")(
+        params, active, A)["w"])
+    assert np.abs(out_g[honest]).max() > 1.0
+
+
+# ---------------------------------------------------------------------------
+# poisoned-gradient end-to-end engine gate
+# ---------------------------------------------------------------------------
+
+def _honest_msd(params, honest, w_o):
+    p = np.asarray(params)
+    return float(np.mean(np.sum((p[honest] - np.asarray(w_o)) ** 2,
+                                axis=1)))
+
+
+def test_poisoned_gradient_end_to_end():
+    """Acceptance gate at engine level: under a 1-per-neighborhood
+    sign-flip gradient attack on a ring, the neighborhood-scoped trimmed
+    mean keeps the honest agents near the clean-run optimum while the
+    global scope (and the linear fedavg mean) are dragged away."""
+    K, blocks = 12, 350
+    data = make_regression_problem(K=K, N=80, M=2, rho=0.1, seed=8,
+                                   mean_scale=1.5, noise_low=0.01,
+                                   noise_high=0.05, w_star_spread=0.5)
+    w_o = data.problem().w_opt(None)
+    sampler = make_block_sampler(data, T=1, batch=2)
+    byz = byzantine_indices(K, 3)
+    honest = [k for k in range(K) if k not in byz]
+
+    def run(spec):
+        eng = build(spec, data.loss_fn())
+        p0 = jnp.zeros((K, 2))
+        state = eng.init_state(p0, eng.optimizer.init(p0))
+        key = jax.random.PRNGKey(0)
+        for _ in range(blocks):
+            key, kb, ks = jax.random.split(key, 3)
+            state, _ = eng.step(state, sampler(kb), ks)
+        return _honest_msd(state.params, honest, w_o)
+
+    base = variants.byzantine_robust_diffusion(K, mu=0.05, num_byzantine=3,
+                                               scale=3.0)
+    clean = run(base.replace(attack=AttackSpec(kind="none")))
+    nbr = run(base)
+    glb = run(base.replace(mixer=MixerSpec(kind="trimmed_mean", trim=1,
+                                           scope="global")))
+    fed = run(base.replace(mixer=MixerSpec(kind="dense"),
+                           topology=TopologySpec(kind="fedavg")))
+    assert nbr < 20.0 * clean, (nbr, clean)
+    assert not (glb < 10.0 * nbr), (glb, nbr)    # nan/inf = degraded too
+    assert not (fed < 10.0 * nbr), (fed, nbr)
+
+
+def test_poisoned_gradient_sharded_path():
+    """make_block_step threads trim/robust_scope and the attack transform
+    the same way the stacked engine does."""
+    from repro.core.sharded import make_block_step
+    K = 9
+    data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=3)
+    cfg = DiffusionConfig(num_agents=K, local_steps=2, step_size=0.03,
+                          topology="ring", participation=1.0,
+                          mix="trimmed_mean")
+    topo = cfg.make_topology()
+    atk = make_attack("sign_flip", K, num_byzantine=3, scale=2.0)
+    loss3 = lambda p, b, rng: data.loss_fn()(p, b)
+    step = make_block_step(loss3, cfg, topology=topo, trim=1,
+                           robust_scope="neighborhood",
+                           grad_transform=atk.update)
+    assert step.pipeline.mixer.scope == "neighborhood"
+    assert step.pipeline.mixer.uses_matrix
+    state = step.init_state(jnp.zeros((K, 2)))
+    sampler = make_block_sampler(data, T=2, batch=2)
+    jit_step = jax.jit(step)
+    w_o = data.problem().w_opt(None)
+    key = jax.random.PRNGKey(0)
+    for i in range(150):
+        key, kb, ks = jax.random.split(key, 3)
+        state, _ = jit_step(state, sampler(kb), ks)
+    honest = [k for k in range(K) if k not in byzantine_indices(K, 3)]
+    assert _honest_msd(state.params, honest, w_o) < 0.5

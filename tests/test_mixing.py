@@ -352,6 +352,221 @@ def test_robust_mixer_in_engine_suppresses_outlier():
     assert d_robust < 0.1 * d_linear, (d_robust, d_linear)
 
 
+def _legacy_global_robust(vals, active, slot_weights):
+    """Frozen verbatim copy of the pre-scope robust aggregation (the
+    original _SortedRobustMixer.__call__ body) — the scope="global"
+    bit-parity reference."""
+    K = vals.shape[0]
+    S = active.astype(jnp.float32).sum()
+    w = slot_weights(S)
+    m = active.astype(jnp.float32).reshape((K, 1))
+    x = vals.astype(jnp.float32)
+    srt = jnp.sort(jnp.where(m > 0, x, jnp.inf), axis=0)
+    wb = w.reshape((K, 1))
+    agg = jnp.sum(jnp.where(wb > 0, srt, 0.0) * wb, axis=0, keepdims=True)
+    return np.asarray(jnp.where(m > 0, agg.astype(vals.dtype), vals))
+
+
+@pytest.mark.parametrize("preset", ["ring", "grid", "full", "fedavg",
+                                    "erdos"])
+def test_robust_global_scope_bit_parity_with_legacy(preset):
+    """scope="global" (the default) stays bit-identical to the pre-scope
+    robust path for every base topology the presets use, with the A_t
+    operand present or absent."""
+    from repro.core import CoordinateMedianMixer, TrimmedMeanMixer
+    K = 12
+    topo = make_topology(preset, K)
+    A = jnp.asarray(topo.A, jnp.float32)
+    for kind in ("trimmed_mean", "median"):
+        for seed in range(3):
+            key = jax.random.fold_in(KEY, seed)
+            vals = jax.random.normal(key, (K, 5))
+            active = jax.random.bernoulli(key, 0.7, (K,)).astype(jnp.float32)
+            mixer = (TrimmedMeanMixer(K, trim=2) if kind == "trimmed_mean"
+                     else CoordinateMedianMixer(K))
+            assert mixer.scope == "global" and not mixer.uses_matrix
+            ref = _legacy_global_robust(vals, active, mixer._slot_weights)
+            for A_t in (A, None):
+                out = np.asarray(mixer({"w": vals}, active, A_t)["w"])
+                np.testing.assert_array_equal(out, ref,
+                                              err_msg=f"{kind}/{preset}")
+
+
+def test_neighborhood_scope_matches_numpy_reference():
+    """Neighborhood trimmed mean/median == a per-row numpy reference over
+    the realized neighborhood (support of masked_combination's column
+    intersected with the active set, self included), with the per-row trim
+    clip for small neighborhoods."""
+    from repro.core import CoordinateMedianMixer, TrimmedMeanMixer
+    K = 12
+    topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
+    for seed in range(4):
+        key = jax.random.fold_in(KEY, 100 + seed)
+        vals = jax.random.normal(key, (K, 3))
+        active = jax.random.bernoulli(key, 0.7, (K,)).astype(jnp.float32)
+        A_eff = np.asarray(masked_combination(A, active))
+        for kind, trim in (("trimmed_mean", 1), ("median", None)):
+            mixer = (TrimmedMeanMixer(K, trim=trim, scope="neighborhood")
+                     if kind == "trimmed_mean"
+                     else CoordinateMedianMixer(K, scope="neighborhood"))
+            assert mixer.uses_matrix
+            out = np.asarray(jax.jit(mixer)({"w": vals}, active, A)["w"])
+            act = np.asarray(active)
+            v = np.asarray(vals)
+            for k in range(K):
+                if act[k] == 0:
+                    np.testing.assert_array_equal(out[k], v[k])
+                    continue
+                members = sorted(set(np.where(A_eff[:, k] != 0)[0]) | {k})
+                srt = np.sort(v[members], axis=0)
+                S = len(members)
+                if kind == "median":
+                    ref = np.median(v[members], axis=0)
+                else:
+                    b = min(trim, (S - 1) // 2)
+                    ref = srt[b:S - b].mean(axis=0)
+                np.testing.assert_allclose(out[k], ref, rtol=1e-5,
+                                           atol=1e-5,
+                                           err_msg=f"{kind} agent {k}")
+
+
+def test_neighborhood_tolerates_trim_byzantine_per_neighborhood():
+    """The headline property: with at most `trim` Byzantine agents in every
+    closed neighborhood, each honest active agent's neighborhood-trimmed
+    output lies within the honest member range — while the global scope on
+    a ring leaks once the TOTAL adversary count exceeds `trim`."""
+    from repro.core import TrimmedMeanMixer
+    K = 12
+    topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
+    active = jnp.ones((K,), jnp.float32)
+    byz = (0, 4, 8)                      # <= 1 per closed ring neighborhood
+    for seed in range(5):
+        key = jax.random.fold_in(KEY, 200 + seed)
+        honest_vals = jax.random.uniform(key, (K, 4), minval=-1.0,
+                                         maxval=1.0)
+        sign = jax.random.bernoulli(key, 0.5, (len(byz), 1)) * 2.0 - 1.0
+        vals = honest_vals
+        for i, b in enumerate(byz):
+            vals = vals.at[b].set(1e3 * sign[i])
+        out_n = np.asarray(TrimmedMeanMixer(K, trim=1, scope="neighborhood")(
+            {"w": vals}, active, A)["w"])
+        out_g = np.asarray(TrimmedMeanMixer(K, trim=1, scope="global")(
+            {"w": vals}, active, A)["w"])
+        honest = [k for k in range(K) if k not in byz]
+        # neighborhood: every honest output within the honest value range
+        assert np.abs(out_n[honest]).max() <= 1.0 + 1e-6, out_n[honest]
+        # global: 3 adversaries > trim=1 — garbage leaks into the aggregate
+        assert np.abs(out_g[honest]).max() > 1.0, out_g[honest]
+
+
+def test_robust_edge_cases_S0_S1_and_bf16():
+    """Satellite regression gate: S=0 freezes everyone with finite
+    intermediates, S=1 reduces to the lone member's own value, and bf16
+    leaves survive the inf-padding without NaN — in BOTH scopes, both
+    backends."""
+    from repro.core import CoordinateMedianMixer, TrimmedMeanMixer
+    K = 6
+    topo = make_topology("ring", K)
+    A = jnp.asarray(topo.A, jnp.float32)
+    vals = jax.random.normal(KEY, (K, 3))
+    mixers = [TrimmedMeanMixer(K, trim=2, scope=s) for s in
+              ("global", "neighborhood")]
+    mixers += [CoordinateMedianMixer(K, scope=s) for s in
+               ("global", "neighborhood")]
+    for mixer in mixers:
+        # S = 0: everyone inactive -> frozen exactly
+        out = jax.jit(mixer)({"w": vals}, jnp.zeros((K,)), A)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(vals), err_msg=repr(mixer))
+        # S = 1: the lone active agent keeps its own value exactly (its
+        # neighborhood / the active set is just itself)
+        one = jnp.zeros((K,)).at[2].set(1.0)
+        out = jax.jit(mixer)({"w": vals}, one, A)
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(vals),
+                                   atol=1e-6, err_msg=repr(mixer))
+        # bf16 leaves: finite, and close to the f32 computation
+        bf = vals.astype(jnp.bfloat16)
+        active = jnp.asarray([1, 1, 0, 1, 1, 1], jnp.float32)
+        out_bf = np.asarray(jax.jit(mixer)({"w": bf}, active, A)["w"]
+                            .astype(jnp.float32))
+        assert np.isfinite(out_bf).all(), repr(mixer)
+        out_f32 = np.asarray(jax.jit(mixer)(
+            {"w": bf.astype(jnp.float32)}, active, A)["w"])
+        np.testing.assert_allclose(out_bf, out_f32, atol=0.05,
+                                   err_msg=repr(mixer))
+
+
+def test_neighborhood_scope_composes_with_dynamic_graphs():
+    """The realized A_t of every dynamic GraphProcess flows into the
+    neighborhood aggregation: check_mixer_support accepts all of them
+    (incl. tv_erdos, which rejects the sparse backend), and an engine run
+    under link dropout + neighborhood trimmed mean stays sane."""
+    from repro.core import TrimmedMeanMixer, make_graph_process
+    from repro.core.graphs import check_mixer_support
+    K = 8
+    topo = make_topology("ring", K)
+    mixer = TrimmedMeanMixer(K, trim=1, scope="neighborhood")
+    for kind in ("static", "link_dropout", "gossip", "tv_erdos"):
+        graph = make_graph_process(kind, topo, num_agents=K)
+        check_mixer_support(mixer, graph)      # must not raise
+    data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=0)
+    cfg = DiffusionConfig(num_agents=K, local_steps=1, step_size=0.05,
+                          topology="ring", participation=0.9,
+                          graph="link_dropout",
+                          graph_kwargs=(("corr", 0.0), ("drop", 0.3)))
+    eng = DiffusionEngine(cfg, data.loss_fn(), mixer=mixer)
+    sampler = make_block_sampler(data, T=1, batch=2)
+    w_o = data.problem().w_opt(np.full(K, 0.9))
+    params = jnp.full((K, 2), 3.0)
+    _, _, hist = eng.run(params, sampler, 300, seed=0,
+                         w_star=jnp.asarray(w_o))
+    assert np.mean(hist[-50:]) < 0.1 * hist[0]
+
+
+def test_sparse_skip_dead_parity_and_live_count():
+    """Dead-offset segment mask (graph-aware sparse offsets): the guarded
+    sparse path is numerically identical to dense on matrices with all-zero
+    coefficient rows, and count_live_offsets reports the realized permute
+    count."""
+    from repro.core import (DenseMixer, count_live_offsets,
+                            make_graph_process)
+    from repro.core.graphs import check_mixer_support
+    from repro.core.topology import metropolis_weights
+    K = 8
+    topo = make_topology("ring", K, hops=2)
+    offs = topo.neighbor_offsets_ring()
+    # kill every +/-2 edge: that offset's coefficient row is all-zero
+    adj = topo.adjacency.copy()
+    idx = np.arange(K)
+    adj[idx, (idx + 2) % K] = False
+    adj[(idx + 2) % K, idx] = False
+    A_dead = jnp.asarray(metropolis_weights(adj), jnp.float32)
+    params = _rand_tree(KEY, K)
+    active = jax.random.bernoulli(KEY, 0.8, (K,)).astype(jnp.float32)
+    sk = SparseCirculantMixer(offs, skip_dead=True)
+    ref = DenseMixer()(params, active, A_dead)
+    out = jax.jit(sk)(params, active, A_dead)
+    for r, o in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
+    A_eff = masked_combination(A_dead, jnp.ones((K,)))
+    assert int(count_live_offsets(A_eff, offs)) == len(offs) - 2
+    assert int(sk.live_offsets(jnp.ones((K,)), A_dead)) == len(offs) - 2
+    # check_mixer_support auto-tunes: dynamic graph -> skip on, static -> off
+    auto = SparseCirculantMixer(offs)
+    assert auto.skip_dead is None
+    check_mixer_support(auto, make_graph_process("static", topo))
+    assert auto.skip_dead is False
+    # an auto decision follows EACH build's graph (reused instances do not
+    # keep the first build's tuning); explicit settings are never touched
+    check_mixer_support(auto, make_graph_process("link_dropout", topo))
+    assert auto.skip_dead is True
+    explicit = SparseCirculantMixer(offs, skip_dead=False)
+    check_mixer_support(explicit, make_graph_process("link_dropout", topo))
+    assert explicit.skip_dead is False
+
+
 def test_robust_mixer_rejects_compressed_pipeline():
     from repro.core import CommPipeline, TrimmedMeanMixer
     from repro.core.compression import make_compressor

@@ -1,0 +1,114 @@
+"""Serving-side consensus extraction (launch/serve.py): the fixed
+hard-coded-FedAvg bug — consensus now comes from the checkpoint spec's
+topology through the trained mixer backend, time-varying-graph specs warn,
+and the legacy (spec-less) default stays bit-identical."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_mixer, make_topology
+from repro.launch.serve import consensus_from_stacked
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _stacked(K):
+    ks = jax.random.split(KEY, 2)
+    return {"w": jax.random.normal(ks[0], (K, 4, 3)),
+            "b": jax.random.normal(ks[1], (K, 2))}
+
+
+def test_default_path_bit_identical_to_legacy():
+    """topology=None (spec-less checkpoints): one all-active FedAvg step,
+    exactly the pre-fix behavior."""
+    K = 6
+    stacked = _stacked(K)
+    topo = make_topology("fedavg", K)
+    mixer = make_mixer("dense", topo, num_agents=K)
+    legacy = jax.tree.map(
+        lambda x: x[0],
+        mixer(stacked, jnp.ones((K,), jnp.float32),
+              jnp.asarray(topo.A, jnp.float32)))
+    out = consensus_from_stacked(stacked, K, "dense")
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("mix", ["dense", "sparse", "pallas"])
+def test_spec_topology_reaches_network_mean(mix):
+    """Linear mixers over the spec's (non-fedavg) topology iterate the
+    combination step to the exact network mean — including the sparse
+    backend, whose circulant offsets now come from the REAL base graph
+    instead of the fedavg stand-in."""
+    K = 8
+    stacked = _stacked(K)
+    ring = make_topology("ring", K)
+    kwargs = {"topology": ring}
+    out = consensus_from_stacked(stacked, K, mix, **kwargs)
+    for leaf, o in zip(jax.tree.leaves(stacked), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(o),
+                                   np.asarray(leaf).mean(0),
+                                   atol=1e-4, err_msg=mix)
+
+
+def test_robust_scopes_over_spec_topology():
+    """Global robust aggregation applies once (idempotent); the
+    neighborhood scope aggregates over the trained ring structure and
+    still suppresses an outlier agent."""
+    K = 8
+    ring = make_topology("ring", K)
+    vals = jax.random.normal(KEY, (K, 3)) * 0.1
+    vals = vals.at[2].set(50.0)                     # poisoned agent
+    for scope in ("global", "neighborhood"):
+        out = consensus_from_stacked({"w": vals}, K, "trimmed_mean",
+                                     trim=1, scope=scope, topology=ring)
+        assert float(jnp.abs(out["w"]).max()) < 1.0, scope
+
+
+def test_single_model_checkpoint_unchanged():
+    """K = 1 (plain checkpoints) stays the identity."""
+    params = {"w": jax.random.normal(KEY, (1, 3))}
+    out = consensus_from_stacked(params, 1, "dense")
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(params["w"][0]))
+
+
+def test_serve_spec_checkpoint_uses_spec_topology_and_warns(tmp_path):
+    """End-to-end through launch.serve.load_params: a spec checkpoint
+    trained on a ring + link-dropout graph extracts its consensus over the
+    ring (not fedavg) and warns that the dynamic graph is approximated by
+    its base topology."""
+    import argparse
+
+    from repro.api import ModelSpec, build
+    from repro.api.cli import add_spec_args
+    from repro.checkpoint import save_experiment
+    from repro.core import variants
+    from repro.launch import serve
+
+    K = 4
+    spec = variants.link_dropout_diffusion(K, mu=0.02, drop=0.3).replace(
+        model=ModelSpec(kind="transformer", arch="smollm-360m", smoke=True))
+    eng = build(spec)
+    params = eng.init_params(jax.random.PRNGKey(0))
+    state = eng.init_state(params)
+    path = str(tmp_path / "ring_ckpt.npz")
+    save_experiment(path, state, spec=spec, step=1)
+
+    ap = argparse.ArgumentParser()
+    add_spec_args(ap)
+    ap.add_argument("--checkpoint", default=None)
+    ap.set_defaults(agents=1)
+    args = ap.parse_args(["--checkpoint", path])
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got, cfg = serve.load_params(args, jax.random.PRNGKey(1))
+    assert any("time-varying" in str(w.message) for w in caught)
+    # consensus == the network mean over the ring (dense mixer, iterated)
+    for leaf, o in zip(jax.tree.leaves(params), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(leaf, np.float32).mean(0),
+                                   atol=1e-2)
