@@ -117,14 +117,15 @@ def _cyclic(spec: ParticipationSpec, K: int):
 # -- mixers (delegate to core/mixing.make_mixer) ----------------------------
 
 def _register_mixers():
-    for kind in ("dense", "sparse", "pallas", "auto", "none",
+    for kind in ("dense", "sparse", "pallas", "gather", "auto", "none",
                  "trimmed_mean", "median"):
         @MIXERS.register(kind)
         def _build(spec: MixerSpec, topology, K: int, _kind=kind):
             return mixing.make_mixer(_kind, topology, num_agents=K,
                                      tile_m=spec.tile_m,
                                      interpret=spec.interpret,
-                                     trim=spec.trim, scope=spec.scope)
+                                     trim=spec.trim, scope=spec.scope,
+                                     gather=spec.gather)
 
 
 _register_mixers()

@@ -37,7 +37,7 @@ from repro.api.spec import (AttackSpec, CompressionSpec, ExperimentSpec,
 
 __all__ = ["add_spec_args", "spec_from_args", "get_preset"]
 
-_MIX_CHOICES = ["dense", "sparse", "pallas", "auto", "none",
+_MIX_CHOICES = ["dense", "sparse", "pallas", "gather", "auto", "none",
                 "trimmed_mean", "median"]
 _ROBUST_MIX_KINDS = ("trimmed_mean", "median")
 _COMPRESS_CHOICES = ["none", "topk", "randk", "int8", "gauss"]
@@ -162,6 +162,13 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                         "global (SLSGD server aggregate over the active "
                         "set) or neighborhood (per-agent over the realized "
                         "A_t support)")
+    g.add_argument("--robust-gather", default="auto", action=_Track,
+                   choices=["auto", "table", "fused", "off"],
+                   help="bounded-degree policy for the neighborhood scope "
+                        "(MixerSpec.gather): auto (table when the graph "
+                        "stays on base support; fused kernel on TPU), "
+                        "table (vmapped gather), fused (Pallas kernel), "
+                        "off (all-slots sort)")
     g.add_argument("--attack", default="none", choices=_ATTACK_CHOICES,
                    action=_Track,
                    help="Byzantine gradient adversary (AttackSpec.kind)")
@@ -211,6 +218,7 @@ _PRESET_OVERRIDES = {
     "mix": ("mixer", "kind"),
     "trim": ("mixer", "trim"),
     "robust_scope": ("mixer", "scope"),
+    "robust_gather": ("mixer", "gather"),
     "attack": ("attack", "kind"),
     "attack_num": ("attack", "num_byzantine"),
     "attack_scale": ("attack", "scale"),
@@ -278,7 +286,8 @@ def _check_robust_flags(args, spec: ExperimentSpec) -> ExperimentSpec:
     consume the fields)."""
     explicit = getattr(args, "_explicit", set())
     offenders = [flag for dest, flag in (("trim", "--trim"),
-                                         ("robust_scope", "--robust-scope"))
+                                         ("robust_scope", "--robust-scope"),
+                                         ("robust_gather", "--robust-gather"))
                  if dest in explicit]
     builtin_nonrobust = spec.mixer.kind in ("dense", "sparse", "pallas",
                                             "auto", "none")
@@ -340,7 +349,8 @@ def spec_from_args(args) -> ExperimentSpec:
             kind=args.participation_process, q=args.participation,
             corr=args.markov_corr, num_groups=args.num_groups),
         mixer=MixerSpec(kind=args.mix, trim=args.trim,
-                        scope=args.robust_scope),
+                        scope=args.robust_scope,
+                        gather=args.robust_gather),
         compression=CompressionSpec(
             kind=args.compress, ratio=args.compress_ratio,
             sigma=args.compress_sigma, error_feedback=args.error_feedback,

@@ -132,13 +132,15 @@ class ParticipationSpec:
 class MixerSpec:
     """Combination-step backend (core/mixing.py)."""
 
-    kind: str = "dense"          # dense|sparse|pallas|auto|none|
+    kind: str = "dense"          # dense|sparse|pallas|gather|auto|none|
                                  # trimmed_mean|median|<registered>
     tile_m: int = 512            # pallas tile
     interpret: Optional[bool] = None   # pallas interpret override
     trim: int = 1                # trimmed_mean: per-side trim count
     scope: str = "global"        # robust backends: global (SLSGD server)
                                  # | neighborhood (realized A_t support)
+    gather: str = "auto"         # neighborhood scope: bounded-degree
+                                 # policy — auto|table|fused|off
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,7 +35,9 @@ from repro.core.mixing import (  # noqa: F401
     CommPipeline,
     CoordinateMedianMixer,
     DenseMixer,
+    FusedNeighborhoodMixer,
     Mixer,
+    NeighborGatherMixer,
     NullMixer,
     PallasFusedMixer,
     SparseCirculantMixer,

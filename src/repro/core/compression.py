@@ -275,19 +275,46 @@ class Int8Stochastic(Compressor):
     needs_key = True
     bits = 8
 
-    def _leaf(self, x: jax.Array, key: jax.Array) -> jax.Array:
-        K = x.shape[0]
-        flat = x.reshape(K, -1).astype(jnp.float32)
-        q, scale = quantize_int8(flat, key, axis=1)
-        return (q * scale).reshape(x.shape).astype(x.dtype)
+    def encode_quantized(self, params, key):
+        """Split encoding for the wire: ``(q, scales)`` pytrees with ``q``
+        stored as int8 (per leaf ``(K, n)``) and ``scales`` the per-agent
+        scale per leaf (``(K, 1)`` float32).
+
+        :meth:`dequantize` reproduces :meth:`encode`'s messages
+        bit-for-bit (same key stream; the int8 round-trip of the
+        integer-valued quantized floats is exact) — but the caller can
+        move the int8 buffer + scales through a collective instead of the
+        dequantized float32, 4x fewer payload bytes on the wire (the
+        generic GSPMD path of :class:`repro.core.mixing.CommPipeline`
+        pins them there with sharding constraints).
+        """
+        if key is None:
+            raise ValueError("Int8Stochastic.encode_quantized needs a "
+                             "PRNG key")
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        qs, ss = [], []
+        for l, k in zip(leaves, _leaf_keys(key, leaves)):
+            K = l.shape[0]
+            flat = l.reshape(K, -1).astype(jnp.float32)
+            q, scale = quantize_int8(flat, k, axis=1)
+            qs.append(q.astype(jnp.int8))
+            ss.append(scale)
+        return (jax.tree_util.tree_unflatten(treedef, qs),
+                jax.tree_util.tree_unflatten(treedef, ss))
+
+    def dequantize(self, q: PyTree, scales: PyTree, like: PyTree) -> PyTree:
+        """Rebuild the message pytree (structure/dtypes of ``like``) from
+        :meth:`encode_quantized` output."""
+        def leaf(qi, si, li):
+            return ((qi.astype(jnp.float32) * si)
+                    .reshape(li.shape).astype(li.dtype))
+        return jax.tree.map(leaf, q, scales, like)
 
     def encode(self, params, state, key=None):
         if key is None:
             raise ValueError("Int8Stochastic.encode needs a PRNG key")
-        leaves, treedef = jax.tree_util.tree_flatten(params)
-        out = [self._leaf(l, k) for l, k in zip(leaves,
-                                                _leaf_keys(key, leaves))]
-        return jax.tree_util.tree_unflatten(treedef, out), state
+        q, scales = self.encode_quantized(params, key)
+        return self.dequantize(q, scales, params), state
 
 
 class GaussianMask(RandK):

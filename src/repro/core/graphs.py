@@ -403,20 +403,73 @@ def check_mixer_support(mixer, graph: GraphProcess | None) -> None:
     realize matrices whose per-offset coefficient row is all-zero (every
     link at that offset failed this block), so ``skip_dead`` is flipped on
     — each roll/collective-permute is guarded by a segment mask and dead
-    offsets are skipped (:func:`repro.core.mixing.mix_sparse`).  The
-    robust backends compose with every graph in both scopes: the
+    offsets are skipped (:func:`repro.core.mixing.mix_sparse`).
+
+    The bounded-degree gather paths carry the same support requirement as
+    the sparse backend — the neighbor table only reads base-adjacency
+    rows — so :class:`~repro.core.mixing.NeighborGatherMixer` is rejected
+    off support, and the robust backends' gather machinery follows the
+    ``skip_dead`` convention: an "auto" decision is re-derived per call
+    (table attached for ``within_base_support`` graphs with a known base
+    topology, detached otherwise; the fused kernel enabled/disabled the
+    same way), while an explicit ``gather="table"`` / ``use_kernel=True``
+    off support is a build-time error.  The robust backends otherwise
+    compose with every graph in both scopes: without a table the
     neighborhood scope reads the realized support per call, so nothing is
     rejected for link_dropout / gossip / tv_erdos.
     """
     from repro.core import mixing  # local: mixing does not import graphs
-    if (graph is not None and not graph.within_base_support
-            and isinstance(mixer, mixing.SparseCirculantMixer)):
+    on_support = graph is None or graph.within_base_support
+    if not on_support and isinstance(mixer, mixing.SparseCirculantMixer):
         raise ValueError(
             f"{type(mixer).__name__} moves bytes only along the base "
             f"topology's circulant offsets, but the {graph.name!r} graph "
             "process realizes edges outside that support — use "
             "mix='dense' or 'pallas'")
+    if not on_support and isinstance(mixer, mixing.NeighborGatherMixer):
+        raise ValueError(
+            f"{type(mixer).__name__} gathers only the base topology's "
+            f"neighbor rows, but the {graph.name!r} graph process "
+            "realizes edges outside that support — use mix='dense' or "
+            "'pallas'")
     if (isinstance(mixer, mixing.SparseCirculantMixer)
             and mixer._skip_dead_auto):
         mixer.skip_dead = (graph is not None
                            and not isinstance(graph, StaticGraph))
+    if isinstance(mixer, mixing.FusedNeighborhoodMixer):
+        if not on_support and mixer.use_kernel is True:
+            raise ValueError(
+                f"{type(mixer).__name__}(use_kernel=True) gathers only "
+                f"the base topology's neighbor rows, but the "
+                f"{graph.name!r} graph process realizes edges outside "
+                "that support — use gather='off' (all-slots sort)")
+        if mixer._use_kernel_auto:
+            mixer.use_kernel = None if on_support else False
+        _sync_robust_table(mixer.inner, graph, on_support)
+        return
+    if isinstance(mixer, mixing._SortedRobustMixer):
+        _sync_robust_table(mixer, graph, on_support)
+
+
+def _sync_robust_table(mixer, graph: GraphProcess | None,
+                       on_support: bool) -> None:
+    """Attach/detach a robust mixer's neighbor table per the graph, the
+    way sparse ``skip_dead`` is re-derived per build: explicit choices
+    (``gather="table"``/``"off"``) are never touched, "auto" follows the
+    graph."""
+    if mixer.scope != "neighborhood":
+        return
+    explicit = getattr(mixer, "_gather_mode", "auto") != "auto"
+    if not on_support:
+        if mixer._table is not None:
+            if explicit:
+                raise ValueError(
+                    f"{type(mixer).__name__}(gather='table') gathers only "
+                    f"the base topology's neighbor rows, but the "
+                    f"{graph.name!r} graph process realizes edges outside "
+                    "that support — use gather='off' (all-slots sort)")
+            mixer.detach_neighbor_table()
+        return
+    if (mixer._table is None and not explicit and graph is not None
+            and graph.topology is not None):
+        mixer.attach_neighbor_table(graph.topology)

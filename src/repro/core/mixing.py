@@ -22,6 +22,13 @@ Backends differ only in *how* the contraction is executed:
   rebuilds the eq.-20 mask in VMEM and streams the parameters exactly once.
   The flatten/unflatten layout is computed once per (treedef, shapes) and
   cached across steps.
+* :class:`NeighborGatherMixer` — the bounded-degree path for K >= 1024:
+  each target row gathers its D = dmax + 1 contributor rows through the
+  static neighbor table of the base topology
+  (:meth:`repro.core.topology.Topology.neighbor_table`) — O(K dmax M)
+  instead of the dense O(K^2 M), with no (K, K) matmul operand.  Valid for
+  any graph process that stays ``within_base_support``.  On TPU it runs
+  the fused Pallas gather kernel over the cached flatten layout.
 * :class:`NullMixer` — identity (K = 1, or mixing disabled).
 * :class:`TrimmedMeanMixer` / :class:`CoordinateMedianMixer` — robust
   (Byzantine-tolerant) order-statistic aggregation à la SLSGD
@@ -70,6 +77,8 @@ __all__ = [
     "DenseMixer",
     "SparseCirculantMixer",
     "PallasFusedMixer",
+    "NeighborGatherMixer",
+    "FusedNeighborhoodMixer",
     "TrimmedMeanMixer",
     "CoordinateMedianMixer",
     "CommPipeline",
@@ -78,13 +87,25 @@ __all__ = [
     "make_pipeline",
     "mix_dense",
     "mix_sparse",
+    "mix_gather",
     "count_live_offsets",
 ]
 
 # sparse cost is one full-parameter roll+multiply PER DISTINCT CIRCULANT
 # OFFSET (not per neighbor): beyond this many offsets the decomposition moves
-# as many bytes as the dense all-gather, so "auto" falls back to dense
+# as many bytes as the dense all-gather, so "auto" falls back — to the
+# bounded-degree gather path when the base degree leaves headroom over K,
+# else dense
 _AUTO_SPARSE_MAX_OFFSETS = 8
+
+# the neighbor-table gather does K * (dmax + 1) row reads vs the dense
+# path's K^2; require 2x headroom before "auto" prefers it (below that the
+# gather bookkeeping does not pay for itself)
+_AUTO_GATHER_HEADROOM = 2
+
+# all-slots neighborhood sort above this K is the O(K^2 M log K) path the
+# gather table exists to avoid — warn (once per mixer) when it runs anyway
+_NEIGHBORHOOD_WARN_K = 512
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +193,32 @@ def mix_sparse(A_eff: jax.Array, params: PyTree,
     return jax.tree.map(mix_leaf, params)
 
 
+def mix_gather(A_eff: jax.Array, params: PyTree, idx: jax.Array,
+               valid: jax.Array) -> PyTree:
+    """Bounded-degree combination through a static neighbor table.
+
+    ``idx`` / ``valid`` come from
+    :meth:`repro.core.topology.Topology.neighbor_table`: each target row k
+    reads only its ``D = max_degree + 1`` possible contributor rows and
+    contracts them with the realized weights ``A_eff[idx[k, j], k]`` —
+    O(K D M) work and no (K, K) operand in the leaf contraction.  Padding
+    slots gather the self row with weight exactly zero, so the result
+    matches :func:`mix_dense` (same terms, shorter contraction — equal to
+    float tolerance) whenever every nonzero of ``A_eff`` lies on the base
+    support (``within_base_support`` graphs).
+    """
+    K = idx.shape[0]
+    gw = (A_eff[idx, jnp.arange(K)[:, None]]
+          * valid.astype(A_eff.dtype))                     # (K, D)
+
+    def mix_leaf(p: jax.Array) -> jax.Array:
+        flat = p.reshape(K, -1)
+        mixed = jnp.einsum("kd,kdm->km", gw.astype(flat.dtype), flat[idx])
+        return mixed.reshape(p.shape)
+
+    return jax.tree.map(mix_leaf, params)
+
+
 def count_live_offsets(A_eff: jax.Array, offsets: Sequence[int]) -> jax.Array:
     """How many circulant offsets carry any nonzero coefficient in this
     realized matrix — the number of rolls/collective-permutes the
@@ -208,13 +255,41 @@ class Mixer:
     name = "base"
     linear = True
     uses_matrix = True        # False: A_t is accepted but ignored
+    _mesh = None              # set by shard_agent_axis
+    _agent_axis = None
 
     def __call__(self, params: PyTree, active: jax.Array,
                  A_t: jax.Array) -> PyTree:
         raise NotImplementedError
 
+    def shard_agent_axis(self, mesh, axis: str) -> None:
+        """Request agent-axis sharding: backends that materialize the
+        (K, M) stack pin its leading axis to mesh dimension ``axis``
+        through GSPMD sharding constraints
+        (:func:`repro.sharding.rules.agent_stack_pspec`), so K >= 1024
+        never holds K model copies in one device's HBM.  Backends that
+        never materialize the stack ignore the request."""
+        self._mesh = mesh
+        self._agent_axis = str(axis)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"{type(self).__name__}()"
+
+
+def _constrain_agent_stack(tree: PyTree, mesh, axis: str) -> PyTree:
+    """Pin every leaf's leading (agent) axis to ``axis`` of ``mesh`` via a
+    sharding constraint — a no-op spec when the axis size does not divide
+    K (the ``_maybe`` guard in sharding/rules.py)."""
+    from jax.sharding import NamedSharding
+
+    from repro.sharding.rules import agent_stack_pspec
+
+    def leaf(l: jax.Array) -> jax.Array:
+        spec = agent_stack_pspec(mesh, axis, num_agents=l.shape[0],
+                                 ndim=l.ndim)
+        return jax.lax.with_sharding_constraint(l, NamedSharding(mesh, spec))
+
+    return jax.tree.map(leaf, tree)
 
 
 class NullMixer(Mixer):
@@ -399,6 +474,92 @@ class PallasFusedMixer(Mixer):
         return delta_tree, msgs
 
 
+class NeighborGatherMixer(Mixer):
+    """Bounded-degree linear combination — the scale path for K >= 1024.
+
+    Holds the static neighbor table of the base topology
+    (:meth:`repro.core.topology.Topology.neighbor_table`) and runs
+    :func:`mix_gather`: each target row reads only its ``D = dmax + 1``
+    possible contributor rows, so per-agent cost is a function of the max
+    degree, not K, and no (K, K) matmul operand is materialized.  Valid
+    whenever the realized graphs stay ``within_base_support``
+    (:func:`repro.core.graphs.check_mixer_support` rejects tv_erdos).
+
+    ``fused=None`` resolves per call: on TPU the fused Pallas gather
+    kernel (:func:`repro.kernels.diffusion_mix.gather_mix`) streams the
+    cached (K, M) flatten layout once (the :class:`PallasFusedMixer`
+    tile/layout cache is reused); elsewhere the per-leaf gather einsum
+    runs.  ``fused=True`` forces the kernel (interpret mode off-TPU);
+    ``fused=False`` forces the einsum.
+
+    :meth:`shard_agent_axis` pins the (K, ...) stack and the (K, D)
+    gather table to a mesh dimension, so the resident state per device is
+    K/devices rows.
+    """
+
+    name = "gather"
+
+    def __init__(self, topology: topo_lib.Topology, *, tile_m: int = 512,
+                 interpret: bool | None = None, fused: bool | None = None):
+        if topology is None:
+            raise ValueError("NeighborGatherMixer needs the base topology "
+                             "(source of the static neighbor table)")
+        idx, valid = topology.neighbor_table()
+        self.num_agents = topology.num_agents
+        self.max_degree = topology.max_degree
+        self.idx = jnp.asarray(idx)          # (K, D) int32
+        self.valid = jnp.asarray(valid)      # (K, D) bool
+        self.fused = fused
+        # flatten/unflatten + layout cache shared with the fused kernels
+        self._pallas = PallasFusedMixer(tile_m=tile_m, interpret=interpret)
+
+    def shard_agent_axis(self, mesh, axis: str) -> None:
+        super().shard_agent_axis(mesh, axis)
+        from jax.sharding import NamedSharding
+
+        from repro.sharding.rules import agent_stack_pspec
+        spec = agent_stack_pspec(mesh, axis, num_agents=self.num_agents,
+                                 ndim=2)
+        sh = NamedSharding(mesh, spec)
+        self.idx = jax.device_put(self.idx, sh)
+        self.valid = jax.device_put(self.valid, sh)
+
+    def _gather_weights(self, A_eff: jax.Array) -> jax.Array:
+        """(K, D) realized weight per table slot; padding slots exactly 0."""
+        K = self.num_agents
+        return (A_eff[self.idx, jnp.arange(K)[:, None]]
+                * self.valid.astype(A_eff.dtype))
+
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array) -> PyTree:
+        A_eff = part.masked_combination(A_t.astype(jnp.float32), active)
+        if self._mesh is not None:
+            params = _constrain_agent_stack(params, self._mesh,
+                                            self._agent_axis)
+        fused = (jax.default_backend() == "tpu"
+                 if self.fused is None else bool(self.fused))
+        if fused:
+            from repro.kernels.diffusion_mix import gather_mix
+            pm = self._pallas
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            lay = pm._layout(leaves, treedef)
+            flat = pm._flatten(leaves, lay)
+            interpret = (jax.default_backend() != "tpu"
+                         if pm.interpret is None else pm.interpret)
+            mixed = gather_mix(self.idx, self._gather_weights(A_eff), flat,
+                               tile_m=lay.tile_m, interpret=interpret)
+            out = pm._unflatten(mixed, leaves, treedef, lay)
+        else:
+            out = mix_gather(A_eff, params, self.idx, self.valid)
+        if self._mesh is not None:
+            out = _constrain_agent_stack(out, self._mesh, self._agent_axis)
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"NeighborGatherMixer(K={self.num_agents}, "
+                f"D={self.max_degree + 1}, fused={self.fused})")
+
+
 # ---------------------------------------------------------------------------
 # robust aggregation (SLSGD, arXiv:1903.06996): Byzantine-tolerant backends
 # ---------------------------------------------------------------------------
@@ -436,12 +597,19 @@ class _SortedRobustMixer(Mixer):
     sorted slots (jit-compatible — S is data, not structure), and every
     contraction keeps ``0 * inf = nan`` out via a where on the weights.
 
-    Cost note: the neighborhood scope sorts all K contributor slots per
-    target row — O(K^2 M log K) work and a (K, K)-shaped broadcast per
-    leaf — even though only max_degree + 1 members per row can ever
-    contribute on a bounded-degree base graph.  Fine at benchmark scale
-    (K <= a few dozen); a bounded-degree member gather / fused top-b
-    kernel is the ROADMAP follow-up for K in the hundreds.
+    Scale: with a neighbor table attached
+    (:meth:`attach_neighbor_table`), the neighborhood scope gathers only
+    the ``D = max_degree + 1`` rows that can ever contribute to each
+    target and sorts those — O(K dmax M log dmax) — instead of sorting
+    all K slots.  Valid whenever the graph process stays
+    ``within_base_support`` (link dropout, gossip matchings, the static
+    graph); :func:`repro.core.graphs.check_mixer_support` attaches and
+    detaches the table automatically per build.  Without a table the
+    all-slots sort runs — O(K^2 M log K) and a (K, K, M) broadcast per
+    leaf — and emits a one-time warning above ``_NEIGHBORHOOD_WARN_K``
+    agents naming the gather escape hatch.  Both paths sort the same
+    finite multiset per (target, coordinate), so they agree to float
+    tolerance (gated in tests/test_scale.py).
     """
 
     linear = False
@@ -456,9 +624,38 @@ class _SortedRobustMixer(Mixer):
         self.num_agents = int(num_agents)
         self.scope = scope
         self.uses_matrix = scope == "neighborhood"
+        self._table: tuple[jax.Array, jax.Array] | None = None
+        # "auto": graphs.check_mixer_support attaches/detaches the table
+        # per build (the skip_dead convention); "table"/"off" are explicit
+        # user choices it never touches (set by make_mixer)
+        self._gather_mode = "auto"
+        self._warned_dense = False
 
-    def _slot_weights(self, S: jax.Array) -> jax.Array:
-        """(K,) weights over ascending sorted slots given S contributors.
+    def attach_neighbor_table(self, topology: topo_lib.Topology) -> None:
+        """Enable the bounded-degree gather for the neighborhood scope.
+
+        ``topology`` must be the BASE topology of the graph process, and
+        every realized matrix must stay within its support (padding slots
+        rely on ``A_eff[idx[k, j], k] * valid[k, j]`` being exactly zero
+        for non-edges).  :func:`repro.core.graphs.check_mixer_support`
+        enforces this at build time.
+        """
+        if topology.num_agents != self.num_agents:
+            raise ValueError(
+                f"neighbor table is for K={topology.num_agents} agents; "
+                f"this mixer has num_agents={self.num_agents}")
+        idx, valid = topology.neighbor_table()
+        self._table = (jnp.asarray(idx), jnp.asarray(valid))
+
+    def detach_neighbor_table(self) -> None:
+        """Drop the gather table (graph may leave the base support)."""
+        self._table = None
+
+    def _slot_weights(self, S: jax.Array,
+                      slots: int | None = None) -> jax.Array:
+        """(slots,) weights over ascending sorted slots given S
+        contributors; ``slots`` defaults to ``num_agents`` (the all-slots
+        sort) and is D = dmax + 1 on the gather path.
 
         Must put zero weight on every slot >= S (those hold +inf), and on
         every slot when S = 0 (nothing to aggregate)."""
@@ -498,6 +695,23 @@ class _SortedRobustMixer(Mixer):
     # -- scope="neighborhood": per-row masked sort over the realized A_t ---
     def _neighborhood(self, params: PyTree, active: jax.Array,
                       A_t: jax.Array) -> PyTree:
+        if self._table is not None:
+            return self._neighborhood_gather(params, active, A_t)
+        if self.num_agents > _NEIGHBORHOOD_WARN_K and not self._warned_dense:
+            self._warned_dense = True
+            import warnings
+            warnings.warn(
+                f"{type(self).__name__}(scope='neighborhood') is running "
+                f"the all-slots sort at K={self.num_agents} — O(K^2 M "
+                "log K) work per block.  If the graph process stays "
+                "within_base_support, attach the bounded-degree gather "
+                "table (mixer.attach_neighbor_table(topology), or build "
+                "through make_mixer(..., topology)/check_mixer_support) "
+                "for O(K dmax M log dmax).", stacklevel=3)
+        return self._neighborhood_dense(params, active, A_t)
+
+    def _neighborhood_dense(self, params: PyTree, active: jax.Array,
+                            A_t: jax.Array) -> PyTree:
         K = self.num_agents
         m = active.astype(jnp.float32)
         A_eff = part.masked_combination(A_t.astype(jnp.float32), active)
@@ -529,6 +743,36 @@ class _SortedRobustMixer(Mixer):
 
         return jax.tree.map(leaf, params)
 
+    # -- neighborhood via the bounded-degree gather table ------------------
+    def _neighborhood_gather(self, params: PyTree, active: jax.Array,
+                             A_t: jax.Array) -> PyTree:
+        K = self.num_agents
+        idx, valid = self._table
+        D = int(idx.shape[1])
+        m = active.astype(jnp.float32)
+        A_eff = part.masked_combination(A_t.astype(jnp.float32), active)
+        # realized weight of slot j for target k — padding slots gather the
+        # self row but valid = 0 zeroes them, so they never join the sort
+        gw = (A_eff[idx, jnp.arange(K)[:, None]]
+              * valid.astype(jnp.float32))                 # (K, D)
+        # slot 0 is self: membership forced (the renormalized self weight
+        # can hit exactly 0), mirroring the all-slots `| eye` term
+        member = (gw != 0).at[:, 0].set(True)              # (K, D)
+        S = member.astype(jnp.float32).sum(axis=1)         # (K,)
+        W = jax.vmap(lambda s: self._slot_weights(s, D))(S)  # (K, D)
+
+        def leaf(p: jax.Array) -> jax.Array:
+            x = p.astype(jnp.float32).reshape(K, -1)       # (K, M)
+            vals = jnp.where(member[:, :, None], x[idx], jnp.inf)  # (K, D, M)
+            srt = jnp.sort(vals, axis=1)
+            wb = W[:, :, None]
+            agg = jnp.sum(jnp.where(wb > 0, srt, 0.0) * wb, axis=1)
+            out = jnp.where(m[:, None] > 0, agg.astype(p.dtype),
+                            p.reshape(K, -1))
+            return out.reshape(p.shape)
+
+        return jax.tree.map(leaf, params)
+
 
 class TrimmedMeanMixer(_SortedRobustMixer):
     """Coordinate-wise trimmed mean (SLSGD eq. 4), global or per
@@ -551,8 +795,10 @@ class TrimmedMeanMixer(_SortedRobustMixer):
             raise ValueError(f"trim={trim} must lie in [0, {num_agents})")
         self.trim = int(trim)
 
-    def _slot_weights(self, S: jax.Array) -> jax.Array:
-        idx = jnp.arange(self.num_agents, dtype=jnp.float32)
+    def _slot_weights(self, S: jax.Array,
+                      slots: int | None = None) -> jax.Array:
+        n = self.num_agents if slots is None else int(slots)
+        idx = jnp.arange(n, dtype=jnp.float32)
         b = jnp.clip(jnp.minimum(float(self.trim),
                                  jnp.floor((S - 1.0) / 2.0)), 0.0)
         keep = ((idx >= b) & (idx < S - b)).astype(jnp.float32)
@@ -570,8 +816,10 @@ class CoordinateMedianMixer(_SortedRobustMixer):
 
     name = "median"
 
-    def _slot_weights(self, S: jax.Array) -> jax.Array:
-        idx = jnp.arange(self.num_agents, dtype=jnp.float32)
+    def _slot_weights(self, S: jax.Array,
+                      slots: int | None = None) -> jax.Array:
+        n = self.num_agents if slots is None else int(slots)
+        idx = jnp.arange(n, dtype=jnp.float32)
         lo = jnp.clip(jnp.floor((S - 1.0) / 2.0), 0.0)
         hi = jnp.clip(jnp.ceil((S - 1.0) / 2.0), 0.0)
         w = 0.5 * ((idx == lo).astype(jnp.float32)
@@ -585,6 +833,86 @@ class CoordinateMedianMixer(_SortedRobustMixer):
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"CoordinateMedianMixer(K={self.num_agents}, "
                 f"scope={self.scope!r})")
+
+
+class FusedNeighborhoodMixer(Mixer):
+    """Neighborhood-robust aggregation through the fused Pallas gather
+    kernel (:func:`repro.kernels.diffusion_mix.gather_robust_mix`).
+
+    Wraps a neighborhood-scope :class:`_SortedRobustMixer` (trimmed mean
+    or median) with a gather table attached and fuses gather + masked
+    bitonic sort + slot-weight contraction in VMEM over the cached (K, M)
+    flatten layout — the :class:`PallasFusedMixer` tile/layout cache is
+    reused, so repeated block steps pay zero layout overhead.  Selected by
+    ``make_mixer(..., gather="fused")``, or by the "auto" policy on TPU
+    when the graph stays on base support.
+
+    ``use_kernel=None`` mirrors ``SparseCirculantMixer.skip_dead``: an
+    auto decision that :func:`repro.core.graphs.check_mixer_support`
+    flips off (delegating to the inner mixer's all-slots sort) when the
+    graph process leaves the base support; an explicit ``True`` makes
+    that a build-time error instead.  The membership mask, contributor
+    count, and slot weights are computed outside the kernel — O(K D)
+    work on (K, D) operands — so only the O(K D M) gather/sort/contract
+    runs fused.
+    """
+
+    linear = False
+    uses_matrix = True
+
+    def __init__(self, inner: "_SortedRobustMixer",
+                 topology: topo_lib.Topology, *, tile_m: int = 512,
+                 interpret: bool | None = None,
+                 use_kernel: bool | None = None):
+        if inner.scope != "neighborhood":
+            raise ValueError(
+                "FusedNeighborhoodMixer fuses the neighborhood scope; got "
+                f"scope={inner.scope!r}")
+        if topology is None:
+            raise ValueError("FusedNeighborhoodMixer needs the base "
+                             "topology (source of the neighbor table)")
+        inner.attach_neighbor_table(topology)
+        self.inner = inner
+        self.name = inner.name
+        self.num_agents = inner.num_agents
+        self.use_kernel = use_kernel
+        self._use_kernel_auto = use_kernel is None
+        self._pallas = PallasFusedMixer(tile_m=tile_m, interpret=interpret)
+
+    def __call__(self, params: PyTree, active: jax.Array,
+                 A_t: jax.Array) -> PyTree:
+        use = True if self.use_kernel is None else bool(self.use_kernel)
+        if not use or self.inner._table is None:
+            return self.inner(params, active, A_t)
+        from repro.kernels.diffusion_mix import gather_robust_mix
+
+        idx, valid = self.inner._table
+        K = self.num_agents
+        D = int(idx.shape[1])
+        A_eff = part.masked_combination(A_t.astype(jnp.float32), active)
+        gw = (A_eff[idx, jnp.arange(K)[:, None]]
+              * valid.astype(jnp.float32))                 # (K, D)
+        member = (gw != 0).at[:, 0].set(True)              # slot 0: self
+        S = member.astype(jnp.float32).sum(axis=1)
+        wslot = jax.vmap(lambda s: self.inner._slot_weights(s, D))(S)
+        pm = self._pallas
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        lay = pm._layout(leaves, treedef)
+        flat = pm._flatten(leaves, lay)
+        interpret = (jax.default_backend() != "tpu"
+                     if pm.interpret is None else pm.interpret)
+        mixed = gather_robust_mix(idx, member.astype(jnp.float32), wslot,
+                                  active.astype(jnp.float32).reshape(K, 1),
+                                  flat, tile_m=lay.tile_m,
+                                  interpret=interpret)
+        # the kernel's inactive branch returns the agent's own f32 row;
+        # the f32 roundtrip is exact for the supported leaf dtypes
+        # (bf16/f16/f32), so the eq.-20 inactive-keep invariant survives
+        return pm._unflatten(mixed, leaves, treedef, lay)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"FusedNeighborhoodMixer({self.inner!r}, "
+                f"use_kernel={self.use_kernel})")
 
 
 # ---------------------------------------------------------------------------
@@ -655,7 +983,14 @@ class CommPipeline:
 
     def __init__(self, mixer: Mixer,
                  compressor: comp_lib.Compressor | None = None,
-                 *, mode: str = "auto", gamma=None, base_A=None):
+                 *, mode: str = "auto", gamma=None, base_A=None,
+                 mesh=None):
+        # mesh: when set, the generic direct int8 path pins the quantized
+        # buffer + per-agent scales with sharding constraints so GSPMD's
+        # collective carries s8 bytes, not the dequantized f32 (the 4x on
+        # the wire — see launch/dryrun collective_stats).  Bit-identical
+        # to mesh=None.
+        self.mesh = mesh
         self.mixer = mixer
         self.compressor = (compressor if compressor is not None
                            else comp_lib.Identity())
@@ -868,6 +1203,47 @@ class CommPipeline:
                                  target, msgs),
                     comm_state)
             return out, comm_state
+        if isinstance(base, comp_lib.Int8Stochastic):
+            # generic (non-Pallas) int8 path: emit the quantized buffer +
+            # per-agent scales through the collective — under GSPMD the
+            # replication constraints below sit on the s8/f32-scale
+            # operands, so the all-gather moves int8 bytes, not the
+            # dequantized float32.  Bit-identical to comp.encode when no
+            # mesh is set (same key stream; exact int8 round-trip).
+            target = (jax.tree.map(lambda p, e: p + e.astype(p.dtype),
+                                   params, comm_state) if ef else params)
+            q, scales = base.encode_quantized(target, key)
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                from repro.sharding.rules import agent_stack_pspec
+                rep = NamedSharding(self.mesh, PartitionSpec())
+                axis = getattr(self.mixer, "_agent_axis", None) or "data"
+
+                def pin(l):
+                    # two constraints, not one: first pin the quantized
+                    # leaf SHARDED on the agent axis, then replicated.
+                    # With only the replicated constraint the SPMD
+                    # partitioner reshards the convert's f32 *input*
+                    # (an f32 all-gather) and converts after; anchoring
+                    # the s8 tensor sharded forces the reshard — the
+                    # actual all-gather — onto the int8 bytes.
+                    spec = agent_stack_pspec(self.mesh, axis,
+                                             num_agents=l.shape[0],
+                                             ndim=l.ndim)
+                    l = jax.lax.with_sharding_constraint(
+                        l, NamedSharding(self.mesh, spec))
+                    return jax.lax.with_sharding_constraint(l, rep)
+
+                q = jax.tree.map(pin, q)
+                scales = jax.tree.map(pin, scales)
+            msgs = base.dequantize(q, scales, target)
+            new_state = (masked(jax.tree.map(lambda t, m_: t - m_, target,
+                                             msgs), comm_state)
+                         if ef else comm_state)
+            mixed = self.mixer(msgs, active, A_t)
+            out = jax.tree.map(lambda p, mx, m_: p + g * (mx - m_), params,
+                               mixed, msgs)
+            return out, new_state
         msgs, new_state = comp.encode(params, comm_state, key)
         if ef:
             new_state = masked(new_state, comm_state)
@@ -897,6 +1273,13 @@ def _resolve_auto(topology: topo_lib.Topology | None,
         offsets = topology.neighbor_offsets_ring()
     if offsets and 0 < len(offsets) <= _AUTO_SPARSE_MAX_OFFSETS:
         return "sparse", offsets
+    if (topology is not None
+            and _AUTO_GATHER_HEADROOM * (topology.max_degree + 1)
+            <= topology.num_agents):
+        # bounded degree but too many distinct offsets for the circulant
+        # path (irregular graphs): the neighbor-table gather still does
+        # O(K dmax M) work vs the dense O(K^2 M)
+        return "gather", offsets
     return "dense", offsets
 
 
@@ -904,19 +1287,21 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
                *, A=None, offsets: Sequence[int] | None = None,
                num_agents: int | None = None, tile_m: int = 512,
                interpret: bool | None = None, trim: int = 1,
-               scope: str = "global") -> Mixer:
+               scope: str = "global", gather: str = "auto") -> Mixer:
     """Build a mixing backend.
 
     The matrix is NOT baked into the mixer — it arrives per call as the
     ``A_t`` operand (see :class:`Mixer`).  ``topology`` / ``A`` here only
     inform the *structure*: the "auto" policy, the circulant offsets of
-    the sparse path, and the agent count.
+    the sparse path, the neighbor table of the gather paths, and the
+    agent count.
 
     Args:
-      name: "dense" | "sparse" | "pallas" | "auto" | "none" |
+      name: "dense" | "sparse" | "pallas" | "gather" | "auto" | "none" |
         "trimmed_mean" | "median", or an existing :class:`Mixer` (returned
         unchanged).
-      topology: source of the circulant offsets / auto policy / K.
+      topology: source of the circulant offsets / neighbor table / auto
+        policy / K.
       A: (K, K) base matrix — used only to infer ``num_agents``.
       offsets: circulant offsets override for the sparse path.
       num_agents: disables mixing when 1 (returns :class:`NullMixer`).
@@ -925,6 +1310,13 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
       scope: robust-aggregation scope — "global" (SLSGD server setting,
         A_t ignored) or "neighborhood" (per-agent over the realized
         neighborhood of A_t).
+      gather: bounded-degree policy for the *neighborhood-robust* scope —
+        "auto" (attach the neighbor table when a topology is given; on
+        TPU additionally fuse via :class:`FusedNeighborhoodMixer`),
+        "table" (vmapped gather, topology required), "fused" (the Pallas
+        gather kernel, topology required), or "off" (the all-slots sort,
+        valid even off base support).  Graph-support validity is enforced
+        later by :func:`repro.core.graphs.check_mixer_support`.
     """
     if isinstance(name, Mixer):
         return name
@@ -941,9 +1333,36 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
         if num_agents is None:
             raise ValueError(f"{name!r} mixer needs num_agents "
                              "(or a topology / A to infer it from)")
-        return (TrimmedMeanMixer(num_agents, trim=trim, scope=scope)
-                if name == "trimmed_mean"
-                else CoordinateMedianMixer(num_agents, scope=scope))
+        if gather not in ("auto", "table", "fused", "off"):
+            raise ValueError(f"gather={gather!r} must be auto|table|"
+                             "fused|off")
+        mixer = (TrimmedMeanMixer(num_agents, trim=trim, scope=scope)
+                 if name == "trimmed_mean"
+                 else CoordinateMedianMixer(num_agents, scope=scope))
+        if scope != "neighborhood":
+            return mixer
+        if gather == "off":
+            mixer._gather_mode = "off"
+            return mixer
+        if gather in ("table", "fused") and topology is None:
+            raise ValueError(
+                f"gather={gather!r} needs the base topology (source of "
+                "the neighbor table) — pass topology=")
+        if topology is None:
+            # auto without structure: all-slots sort for now;
+            # check_mixer_support attaches a table from graph.topology
+            return mixer
+        if (gather == "fused"
+                or (gather == "auto" and jax.default_backend() == "tpu")):
+            # the wrapped inner stays _gather_mode="auto" so an
+            # off-support graph degrades to the all-slots sort instead of
+            # erroring (only use_kernel=True makes that a hard error)
+            return FusedNeighborhoodMixer(mixer, topology, tile_m=tile_m,
+                                          interpret=interpret)
+        mixer.attach_neighbor_table(topology)
+        if gather == "table":
+            mixer._gather_mode = "table"
+        return mixer
     if name == "auto":
         name, offsets = _resolve_auto(topology, offsets)
     if name == "dense":
@@ -955,10 +1374,16 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
                                  "(pass offsets= or a topology)")
             offsets = topology.neighbor_offsets_ring()
         return SparseCirculantMixer(offsets)
+    if name == "gather":
+        if topology is None:
+            raise ValueError("gather mixer needs the base topology "
+                             "(source of the neighbor table)")
+        return NeighborGatherMixer(topology, tile_m=tile_m,
+                                   interpret=interpret)
     if name == "pallas":
         return PallasFusedMixer(tile_m=tile_m, interpret=interpret)
     raise ValueError(f"unknown mixer {name!r} (expected dense|sparse|"
-                     "pallas|auto|none|trimmed_mean|median)")
+                     "pallas|gather|auto|none|trimmed_mean|median)")
 
 
 def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
@@ -969,23 +1394,27 @@ def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,
                   offsets: Sequence[int] | None = None,
                   num_agents: int | None = None, tile_m: int = 512,
                   interpret: bool | None = None,
-                  trim: int = 1, scope: str = "global") -> CommPipeline:
+                  trim: int = 1, scope: str = "global",
+                  gather: str = "auto", mesh=None) -> CommPipeline:
     """Build the full combination pipeline (compressor stage + mixer).
 
     ``mix`` and the mixer kwargs go to :func:`make_mixer`; ``compress`` /
     ``compress_ratio`` / ``error_feedback`` / ``sigma`` go to
     :func:`repro.core.compression.make_compressor`; ``mode`` / ``gamma``
     select the exchange scheme (see :class:`CommPipeline`; ``gamma="auto"``
-    derives its floor from the topology's spectral gap).
+    derives its floor from the topology's spectral gap); ``mesh`` lets the
+    generic int8 path keep the quantized bytes on the wire under GSPMD.
     ``compress=None`` or ``"none"`` yields the bit-identical identity
     pipeline.
     """
     mixer = make_mixer(mix, topology, A=A, offsets=offsets,
                        num_agents=num_agents, tile_m=tile_m,
-                       interpret=interpret, trim=trim, scope=scope)
+                       interpret=interpret, trim=trim, scope=scope,
+                       gather=gather)
     compressor = comp_lib.make_compressor(compress, ratio=compress_ratio,
                                           error_feedback=error_feedback,
                                           sigma=sigma)
     if A is None and topology is not None:
         A = topology.A
-    return CommPipeline(mixer, compressor, mode=mode, gamma=gamma, base_A=A)
+    return CommPipeline(mixer, compressor, mode=mode, gamma=gamma, base_A=A,
+                        mesh=mesh)

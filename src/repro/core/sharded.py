@@ -68,12 +68,15 @@ def make_block_step(
     interpret: bool | None = None,
     trim: int = 1,
     robust_scope: str = "global",
+    robust_gather: str = "auto",
     compress: str | comp_lib.Compressor | None = None,
     compress_ratio: float | None = None,
     compress_sigma: float | None = None,
     error_feedback: bool | None = None,
     comm_mode: str | None = None,
     comm_gamma: float | None = None,
+    mesh=None,
+    agent_axis: str | None = None,
 ) -> Callable:
     """Build the pure block-step function for jit/pjit.
 
@@ -102,9 +105,12 @@ def make_block_step(
         realized A_t is sampled per block inside the jitted step; stateful
         graphs thread their link mask through ``EngineState.graph_state``.
       tile_m / interpret: Pallas mixer knobs.
-      trim / robust_scope: robust-backend knobs (per-side trim count, and
-        "global" vs "neighborhood" aggregation scope — see
-        :class:`repro.core.mixing.TrimmedMeanMixer`).
+      trim / robust_scope / robust_gather: robust-backend knobs (per-side
+        trim count; "global" vs "neighborhood" aggregation scope; and the
+        bounded-degree gather policy "auto" | "table" | "fused" | "off"
+        for the neighborhood scope — see
+        :class:`repro.core.mixing.TrimmedMeanMixer` and
+        :func:`repro.core.mixing.make_mixer`).
       compress / compress_ratio / compress_sigma / error_feedback:
         communication-compression stage
         (:func:`repro.core.compression.make_compressor`); ``compress`` also
@@ -114,6 +120,11 @@ def make_block_step(
       comm_mode / comm_gamma: exchange scheme and consensus step of the
         :class:`repro.core.mixing.CommPipeline` (defaults: config fields;
         "auto" picks diff mode for sparsifiers, direct for int8).
+      mesh / agent_axis: agent-axis sharding for the scale path — when a
+        mesh is given, mixers that materialize the (K, M) stack pin its
+        agent rows to ``agent_axis`` (default "data") via
+        :func:`repro.sharding.rules.agent_stack_pspec`, and the generic
+        int8 pipeline keeps the quantized bytes on the wire under GSPMD.
 
     Returns:
       The unified-contract step function
@@ -133,7 +144,7 @@ def make_block_step(
                               offsets=tuple(offsets) or None,
                               num_agents=K, tile_m=tile_m,
                               interpret=interpret, trim=trim,
-                              scope=robust_scope)
+                              scope=robust_scope, gather=robust_gather)
     A_graph = A
     if topology is None and A is None and not mixer.uses_matrix:
         # mixers that ignore the matrix operand (K = 1 / robust server
@@ -150,8 +161,11 @@ def make_block_step(
         # always-correct backend
         mixer = mixing.make_mixer(resolved, topology, A=A, num_agents=K,
                                   tile_m=tile_m, interpret=interpret,
-                                  trim=trim, scope=robust_scope)
+                                  trim=trim, scope=robust_scope,
+                                  gather=robust_gather)
     graph_lib.check_mixer_support(mixer, graph_proc)
+    if mesh is not None:
+        mixer.shard_agent_axis(mesh, agent_axis or "data")
     compressor = comp_lib.make_compressor(
         compress if compress is not None else config.compress,
         ratio=(compress_ratio if compress_ratio is not None
@@ -164,7 +178,7 @@ def make_block_step(
         mixer, compressor,
         mode=comm_mode if comm_mode is not None else config.comm_mode,
         gamma=comm_gamma if comm_gamma is not None else config.comm_gamma,
-        base_A=topology.A if topology is not None else A)
+        base_A=topology.A if topology is not None else A, mesh=mesh)
     grad_fn = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0, 0))
 
     # key_comm / key_graph come from fold_ins (not a wider split) so the

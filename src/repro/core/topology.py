@@ -211,6 +211,36 @@ class Topology:
         off = self.adjacency & ~np.eye(self.num_agents, dtype=bool)
         return int(off.sum(axis=1).max()) if self.num_agents > 1 else 0
 
+    def neighbor_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Static bounded-degree gather table ``(idx, valid)``.
+
+        ``idx`` is (K, D) int32 with ``D = max_degree + 1``: slot 0 is the
+        agent itself, the following slots list the base-graph neighbors
+        that can ever contribute to it (column support of the adjacency),
+        and padding slots repeat the self index.  ``valid`` is the (K, D)
+        bool mask of real slots — a padding slot gathers the agent's own
+        row but its realized weight ``A_eff[idx[k, j], k] * valid[k, j]``
+        is exactly zero, so padding is inert by construction.
+
+        The table is exhaustive for every realized matrix of a graph
+        process with ``within_base_support`` (link dropout, gossip
+        matchings, the static graph): masked combination only *removes*
+        edges and renormalizes the diagonal, and self is always slot 0.
+        It is NOT valid for processes that realize edges outside the base
+        adjacency (tv_erdos) — ``check_mixer_support`` guards that.
+        """
+        K = self.num_agents
+        D = self.max_degree + 1
+        off = self.adjacency & ~np.eye(K, dtype=bool)
+        idx = np.tile(np.arange(K, dtype=np.int32)[:, None], (1, D))
+        valid = np.zeros((K, D), dtype=bool)
+        valid[:, 0] = True                      # slot 0: self, always heard
+        for k in range(K):
+            nbrs = np.flatnonzero(off[:, k])    # contributors l -> target k
+            idx[k, 1:1 + len(nbrs)] = nbrs
+            valid[k, 1:1 + len(nbrs)] = True
+        return idx, valid
+
     def neighbor_offsets_ring(self) -> Sequence[int]:
         """For ring-like topologies: signed hop offsets with nonzero weight.
 

@@ -10,9 +10,11 @@ tiles M.  K is small (<= 64 agents), so the (K, K) mix lives comfortably in
 VMEM next to a (K, tile_m) parameter tile; tile_m is a multiple of 128 for
 lane alignment.
 
-Two variants:
+Four variants:
 
-* :func:`diffusion_mix` — float32 buffer (the PR-1 kernel).
+* :func:`diffusion_mix` — float32 buffer (the PR-1 kernel).  Materializes
+  the (K, K) matrix per tile: the right shape when K is small (<= a few
+  hundred agents).
 * :func:`diffusion_mix_int8` — the compressed-communication path: the
   buffer arrives *quantized* (int8 values + one float32 scale per (agent,
   tile)) and the kernel fuses dequantize + eq.-20 mask + mix, so only a
@@ -21,6 +23,26 @@ Two variants:
   (A_eff - I)^T C directly, which is what the
   :class:`~repro.core.mixing.CommPipeline` correction  w = psi + mix(c) - c
   consumes.
+* :func:`gather_mix` — the bounded-degree linear path for K >= 1024: each
+  target row gathers its D = dmax + 1 contributor rows through a static
+  neighbor-index table (:meth:`repro.core.topology.Topology.
+  neighbor_table`) and accumulates them with realized weights — O(K D M)
+  instead of the O(K^2 M) dense contraction, and no (K, K) operand ever
+  materializes in VMEM.
+* :func:`gather_robust_mix` — the neighborhood-robust counterpart: gather
+  the D contributor rows, push non-members to +inf, sort the D slots with
+  a static bitonic compare-exchange network (jnp.sort does not lower on
+  TPU), and contract with precomputed per-row order-statistic slot
+  weights (trimmed mean / median) — the fused gather + trim + mix of the
+  O(K dmax M log dmax) neighborhood path.
+
+The gather kernels take the index table as a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``), the supported TPU pattern for
+data-dependent row addressing: the indices land in SMEM before the body
+runs and feed ``pl.ds`` dynamic slices of the (K, tile_m) parameter block.
+The grid is (num_tiles, K) with K innermost, so the parameter tile stays
+resident in VMEM across the whole K sweep and only the tiny per-row
+operands change between programs.
 """
 from __future__ import annotations
 
@@ -29,6 +51,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _masked_matrix(A: jax.Array, m: jax.Array, K: int,
@@ -146,3 +169,152 @@ def diffusion_mix_int8(A: jax.Array, active: jax.Array, Wq: jax.Array,
         out_shape=jax.ShapeDtypeStruct((K, M), jnp.float32),
         interpret=interpret,
     )(A, active.reshape(K, 1), Wq, scales.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# bounded-degree gather kernels (neighbor-table path, K >= 1024)
+# ---------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _bitonic_sort(rows: list) -> list:
+    """Ascending per-lane bitonic sort of a power-of-2 list of equal-shape
+    rows, built from jnp.minimum/maximum compare-exchanges only (static
+    network — the TPU-lowerable replacement for jnp.sort over a tiny,
+    statically known slot axis)."""
+    n = len(rows)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            for i in range(n):
+                partner = i ^ j
+                if partner > i:
+                    lo = jnp.minimum(rows[i], rows[partner])
+                    hi = jnp.maximum(rows[i], rows[partner])
+                    if (i & k) == 0:
+                        rows[i], rows[partner] = lo, hi
+                    else:
+                        rows[i], rows[partner] = hi, lo
+            j //= 2
+        k *= 2
+    return rows
+
+
+def _gather_rows(idx_ref, w_ref, k: int, D: int) -> list:
+    """The D contributor rows of target k, via SMEM-prefetched indices."""
+    return [w_ref[pl.ds(idx_ref[k, j], 1), :] for j in range(D)]
+
+
+def _gather_mix_kernel(idx_ref, gw_ref, w_ref, o_ref, *, D: int):
+    k = pl.program_id(1)
+    rows = _gather_rows(idx_ref, w_ref, k, D)
+    acc = gw_ref[0, 0] * rows[0]
+    for j in range(1, D):
+        acc = acc + gw_ref[0, j] * rows[j]
+    o_ref[...] = acc
+
+
+def _gather_robust_kernel(idx_ref, mem_ref, ws_ref, act_ref, w_ref, o_ref, *,
+                          D: int):
+    k = pl.program_id(1)
+    rows = _gather_rows(idx_ref, w_ref, k, D)
+    own = rows[0]                                     # slot 0 is self
+    # non-members (and padding slots) to +inf so the S_k live values
+    # occupy the first S_k ascending slots, exactly like the all-slots sort
+    vals = [jnp.where(mem_ref[0, j] > 0, rows[j], jnp.inf) for j in range(D)]
+    P = _next_pow2(D)
+    vals += [jnp.full_like(own, jnp.inf)] * (P - D)
+    srt = _bitonic_sort(vals)
+    # weights are zero on every slot >= S_k (those hold +inf); the where
+    # keeps 0 * inf = nan out of the contraction
+    acc = jnp.zeros_like(own)
+    for j in range(D):                                # slots >= D unweighted
+        wj = ws_ref[0, j]
+        acc = acc + jnp.where(wj > 0, srt[j], 0.0) * wj
+    # inactive targets keep their own row exactly (eq.-20 invariant)
+    o_ref[...] = jnp.where(act_ref[0, 0] > 0, acc, own)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def gather_mix(idx: jax.Array, gw: jax.Array, W: jax.Array, *,
+               tile_m: int = 512, interpret: bool = False) -> jax.Array:
+    """Bounded-degree linear combination over flattened stacked parameters.
+
+    Args:
+      idx: (K, D) int32 neighbor table (slot 0 = self; padding = self).
+      gw: (K, D) float32 realized gathered weights
+        ``A_eff[idx[k, j], k] * valid[k, j]`` — padding slots exactly 0.
+      W: (K, M) float32 stacked flattened parameters; M % tile_m == 0.
+    Returns:
+      (K, M) mixed parameters: out[k] = sum_j gw[k, j] * W[idx[k, j]].
+    """
+    K, M = W.shape
+    D = idx.shape[1]
+    if M % tile_m:
+        raise ValueError(f"M={M} not divisible by tile_m={tile_m}")
+    nm = M // tile_m
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nm, K),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda mi, k, idx_ref: (k, 0)),
+            pl.BlockSpec((K, tile_m), lambda mi, k, idx_ref: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_m), lambda mi, k, idx_ref: (k, mi)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_mix_kernel, D=D),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, M), jnp.float32),
+        interpret=interpret,
+    )(idx, gw.astype(jnp.float32), W.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def gather_robust_mix(idx: jax.Array, member: jax.Array, wslot: jax.Array,
+                      active: jax.Array, W: jax.Array, *, tile_m: int = 512,
+                      interpret: bool = False) -> jax.Array:
+    """Fused neighborhood gather + trimmed top-b selection + mix.
+
+    Args:
+      idx: (K, D) int32 neighbor table (slot 0 = self; padding = self).
+      member: (K, D) float32 {0,1} realized membership (self slot always 1,
+        padding slots always 0).
+      wslot: (K, D) float32 order-statistic slot weights over the ascending
+        sorted member values (rows of ``_slot_weights(S_k, D)`` — trimmed
+        mean or median); zero on every slot >= S_k.
+      active: (K,) activation mask in {0, 1}; inactive targets keep their
+        own row exactly.
+      W: (K, M) float32 stacked flattened parameters; M % tile_m == 0.
+    Returns:
+      (K, M) robust-aggregated parameters.
+    """
+    K, M = W.shape
+    D = idx.shape[1]
+    if M % tile_m:
+        raise ValueError(f"M={M} not divisible by tile_m={tile_m}")
+    nm = M // tile_m
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nm, K),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda mi, k, idx_ref: (k, 0)),
+            pl.BlockSpec((1, D), lambda mi, k, idx_ref: (k, 0)),
+            pl.BlockSpec((1, 1), lambda mi, k, idx_ref: (k, 0)),
+            pl.BlockSpec((K, tile_m), lambda mi, k, idx_ref: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_m), lambda mi, k, idx_ref: (k, mi)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_robust_kernel, D=D),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, M), jnp.float32),
+        interpret=interpret,
+    )(idx, member.astype(jnp.float32), wslot.astype(jnp.float32),
+      active.astype(jnp.float32).reshape(K, 1), W.astype(jnp.float32))

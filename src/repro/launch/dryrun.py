@@ -129,7 +129,8 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                      compress_ratio: float = 0.1, compress_sigma: float = 0.0,
                      error_feedback: bool = False, graph: str = "static",
                      graph_kwargs: tuple = (), trim: int = 1,
-                     robust_scope: str = "global"):
+                     robust_scope: str = "global",
+                     robust_gather: str = "auto"):
     cfg = bundle.model
     pc = bundle.parallel
     tp = pc.tp if tp is None else tp
@@ -155,7 +156,9 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                                  compress_ratio=compress_ratio,
                                  compress_sigma=compress_sigma,
                                  error_feedback=error_feedback,
-                                 trim=trim, robust_scope=robust_scope)
+                                 trim=trim, robust_scope=robust_scope,
+                                 robust_gather=robust_gather,
+                                 mesh=mesh, agent_axis=agent_axis)
 
     # shardings
     inner = sh.param_pspecs(tf.param_specs(cfg), mesh, fsdp=pc.fsdp, tp=tp)
@@ -377,7 +380,8 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                compress_ratio: float = 0.1, compress_sigma: float = 0.0,
                error_feedback: bool = False, graph: str = "static",
                graph_kwargs: tuple = (), trim: int = 1,
-               robust_scope: str = "global") -> dict:
+               robust_scope: str = "global",
+               robust_gather: str = "auto") -> dict:
     multi_pod = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = get_config(arch)
@@ -394,7 +398,8 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                                               graph=graph,
                                               graph_kwargs=graph_kwargs,
                                               trim=trim,
-                                              robust_scope=robust_scope)
+                                              robust_scope=robust_scope,
+                                              robust_gather=robust_gather)
     elif shape.kind == "prefill":
         step, args, out_sh = build_prefill_step(bundle, shape, mesh, multi_pod)
     else:
@@ -446,6 +451,13 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
 
 
 def main():
+    # threefry lowering GSPMD can shard: without it the int8 pipeline's
+    # stochastic rounding replicates its f32 input (an f32 all-gather on
+    # the wire) instead of all-gathering the s8 buffer.  The flag changes
+    # the values the RNG emits, so it is scoped to the compile-only CLI
+    # entry point — never set at import time where it would bleed into a
+    # training process that imports this module.
+    jax.config.update("jax_threefry_partitionable", True)
     ap = argparse.ArgumentParser()
     # the spec-mapped flags are the SAME shared set train/serve use
     # (repro/api/cli.py) — drivers cannot drift on names or defaults.
@@ -497,7 +509,8 @@ def main():
                              graph=spec.graph.kind,
                              graph_kwargs=spec.graph_kwargs(),
                              trim=spec.mixer.trim,
-                             robust_scope=spec.mixer.scope)
+                             robust_scope=spec.mixer.scope,
+                             robust_gather=spec.mixer.gather)
             with open(out_path, "w") as f:
                 json.dump(res, f, indent=1)
             print(f"OK   {tag}: compile={res['compile_seconds']}s "

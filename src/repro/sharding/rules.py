@@ -23,8 +23,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
-__all__ = ["param_pspecs", "add_agent_axis", "batch_pspec", "cache_pspecs",
-           "named"]
+__all__ = ["param_pspecs", "add_agent_axis", "agent_stack_pspec",
+           "batch_pspec", "cache_pspecs", "named"]
 
 
 def _axsize(mesh: Mesh, axis) -> int:
@@ -127,6 +127,24 @@ def add_agent_axis(pspecs: PyTree, agent_axis: str | None) -> PyTree:
     """Prepend the agent axis to every leaf spec (stacked-agent layout)."""
     return jax.tree.map(lambda s: P(agent_axis, *tuple(s)), pspecs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def agent_stack_pspec(mesh: Mesh, agent_axis: str | None, *,
+                      num_agents: int, ndim: int = 2) -> P:
+    """Spec for an agent-stacked operand (K, ...): the leading K axis over
+    ``agent_axis``, everything else replicated.
+
+    This is the scale rule for K >= 1024: the (K, M) parameter stack, the
+    (K, D) neighbor-index table, and the robust gather intermediates all
+    shard their agent rows across the mesh dimension, so no device ever
+    holds K model copies in HBM.  Divisibility-guarded like every other
+    rule — a K that does not divide the axis size falls back to
+    replicated (correct, just less sharded), as does an axis name the
+    mesh does not carry.
+    """
+    if agent_axis is not None and agent_axis not in mesh.shape:
+        agent_axis = None
+    return P(_maybe(mesh, agent_axis, num_agents), *([None] * (ndim - 1)))
 
 
 def batch_pspec(mesh: Mesh, *, agent_axis: str | None, ndim: int,

@@ -9,9 +9,9 @@ import pytest
 
 from repro.core import (CyclicGroups, DenseMixer, DiffusionConfig,
                         DiffusionEngine, IIDBernoulli, MarkovAvailability,
-                        NullMixer, PallasFusedMixer, SparseCirculantMixer,
-                        make_mixer, make_topology, masked_combination,
-                        mix_dense, sample_active)
+                        NeighborGatherMixer, NullMixer, PallasFusedMixer,
+                        SparseCirculantMixer, make_mixer, make_topology,
+                        masked_combination, mix_dense, sample_active)
 from repro.core import schedules
 from repro.data.synthetic import make_block_sampler, make_regression_problem
 
@@ -122,7 +122,9 @@ def test_make_mixer_auto_policy_and_errors():
         assert isinstance(auto_ring, SparseCirculantMixer)
         assert isinstance(auto_fedavg, DenseMixer)
         if len(erdos.neighbor_offsets_ring()) > 8:
-            assert isinstance(auto_erdos, DenseMixer)
+            # too many circulant offsets for sparse, but bounded degree:
+            # auto now takes the O(K*dmax) gather path instead of dense
+            assert isinstance(auto_erdos, NeighborGatherMixer)
     assert isinstance(make_mixer("none", ring), NullMixer)
     assert isinstance(make_mixer("dense", None, A=ring.A), DenseMixer)
     assert isinstance(make_mixer(auto_ring), type(auto_ring))  # passthrough
