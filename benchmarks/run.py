@@ -16,6 +16,7 @@ writing.
 """
 from __future__ import annotations
 
+import gc
 import json
 import os
 import subprocess
@@ -41,6 +42,20 @@ def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
     _ROWS.append({"name": name, "us_per_call": round(us, 1),
                   "derived": derived})
+
+
+def _time_us(fn, *, reps: int, warm: int = 1):
+    """Wall-clock a jitted thunk: ``warm`` untimed calls (compile +
+    autotune), then ``reps`` timed calls blocking on the output pytree
+    each time.  Returns (last output, us per call) — the pattern every
+    timed bench used to hand-roll."""
+    out = None
+    for _ in range(warm):
+        out = jax.block_until_ready(fn())
+    t0 = time.time()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn())
+    return out, (time.time() - t0) / reps * 1e6
 
 
 def _git_rev() -> str:
@@ -420,13 +435,7 @@ def bench_mix_backends():
                                      topology=topo, tile_m=2048)
         step = jax.jit(block_step)
         st0 = block_step.init_state(params)
-        st, _ = step(st0, data, key)                # compile + warm
-        jax.block_until_ready(st.params)
-        t0 = time.time()
-        for _ in range(reps):
-            st, _ = step(st0, data, key)
-            jax.block_until_ready(st.params)
-        us = (time.time() - t0) / reps * 1e6
+        (st, _), us = _time_us(lambda: step(st0, data, key), reps=reps)
         flat[name] = np.concatenate(
             [np.asarray(l, np.float32).reshape(K, -1)
              for l in jax.tree.leaves(st.params)], axis=1)
@@ -487,13 +496,7 @@ def bench_compression():
         ratios[label] = dense_bytes / max(wire, 1)
         jit_step = jax.jit(step)
         st0 = step.init_state(params)
-        out, _ = jit_step(st0, data, key)                      # compile
-        jax.block_until_ready(out.params)
-        t0 = time.time()
-        for _ in range(reps):
-            out, _ = jit_step(st0, data, key)
-            jax.block_until_ready(out.params)
-        us = (time.time() - t0) / reps * 1e6
+        _, us = _time_us(lambda: jit_step(st0, data, key), reps=reps)
         _row(f"compress_{label}", us,
              f"wire_bytes={wire};reduction={ratios[label]:.2f}x;"
              f"mode={step.pipeline.mode}")
@@ -800,11 +803,8 @@ def bench_kernel_micro():
     k = jax.random.normal(key, (B, S, Kv, D), jnp.float32)
     v = jax.random.normal(key, (B, S, Kv, D), jnp.float32)
     f = jax.jit(lambda q, k, v: flash_attention_jnp(q, k, v))
-    f(q, k, v).block_until_ready()
-    t0 = time.time()
-    for _ in range(5):
-        f(q, k, v).block_until_ready()
-    _row("kernel_flash_attn_2k", (time.time() - t0) / 5 * 1e6, f"S={S};H={H}")
+    _, us = _time_us(lambda: f(q, k, v), reps=5)
+    _row("kernel_flash_attn_2k", us, f"S={S};H={H}")
 
     b, s, h, p, n = 1, 2048, 8, 64, 64
     x = jax.random.normal(key, (b, s, h, p))
@@ -813,11 +813,8 @@ def bench_kernel_micro():
     Bm = jax.random.normal(key, (b, s, n))
     Cm = jax.random.normal(key, (b, s, n))
     g = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
-    g(x, dt, A, Bm, Cm).block_until_ready()
-    t0 = time.time()
-    for _ in range(5):
-        g(x, dt, A, Bm, Cm).block_until_ready()
-    _row("kernel_ssd_2k", (time.time() - t0) / 5 * 1e6, f"s={s};h={h}")
+    _, us = _time_us(lambda: g(x, dt, A, Bm, Cm), reps=5)
+    _row("kernel_ssd_2k", us, f"s={s};h={h}")
 
     K = 16
     topo = make_topology("ring", K)
@@ -827,11 +824,8 @@ def bench_kernel_micro():
     for name in ("dense", "sparse", "pallas"):
         mixer = make_mixer(name, topo, tile_m=4096)
         jf = jax.jit(lambda W_, m_, A_, mx=mixer: mx(W_, m_, A_))
-        jf(W, m, A)["w"].block_until_ready()
-        t0 = time.time()
-        for _ in range(10):
-            jf(W, m, A)["w"].block_until_ready()
-        _row(f"kernel_mix_{name}_8M", (time.time() - t0) / 10 * 1e6, f"K={K}")
+        _, us = _time_us(lambda: jf(W, m, A), reps=10)
+        _row(f"kernel_mix_{name}_8M", us, f"K={K}")
 
 
 def bench_scale_K():
@@ -860,12 +854,7 @@ def bench_scale_K():
 
     def timed(mixer, W, m, A):
         jf = jax.jit(lambda W_, m_, A_, mx=mixer: mx(W_, m_, A_))
-        out = jf(W, m, A)
-        jax.block_until_ready(out)
-        t0 = time.time()
-        for _ in range(reps):
-            jax.block_until_ready(jf(W, m, A))
-        return out, (time.time() - t0) / reps * 1e6
+        return _time_us(lambda: jf(W, m, A), reps=reps)
 
     for K in (64, 256, 1024):
         topo = make_topology("ring", K)
@@ -917,6 +906,158 @@ def bench_scale_K():
          f"ratio={ratio:.2f};ok={ratio < 3.0}")
 
 
+def bench_serve():
+    """Serving-path benchmark (EXPERIMENTS.md §Serving).
+
+    (1) tokens/s and p50/p99 per-token latency for the per-token py loop
+    vs the fused lax.scan decode loop at several (batch, prompt, decode)
+    shapes on the smollm smoke config — plus the greedy token-parity and
+    the >= 3x fused-over-py acceptance gate at batch 4 / decode 64 (the
+    py loop pays one dispatch + host sync per token; the fused loop pays
+    one per generation).
+    (2) f32 vs int8 consensus extraction on a K-stacked transformer:
+    wall clock and the consensus MSD the quantized collapse costs.
+    (3) Swap-under-load: the continuous ServeLoop with a param swap
+    published after every tick (>= 8 swaps mid-decode), every emitted
+    token replayed against its recorded checkpoint generation — the
+    no-torn-update gate of the double-buffered ParamStore."""
+    from repro.configs import get_config
+    from repro.core.serving import consensus_from_stacked
+    from repro.launch.serving import Request, ServeLoop, replay_completion
+    from repro.models import transformer as tf
+
+    cfg = get_config("smollm_360m").smoke
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+
+    shapes = (((1, 32, 32), (4, 32, 64)) if FAST
+              else ((1, 32, 32), (4, 32, 64), (8, 64, 64)))
+    speedup = {}
+    parity = []
+    for B, P, D in shapes:
+        prompts = jax.random.randint(jax.random.fold_in(
+            jax.random.PRNGKey(1), B * P), (B, P), 0, cfg.vocab_size)
+        max_len = P + D
+        prefill = jax.jit(
+            lambda p, t, ml=max_len: tf.prefill(p, cfg, t, max_len=ml))
+        logits, cache = prefill(params, prompts)
+        logits = jax.block_until_ready(logits[:, -1])
+
+        # py loop: one dispatch + host sync per token; per-token latency
+        # is measured directly (the p50/p99 a caller would see)
+        decode1 = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
+
+        def py_generate(lg=logits, c=cache):
+            toks, lats = [], []
+            for _ in range(D):
+                t0 = time.time()
+                nxt = tf.sample_logits(lg, None, 0.0)
+                out, c = decode1(params, c, nxt[:, None])
+                lg = jax.block_until_ready(out[:, 0])
+                # the device->host token fetch is part of what a caller
+                # waits for per token — it belongs inside the timed window
+                toks.append(np.asarray(nxt))
+                lats.append(time.time() - t0)
+            return np.stack(toks, axis=1), lats
+
+        # wall clock on a loaded box is noisy; both loops are measured as
+        # the MEDIAN of `runs` full generations so one slow/fast outlier
+        # on either side cannot swing the speedup gate
+        runs = 3 if FAST else 5
+        gc.collect()                                 # no GC pauses mid-timing
+        py_generate()                                # compile + warm
+        py_runs = sorted((py_generate() for _ in range(runs)),
+                         key=lambda r: sum(r[1]))
+        py_toks, lats = py_runs[runs // 2]
+        t_py = sum(lats)
+        p50, p99 = np.percentile(np.asarray(lats) * 1e6, [50, 99])
+        _row(f"serve_py_B{B}_P{P}_D{D}", t_py / D * 1e6,
+             f"tok_s={B * D / t_py:.1f};p50_us={p50:.0f};p99_us={p99:.0f}")
+
+        # fused loop: the whole generation is one dispatch; every token
+        # shares the dispatch, so per-token p50 == p99 == total/D.  The
+        # params are CLOSED OVER, not passed as an argument — a serve
+        # process holds one checkpoint for its lifetime, and weights that
+        # are jit constants let XLA fold/pre-layout them (measured ~1.6x
+        # per token on CPU vs argument weights; see EXPERIMENTS.md)
+        fused = jax.jit(lambda c, lg, d=D: tf.decode_loop(
+            params, cfg, c, lg, None, d, temperature=0.0))
+        gc.collect()
+        for _ in range(2):                           # compile + settle
+            ftoks = np.asarray(fused(cache, logits)[0])
+        f_reps = runs + 2
+        f_ts = []
+        for _ in range(f_reps):
+            t0 = time.time()
+            np.asarray(fused(cache, logits)[0])
+            f_ts.append(time.time() - t0)
+        us_total = sorted(f_ts)[f_reps // 2] * 1e6
+        us_tok = us_total / D
+        _row(f"serve_fused_B{B}_P{P}_D{D}", us_tok,
+             f"tok_s={B * D / (us_total / 1e6):.1f};p50_us={us_tok:.0f};"
+             f"p99_us={us_tok:.0f}")
+        speedup[(B, P, D)] = t_py * 1e6 / us_total
+        parity.append(bool(np.array_equal(py_toks, np.asarray(ftoks))))
+
+    # acceptance gates: greedy bit-parity at every shape; fused >= 3x
+    # tokens/s over the py loop at batch 4 / decode 64
+    _row("serve_loop_parity", 0.0,
+         f"shapes={len(parity)};ok={all(parity)}")
+    s = speedup[(4, 32, 64)]
+    _row("serve_fused_speedup", 0.0,
+         f"B4_P32_D64={s:.2f}x;ok={s >= 3.0}")
+
+    # f32 vs int8 consensus extraction: K-stacked smoke transformer
+    K = 4 if FAST else 8
+    stacked = jax.vmap(lambda k: tf.init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(2), K))
+    reps = 2 if FAST else 5
+    c_f32, us_f = _time_us(
+        lambda: consensus_from_stacked(stacked, K), reps=reps)
+    _row("serve_consensus_f32", us_f, f"K={K}")
+    c_i8, us_i = _time_us(
+        lambda: consensus_from_stacked(stacked, K, quantize="int8"),
+        reps=reps)
+    sq_err = sq_ref = 0.0
+    for a, b in zip(jax.tree.leaves(c_f32), jax.tree.leaves(c_i8)):
+        a = np.asarray(a, np.float64)
+        sq_err += float(np.sum((a - np.asarray(b, np.float64)) ** 2))
+        sq_ref += float(np.sum(a ** 2))
+    rel = sq_err / max(sq_ref, 1e-30)
+    _row("serve_consensus_int8", us_i,
+         f"K={K};msd_vs_f32={sq_err:.3e};rel={rel:.3e};ok={rel < 1e-3}")
+
+    # swap-under-load: publish a new generation after EVERY tick while
+    # the slot-batched loop decodes; replay each completion against its
+    # recorded generation schedule (untimed correctness row)
+    loop = ServeLoop(cfg, params, slots=2, max_len=48, chunk=2)
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i, max_new_tokens=12,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(8 + i,)).astype(np.int32))
+            for i in range(4)]
+    for r in reqs:
+        loop.submit(r)
+    params_by_gen, done = {0: params}, []
+    while loop._queue or loop.active:
+        done.extend(loop.step())
+        g = loop.store.generation + 1
+        newp = jax.tree.map(lambda x, s=g: x * (1.0 + 0.02 * s), params)
+        params_by_gen[loop.store.swap(newp)] = newp
+    swaps = loop.store.generation
+    try:
+        spans = [replay_completion(cfg, params_by_gen, c, max_len=48)
+                 for c in done]
+        torn = False
+    except AssertionError:
+        spans, torn = [], True
+    ok = (not torn and swaps >= 8 and len(done) == len(reqs)
+          and max(spans) > 1)
+    _row("serve_swap_under_load", 0.0,
+         f"swaps={swaps};completions={len(done)};"
+         f"max_generations_spanned={max(spans) if spans else 0};"
+         f"torn={torn};ok={ok}")
+
+
 ALL_BENCHES = (
     bench_fig5_msd_vs_theory,
     bench_fig6_participation,
@@ -933,6 +1074,7 @@ ALL_BENCHES = (
     bench_byzantine,
     bench_kernel_micro,
     bench_scale_K,
+    bench_serve,
 )
 
 
@@ -1044,6 +1186,13 @@ def main(argv=None) -> None:
                 if 0 < other < r["us_per_call"]:
                     r["us_per_call"] = other
             regressions += _check_rows(bench.__name__, rows)
+            # acceptance gates (parity, speedup, no-torn-update, ...) are
+            # reported as ok=... in the derived column; --check fails on
+            # any ok=False regardless of the wall-clock baseline
+            regressions += [
+                f"{bench.__name__}/{r['name']}: acceptance gate failed "
+                f"({r['derived']})"
+                for r in rows if "ok=False" in r.get("derived", "")]
         else:
             _append_bench_json(bench.__name__, rows, rev)
     _ROWS.clear()

@@ -9,7 +9,6 @@ multi-codebook audio.
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import transformer as tf
@@ -28,17 +27,17 @@ def serve(arch: str):
 
     prefill = jax.jit(lambda p, t: tf.prefill(p, cfg, t,
                                               max_len=PROMPT + DECODE))
-    decode = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
+    # sampling lives inside the jitted lax.scan step: the whole greedy
+    # generation is ONE dispatch (see repro.models.transformer.decode_loop).
+    # params are a jit constant (closed over, not an argument): the server
+    # holds one checkpoint, and constant weights decode measurably faster
+    decode = jax.jit(lambda c, lg: tf.decode_loop(params, cfg, c, lg, None,
+                                                  DECODE, temperature=0.0))
 
     t0 = time.time()
     logits, cache = prefill(params, prompts)
-    toks = []
-    for _ in range(DECODE):
-        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-        tok = (nxt.reshape(B, 1) if not cfg.num_codebooks
-               else nxt.reshape(B, 1, cfg.num_codebooks))
-        toks.append(tok)
-        logits, cache = decode(params, cache, tok)
+    toks, _, cache = decode(cache, logits[:, -1])
+    toks = jax.block_until_ready(toks)
     dt = time.time() - t0
     print(f"{arch:20s} family={cfg.family:6s} prompt={PROMPT} "
           f"decoded={DECODE} tokens in {dt:.2f}s "

@@ -105,7 +105,7 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                    help="reduced smoke config (default)")
     g.add_argument("--full", dest="smoke", action="store_false",
                    help="full-size model config")
-    g.add_argument("--agents", type=int, default=4,
+    g.add_argument("--agents", type=int, default=4, action=_Track,
                    help="K (RunSpec.num_agents)")
     g.add_argument("--local-steps", type=int, default=2,
                    help="T (RunSpec.local_steps)")

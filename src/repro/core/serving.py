@@ -1,0 +1,168 @@
+"""Serving-side primitives: consensus extraction and the double-buffered
+parameter store.
+
+Two pieces that the serving stack (:mod:`repro.launch.serve` one-shot CLI,
+:mod:`repro.launch.serving` continuous-batching loop) shares:
+
+* :func:`consensus_from_stacked` — collapse a ``(K, ...)``-stacked agent
+  checkpoint to the consensus model through the mixing layer, over the
+  topology it was trained on.  ``quantize="int8"`` runs the collapse from
+  int8-quantized leaves (:class:`repro.core.compression.Int8Stochastic`
+  ``encode_quantized``/``dequantize`` — the same quantizer the
+  ``CommPipeline`` keeps on the wire during training), so the resident
+  agent stack between checkpoint load and collapse is 4x smaller — the
+  memory-bound regime at K = 1024, where the f32 ``(K, M)`` stack is the
+  HBM hog the agent-axis sharding exists to dodge.
+* :class:`ParamStore` — a generation-counted double buffer for swapping a
+  new consensus under live decode traffic (watch mode) without a torn
+  update.
+"""
+from __future__ import annotations
+
+import threading
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Int8Stochastic
+from repro.core.mixing import NullMixer, SparseCirculantMixer, make_mixer
+from repro.core.topology import averaging_matrix, make_topology, spectral_gap
+
+PyTree = Any
+
+__all__ = ["consensus_from_stacked", "ParamStore", "CONSENSUS_QUANTIZE"]
+
+_CONSENSUS_MAX_ROUNDS = 512
+
+#: accepted values for the ``quantize`` argument / the --consensus-quantize
+#: serve flag
+CONSENSUS_QUANTIZE = ("none", "int8")
+
+
+def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
+                           trim: int = 1, scope: str = "global",
+                           topology=None, quantize: str | None = None,
+                           quantize_seed: int = 0):
+    """Collapse (K, ...)-stacked agent params to the consensus model via
+    the mixing layer, over the topology the checkpoint was TRAINED on.
+
+    With the default ``topology=None`` (spec-less checkpoints) the base
+    graph is FedAvg and one all-active combination step makes every agent
+    hold the exact network mean — bit-identical to the legacy path.  With
+    an explicit topology:
+
+    * linear backends with arbitrary matrix support (dense / pallas) take
+      the exact (1/K) 11^T averaging matrix as their ``A_t`` operand — one
+      step, exact mean, any K;
+    * the sparse backend only moves bytes along its trained circulant
+      offsets, so the base-topology combination step is iterated until the
+      spectral gap has contracted the disagreement below f32 resolution
+      (capped at ``_CONSENSUS_MAX_ROUNDS`` with a warning when the cap
+      truncates convergence — very large sparse graphs should re-extract
+      with ``--mix dense``);
+    * matrix-oblivious backends (global robust aggregation, NullMixer)
+      apply once — iterating an idempotent aggregate is pure waste — and
+      the neighborhood-scoped robust backends iterate the trained
+      neighborhood structure (a robust local-consensus sweep).
+
+    ``quantize="int8"`` first re-encodes every stacked leaf with the
+    training-side int8 stochastic quantizer (per-agent scales, unbiased)
+    and collapses from the dequantized leaves; the encode+collapse is
+    leaf-streamed under jit, so peak live memory is the int8 stack plus
+    ONE f32 leaf instead of the full f32 stack.  Deterministic given
+    ``quantize_seed``.
+
+    Take agent 0 at the end.
+    """
+    if quantize not in (None,) + CONSENSUS_QUANTIZE:
+        raise ValueError(f"quantize={quantize!r} not in {CONSENSUS_QUANTIZE}")
+    if quantize == "int8":
+        comp = Int8Stochastic()
+        q, scales = comp.encode_quantized(
+            stacked, jax.random.PRNGKey(quantize_seed))
+        stacked = comp.dequantize(q, scales, stacked)
+    topo = topology if topology is not None else make_topology("fedavg", K)
+    mixer = make_mixer(mix, topo, num_agents=K, trim=trim, scope=scope)
+    A = jnp.asarray(topo.A, jnp.float32)
+    ones = jnp.ones((K,), jnp.float32)
+    gap = spectral_gap(topo.A)
+    # backends that cannot apply an arbitrary matrix: sparse (bytes move
+    # only along trained offsets) and the non-linear robust aggregates
+    needs_support = isinstance(mixer, SparseCirculantMixer) or not mixer.linear
+    if (gap >= 1.0 - 1e-9 or isinstance(mixer, NullMixer)
+            or not getattr(mixer, "uses_matrix", True)):
+        rounds = 1
+    elif not needs_support:
+        # dense / pallas apply ANY matrix: one exact averaging step
+        A = jnp.asarray(averaging_matrix(K), jnp.float32)
+        rounds = 1
+    else:
+        # ||disagreement|| contracts by (1 - gap) per linear step: stop
+        # once the residual is below f32 resolution (offline path, not a
+        # hot loop)
+        needed = int(max(1, np.ceil(np.log(1e-7)
+                                    / np.log(max(1.0 - gap, 1e-12)))))
+        rounds = min(_CONSENSUS_MAX_ROUNDS, needed)
+        if rounds < needed:
+            warnings.warn(
+                f"consensus extraction capped at {rounds} combination "
+                f"rounds but the topology's spectral gap ({gap:.2e}) "
+                f"needs ~{needed} to converge — ~"
+                f"{(1.0 - gap) ** rounds:.0%} of the disagreement "
+                "remains; re-extract with --mix dense for the exact mean",
+                stacklevel=2)
+    mixed = stacked
+    for _ in range(rounds):
+        mixed = mixer(mixed, ones, A)
+    return jax.tree.map(lambda x: x[0], mixed)
+
+
+class ParamStore:
+    """Generation-counted double buffer for the served parameters.
+
+    Two parameter buffers plus a monotonically increasing generation
+    counter.  :meth:`swap` fills the INACTIVE buffer and then atomically
+    publishes ``(buffer index, generation)``; :meth:`snapshot` returns the
+    ``(params, generation)`` pair under the same lock, so a reader can
+    never observe a half-published update.  Because jax device buffers are
+    immutable, a decode that captured a snapshot keeps computing against
+    exactly that checkpoint no matter how many swaps land while it runs —
+    the double buffer makes the swap itself cheap (no copy of the live
+    params) and the generation counter makes every emitted token
+    attributable to exactly one checkpoint generation (the serve loop
+    records it per token; ``tests/test_serving.py`` replays the recorded
+    schedule to prove no token ever mixed two generations).
+    """
+
+    def __init__(self, params: PyTree):
+        self._buffers = [params, params]
+        self._active = 0
+        self._generation = 0
+        self._lock = threading.Lock()
+
+    @property
+    def generation(self) -> int:
+        with self._lock:
+            return self._generation
+
+    def snapshot(self) -> tuple[PyTree, int]:
+        """The active params and their generation, as one consistent pair."""
+        with self._lock:
+            return self._buffers[self._active], self._generation
+
+    def swap(self, new_params: PyTree) -> int:
+        """Publish ``new_params`` as the next generation; returns it.
+
+        The inactive buffer is filled first and only the (index,
+        generation) pair flips under the lock — in-flight readers keep the
+        previous snapshot untouched.
+        """
+        nxt = 1 - self._active
+        self._buffers[nxt] = new_params
+        with self._lock:
+            self._active = nxt
+            self._generation += 1
+            return self._generation

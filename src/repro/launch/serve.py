@@ -3,6 +3,13 @@
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --batch 4 --prompt-len 64 --decode 32
 
+Decode runs as ONE fused dispatch by default (sampling inside the jitted
+``lax.scan`` step — :func:`repro.models.transformer.decode_loop`);
+``--decode-loop py`` keeps the legacy per-token host loop as an escape
+hatch, token-parity-gated against the fused path at temperature 0
+(``tests/test_serving.py``, ``bench_serve``).  Greedy decoding
+(``--temperature 0``) is key-free in both loops.
+
 Serving a diffusion-trained model: ``--checkpoint ckpt.npz`` alone is
 enough for checkpoints written by ``repro.launch.train`` — they embed the
 :class:`repro.api.ExperimentSpec`, so the exact engine (agent count,
@@ -12,7 +19,12 @@ is extracted through the trained mixer backend.  Spec-less (legacy / plain)
 checkpoints fall back to the flag path: ``--agents K`` marks an
 agent-stacked archive, ``--mix`` selects the consensus-extraction backend.
 The spec flags are the same shared set ``train`` and ``dryrun`` use
-(:mod:`repro.api.cli`).
+(:mod:`repro.api.cli`).  ``--consensus-quantize int8`` collapses the agent
+stack from int8-quantized leaves (4x smaller resident stack at large K);
+``--watch DIR`` switches to the continuous-batching
+:class:`repro.launch.serving.ServeLoop` and re-extracts consensus as
+training checkpoints stream into DIR (double-buffered swap — in-flight
+decodes never see a torn update).
 """
 from __future__ import annotations
 
@@ -28,80 +40,19 @@ from repro.api import EngineState, TOPOLOGIES, build, spec_from_args
 from repro.api.cli import add_spec_args
 from repro.checkpoint import load_checkpoint, load_experiment, load_spec
 from repro.configs import get_config
-from repro.core import NullMixer, SparseCirculantMixer, make_mixer, \
-    make_topology
-from repro.core.topology import averaging_matrix, spectral_gap
+# consensus_from_stacked moved to repro.core.serving; re-exported here for
+# the existing import surface (tests, notebooks)
+from repro.core.serving import CONSENSUS_QUANTIZE, consensus_from_stacked
+from repro.launch.serving import Request, ServeLoop
 from repro.models import transformer as tf
 
-_CONSENSUS_MAX_ROUNDS = 512
-
-
-def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
-                           trim: int = 1, scope: str = "global",
-                           topology=None):
-    """Collapse (K, ...)-stacked agent params to the consensus model via
-    the mixing layer, over the topology the checkpoint was TRAINED on.
-
-    With the default ``topology=None`` (spec-less checkpoints) the base
-    graph is FedAvg and one all-active combination step makes every agent
-    hold the exact network mean — bit-identical to the legacy path.  With
-    an explicit topology:
-
-    * linear backends with arbitrary matrix support (dense / pallas) take
-      the exact (1/K) 11^T averaging matrix as their ``A_t`` operand — one
-      step, exact mean, any K;
-    * the sparse backend only moves bytes along its trained circulant
-      offsets, so the base-topology combination step is iterated until the
-      spectral gap has contracted the disagreement below f32 resolution
-      (capped at ``_CONSENSUS_MAX_ROUNDS`` with a warning when the cap
-      truncates convergence — very large sparse graphs should re-extract
-      with ``--mix dense``);
-    * matrix-oblivious backends (global robust aggregation, NullMixer)
-      apply once — iterating an idempotent aggregate is pure waste — and
-      the neighborhood-scoped robust backends iterate the trained
-      neighborhood structure (a robust local-consensus sweep).
-
-    Take agent 0 at the end.
-    """
-    topo = topology if topology is not None else make_topology("fedavg", K)
-    mixer = make_mixer(mix, topo, num_agents=K, trim=trim, scope=scope)
-    A = jnp.asarray(topo.A, jnp.float32)
-    ones = jnp.ones((K,), jnp.float32)
-    gap = spectral_gap(topo.A)
-    # backends that cannot apply an arbitrary matrix: sparse (bytes move
-    # only along trained offsets) and the non-linear robust aggregates
-    needs_support = isinstance(mixer, SparseCirculantMixer) or not mixer.linear
-    if (gap >= 1.0 - 1e-9 or isinstance(mixer, NullMixer)
-            or not getattr(mixer, "uses_matrix", True)):
-        rounds = 1
-    elif not needs_support:
-        # dense / pallas apply ANY matrix: one exact averaging step
-        A = jnp.asarray(averaging_matrix(K), jnp.float32)
-        rounds = 1
-    else:
-        # ||disagreement|| contracts by (1 - gap) per linear step: stop
-        # once the residual is below f32 resolution (offline path, not a
-        # hot loop)
-        needed = int(max(1, np.ceil(np.log(1e-7)
-                                    / np.log(max(1.0 - gap, 1e-12)))))
-        rounds = min(_CONSENSUS_MAX_ROUNDS, needed)
-        if rounds < needed:
-            warnings.warn(
-                f"consensus extraction capped at {rounds} combination "
-                f"rounds but the topology's spectral gap ({gap:.2e}) "
-                f"needs ~{needed} to converge — ~"
-                f"{(1.0 - gap) ** rounds:.0%} of the disagreement "
-                "remains; re-extract with --mix dense for the exact mean",
-                stacklevel=2)
-    mixed = stacked
-    for _ in range(rounds):
-        mixed = mixer(mixed, ones, A)
-    return jax.tree.map(lambda x: x[0], mixed)
+__all__ = ["consensus_from_stacked", "load_params", "main"]
 
 
 def load_params(args, key):
     """Resolve (params, cfg) from the checkpoint spec, the legacy stacked
     path, or fresh initialization."""
+    quantize = getattr(args, "consensus_quantize", None)
     spec = load_spec(args.checkpoint) if args.checkpoint else None
     if spec is not None and spec.model.kind == "external":
         # the spec describes an externally supplied loss (regression /
@@ -110,6 +61,11 @@ def load_params(args, key):
               f"serve); falling back to --arch/--agents/--mix flags")
         spec = None
     if spec is not None:
+        if getattr(args, "spec", None) or getattr(args, "preset", None):
+            warnings.warn(
+                "the checkpoint embeds its own ExperimentSpec, which "
+                "takes precedence — the --spec/--preset flags are "
+                "ignored for serving", stacklevel=2)
         # self-describing checkpoint: rebuild the exact engine, zero flags
         eng = build(spec)
         K = spec.run.num_agents
@@ -135,7 +91,7 @@ def load_params(args, key):
         params = consensus_from_stacked(state.params, K, spec.mixer.kind,
                                         trim=spec.mixer.trim,
                                         scope=spec.mixer.scope,
-                                        topology=topo)
+                                        topology=topo, quantize=quantize)
         return params, eng.model.cfg
 
     bundle = get_config(args.arch)
@@ -152,13 +108,29 @@ def load_params(args, key):
               f"--mix {args.mix}")
         return (consensus_from_stacked(stacked, args.agents, args.mix,
                                        trim=args.trim,
-                                       scope=args.robust_scope), cfg)
+                                       scope=args.robust_scope,
+                                       quantize=quantize), cfg)
     params, meta = load_checkpoint(args.checkpoint, params)
     print(f"loaded checkpoint (step={meta.get('step')})")
     return params, cfg
 
 
-def main():
+def _check_preset_shim(ap: argparse.ArgumentParser, args) -> None:
+    """serve defaults --agents to 1 (deprecation shim: a spec-less
+    checkpoint is a plain single model), but a --preset factory is
+    parameterized by K=args.agents — so the shim default used to silently
+    build a 1-agent variant of a preset that train/dryrun build with the
+    shared default of 4.  Explicit-flag tracking makes the collision
+    detectable: --preset on serve now requires an explicit --agents."""
+    if args.preset and "agents" not in getattr(args, "_explicit", set()):
+        ap.error(
+            "--preset on serve needs an explicit --agents K: serve's "
+            "spec-less shim defaults --agents to 1 (a plain checkpoint "
+            "is a single model), which would silently override the "
+            "preset's agent count")
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     add_spec_args(ap)
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -167,10 +139,31 @@ def main():
     ap.add_argument("--checkpoint", default=None,
                     help="npz checkpoint (spec-embedding, agent-stacked, or "
                          "plain)")
+    ap.add_argument("--decode-loop", choices=["fused", "py"],
+                    default="fused",
+                    help="fused: sampling inside the jitted lax.scan step, "
+                         "one dispatch per generation (default); py: "
+                         "legacy per-token host loop (token-parity with "
+                         "fused at temperature 0)")
+    ap.add_argument("--consensus-quantize", choices=list(CONSENSUS_QUANTIZE),
+                    default="none",
+                    help="collapse the (K, M) agent stack from "
+                         "int8-quantized leaves (Int8Stochastic — the "
+                         "training-side wire quantizer) instead of f32")
+    ap.add_argument("--watch", default=None, metavar="DIR",
+                    help="continuous mode: serve through the slot-batched "
+                         "ServeLoop while re-extracting consensus from "
+                         "*.npz checkpoints streaming into DIR "
+                         "(double-buffered param swap)")
+    ap.add_argument("--watch-poll", type=float, default=2.0,
+                    help="watch-mode poll interval, seconds")
+    ap.add_argument("--watch-ticks", type=int, default=None,
+                    help="stop watch mode after N ticks (default: forever)")
     # deprecation shim: a spec-less checkpoint is a plain single model
     # unless --agents says otherwise (spec checkpoints carry K themselves)
     ap.set_defaults(agents=1)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    _check_preset_shim(ap, args)
     spec_from_args(args)      # validate the shared flags map onto a spec
 
     key = jax.random.PRNGKey(args.seed)
@@ -187,37 +180,62 @@ def main():
                                       tf.VISION_DIM), jnp.float32) * 0.02
 
     max_len = args.prompt_len + args.decode
+
+    if args.watch:
+        loop = ServeLoop(cfg, params, slots=args.batch, max_len=max_len,
+                         decode_loop=args.decode_loop,
+                         temperature=args.temperature,
+                         chunk=max(1, min(8, args.decode)), seed=args.seed)
+        for i in range(args.batch):
+            loop.submit(Request(uid=i, prompt=np.asarray(prompts[i]),
+                                max_new_tokens=args.decode))
+        done = loop.watch(args.watch, poll_s=args.watch_poll,
+                          max_ticks=args.watch_ticks,
+                          quantize=args.consensus_quantize)
+        for c in sorted(done, key=lambda c: c.uid):
+            print(f"request {c.uid}: {len(c.tokens)} tokens across "
+                  f"{len(set(c.generations))} checkpoint generation(s)")
+        return
+
     prefill_fn = jax.jit(lambda p, t, i: tf.prefill(p, cfg, t, img_embeds=i,
                                                     max_len=max_len))
-    decode_fn = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
 
     t0 = time.time()
     logits, cache = prefill_fn(params, prompts, img)
-    logits = logits[:, -1]
+    logits = jax.block_until_ready(logits[:, -1])
     t_prefill = time.time() - t0
 
-    def sample(k, lg):
-        if args.temperature <= 0:
-            return jnp.argmax(lg, axis=-1)
-        return jax.random.categorical(k, lg / args.temperature, axis=-1)
+    greedy = args.temperature <= 0
+    if args.decode_loop == "fused":
+        # params are closed over, not arguments: this process serves ONE
+        # checkpoint, and constant weights let XLA fold/pre-layout them
+        # (measured ~1.6x per decoded token on CPU vs argument weights)
+        fused = jax.jit(lambda c, lg, k: tf.decode_loop(
+            params, cfg, c, lg, k, args.decode,
+            temperature=args.temperature))
+        t0 = time.time()
+        gen, logits, cache = fused(cache, logits, None if greedy else key)
+        gen = jax.block_until_ready(gen)
+        t_decode = time.time() - t0
+    else:
+        decode_fn = jax.jit(lambda p, c, t: tf.decode_step(p, cfg, c, t))
+        out_tokens = []
+        t0 = time.time()
+        for _ in range(args.decode):
+            ks = None
+            if not greedy:          # greedy is key-free in BOTH loops
+                key, ks = jax.random.split(key)
+            nxt = tf.sample_logits(logits, ks, args.temperature)
+            out_tokens.append(nxt)
+            tok = (nxt[:, None, :] if cfg.num_codebooks else nxt[:, None])
+            lg, cache = decode_fn(params, cache, tok)
+            logits = lg[:, 0]
+        gen = jax.block_until_ready(jnp.stack(out_tokens, axis=1))
+        t_decode = time.time() - t0
 
-    out_tokens = []
-    t0 = time.time()
-    for step in range(args.decode):
-        key, ks = jax.random.split(key)
-        nxt = sample(ks, logits.astype(jnp.float32))
-        if cfg.num_codebooks:
-            tok = nxt.reshape(args.batch, 1, cfg.num_codebooks)
-        else:
-            tok = nxt.reshape(args.batch, 1)
-        out_tokens.append(tok)
-        lg, cache = decode_fn(params, cache, tok)
-        logits = lg[:, 0]
-    t_decode = time.time() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
     print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s")
-    print(f"decode:  {args.decode} steps in {t_decode:.2f}s "
+    print(f"decode:  {args.decode} steps ({args.decode_loop} loop) in "
+          f"{t_decode:.2f}s "
           f"({args.decode * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
     print("sample tokens[0,:16]:", gen[0, :16].tolist())
 

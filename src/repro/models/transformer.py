@@ -27,7 +27,8 @@ from repro.models import ssm as ssm_lib
 PyTree = Any
 
 __all__ = ["init_params", "param_specs", "forward", "train_loss",
-           "Cache", "init_cache", "cache_specs", "prefill", "decode_step"]
+           "Cache", "init_cache", "cache_specs", "prefill", "decode_step",
+           "sample_logits", "decode_loop"]
 
 
 def _seg_key(index: int, kind: str, n: int) -> str:
@@ -315,10 +316,18 @@ def train_loss(params: PyTree, cfg: ModelConfig, batch: dict,
 
 @dataclasses.dataclass
 class Cache:
-    """Pytree decode cache.  segments mirrors params['segments'] order."""
+    """Pytree decode cache.  segments mirrors params['segments'] order.
+
+    ``pos``/``slot_pos`` come in two layouts chosen at :func:`init_cache`
+    time: the whole-batch layout (scalar ``pos``, ``(C,)`` ``slot_pos``)
+    where every sequence sits at the same position, and the *per-slot*
+    layout (``(B,)`` / ``(B, C)``) used by the continuous-batching serve
+    loop, where each batch row is an independent request at its own
+    position (see :mod:`repro.launch.serving`).
+    """
     segments: tuple
-    pos: jax.Array        # () int32 — next write position (absolute)
-    slot_pos: jax.Array   # (C,) int32 — absolute position held by each slot
+    pos: jax.Array        # () or (B,) int32 — next write position (absolute)
+    slot_pos: jax.Array   # (C,) or (B, C) int32 — absolute position per slot
 
     def tree_flatten(self):
         return (self.segments, self.pos, self.slot_pos), None
@@ -350,45 +359,64 @@ def _seg_cache_spec(cfg: ModelConfig, kind: str, n: int, batch: int,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
-               window: int | None = None) -> Cache:
+               window: int | None = None, per_slot: bool = False) -> Cache:
     C = _cache_len(cfg, max_seq, window)
     make = lambda shape, dt: jnp.zeros(shape, dt)
     segs = tuple(
         _seg_cache_spec(cfg, kind, n, batch, C, cfg.param_dtype, make)
         for kind, n in cfg.segments())
-    return Cache(segments=segs, pos=jnp.zeros((), jnp.int32),
-                 slot_pos=jnp.full((C,), -1, jnp.int32))
+    return Cache(segments=segs,
+                 pos=jnp.zeros((batch,) if per_slot else (), jnp.int32),
+                 slot_pos=jnp.full((batch, C) if per_slot else (C,), -1,
+                                   jnp.int32))
 
 
 def cache_specs(cfg: ModelConfig, batch: int, max_seq: int, *,
-                window: int | None = None) -> Cache:
+                window: int | None = None, per_slot: bool = False) -> Cache:
     C = _cache_len(cfg, max_seq, window)
     make = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
     segs = tuple(
         _seg_cache_spec(cfg, kind, n, batch, C, cfg.param_dtype, make)
         for kind, n in cfg.segments())
-    return Cache(segments=segs, pos=make((), jnp.int32),
-                 slot_pos=make((C,), jnp.int32))
+    return Cache(segments=segs,
+                 pos=make((batch,) if per_slot else (), jnp.int32),
+                 slot_pos=make((batch, C) if per_slot else (C,), jnp.int32))
 
 
 def _attn_block_decode(cfg: ModelConfig, bp: dict, x: jax.Array,
                        kc: jax.Array, vc: jax.Array, pos: jax.Array,
                        slot_pos: jax.Array, window: int | None, kind: str):
-    """One attention block for a single new token with ring-buffer cache."""
+    """One attention block for a single new token with ring-buffer cache.
+
+    ``pos`` is either a scalar (whole-batch position) or ``(B,)`` per-slot
+    positions (each batch row an independent request — the serve loop);
+    ``slot_pos`` is ``(C,)`` / ``(B, C)`` to match.
+    """
     B = x.shape[0]
     C = kc.shape[1]
+    per_slot = pos.ndim == 1
     h = L.rms_norm(x, bp["ln1"]["scale"], cfg.norm_eps)
+    positions = pos[:, None] if per_slot else pos[None, None].repeat(B, 0)
     q, k, v = L.qkv_project(bp["attn"], h, _adims(cfg),
-                            positions=pos[None, None].repeat(B, 0),
+                            positions=positions,
                             rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta,
                             qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
     slot = pos % C
-    kc = jax.lax.dynamic_update_index_in_dim(kc, k[:, 0], slot, axis=1)
-    vc = jax.lax.dynamic_update_index_in_dim(vc, v[:, 0], slot, axis=1)
-    new_slot_pos = slot_pos.at[slot].set(pos)
-    valid = (new_slot_pos >= 0) & (new_slot_pos <= pos)
-    if window:
-        valid = valid & (new_slot_pos > pos - window)
+    if per_slot:
+        rows = jnp.arange(B)
+        kc = kc.at[rows, slot].set(k[:, 0])
+        vc = vc.at[rows, slot].set(v[:, 0])
+        new_slot_pos = slot_pos.at[rows, slot].set(pos)
+        valid = (new_slot_pos >= 0) & (new_slot_pos <= pos[:, None])
+        if window:
+            valid = valid & (new_slot_pos > (pos - window)[:, None])
+    else:
+        kc = jax.lax.dynamic_update_index_in_dim(kc, k[:, 0], slot, axis=1)
+        vc = jax.lax.dynamic_update_index_in_dim(vc, v[:, 0], slot, axis=1)
+        new_slot_pos = slot_pos.at[slot].set(pos)
+        valid = (new_slot_pos >= 0) & (new_slot_pos <= pos)
+        if window:
+            valid = valid & (new_slot_pos > pos - window)
     o = L.decode_attention_jnp(q, kc, vc, valid)
     x = x + o.reshape(B, 1, -1) @ bp["attn"]["wo"]
     h = L.rms_norm(x, bp["ln2"]["scale"], cfg.norm_eps)
@@ -400,6 +428,25 @@ def _attn_block_decode(cfg: ModelConfig, bp: dict, x: jax.Array,
     else:
         x = x + L.mlp_forward(bp["mlp"], h, cfg.mlp_act)
     return x, kc, vc, new_slot_pos
+
+
+#: partial-unroll factor for the per-layer scan in decode_step: one decode
+#: step is a few dozen tiny ops per layer, so the scan's per-iteration
+#: bookkeeping is a real fraction of the step on CPU/small models; a small
+#: constant unroll removes most of it while the HLO stays O(segments * 4)
+#: (never O(num_layers) — the 61/64-layer configs still compile small)
+_DECODE_LAYER_UNROLL = 4
+
+#: segments at most this deep skip the lax.scan entirely and unroll as a
+#: Python loop over STATICALLY indexed layer weights.  The scan's dynamic
+#: xs-slicing re-materializes every layer's weights each call — inside the
+#: fused token loop that is ~800 KB of weight copies per generated token on
+#: the serve smoke config, and it cannot be hoisted because the slice index
+#: is the scan counter.  Static slices of loop-invariant weights hoist out
+#: of the enclosing token `while` for free (measured ~1.8x per-token on
+#: bench_serve).  Deep stacks (the 61/64-layer configs) keep the scan so
+#: compiled HLO stays O(segments * _DECODE_LAYER_UNROLL), not O(layers).
+_DECODE_STATIC_LAYERS = 8
 
 
 def decode_step(params: PyTree, cfg: ModelConfig, cache: Cache,
@@ -423,32 +470,66 @@ def decode_step(params: PyTree, cfg: ModelConfig, cache: Cache,
                 vcs.append(vc)
             new_segs.append({"k": jnp.stack(kcs), "v": jnp.stack(vcs)})
         elif kind == "mamba":
-            def body(carry, xs):
-                x_ = carry
-                bp, st, cv = xs
-                h = L.rms_norm(x_, bp["ln1"]["scale"], cfg.norm_eps)
-                o, st, cv = ssm_lib.ssm_decode_step(
-                    bp["ssm"], h, st, cv, norm_eps=cfg.norm_eps, **_ssm_kw(cfg))
-                return x_ + o, (st, cv)
-            x, (sts, cvs) = jax.lax.scan(
-                body, x, (seg_params, seg_cache["ssm"], seg_cache["conv"]))
-            new_segs.append({"ssm": sts, "conv": cvs})
+            if n <= _DECODE_STATIC_LAYERS:
+                sts, cvs = [], []
+                for j in range(n):
+                    bp = jax.tree.map(lambda a, j=j: a[j], seg_params)
+                    h = L.rms_norm(x, bp["ln1"]["scale"], cfg.norm_eps)
+                    o, st, cv = ssm_lib.ssm_decode_step(
+                        bp["ssm"], h, seg_cache["ssm"][j],
+                        seg_cache["conv"][j], norm_eps=cfg.norm_eps,
+                        **_ssm_kw(cfg))
+                    x = x + o
+                    sts.append(st)
+                    cvs.append(cv)
+                new_segs.append({"ssm": jnp.stack(sts),
+                                 "conv": jnp.stack(cvs)})
+            else:
+                def body(carry, xs):
+                    x_ = carry
+                    bp, st, cv = xs
+                    h = L.rms_norm(x_, bp["ln1"]["scale"], cfg.norm_eps)
+                    o, st, cv = ssm_lib.ssm_decode_step(
+                        bp["ssm"], h, st, cv, norm_eps=cfg.norm_eps,
+                        **_ssm_kw(cfg))
+                    return x_ + o, (st, cv)
+                x, (sts, cvs) = jax.lax.scan(
+                    body, x, (seg_params, seg_cache["ssm"],
+                              seg_cache["conv"]),
+                    unroll=min(n, _DECODE_LAYER_UNROLL))
+                new_segs.append({"ssm": sts, "conv": cvs})
         else:
-            def body(carry, xs):
-                x_, sp = carry
-                bp, kc, vc = xs
-                x_, kc, vc, sp = _attn_block_decode(cfg, bp, x_, kc, vc,
-                                                    pos, cache.slot_pos,
-                                                    window, kind)
-                return (x_, sp), (kc, vc)
-            (x, new_slot_pos), (kcs, vcs) = jax.lax.scan(
-                body, (x, new_slot_pos), (seg_params, seg_cache["k"],
-                                          seg_cache["v"]))
-            new_segs.append({"k": kcs, "v": vcs})
+            if n <= _DECODE_STATIC_LAYERS:
+                kcs, vcs = [], []
+                for j in range(n):
+                    bp = jax.tree.map(lambda a, j=j: a[j], seg_params)
+                    x, kc, vc, new_slot_pos = _attn_block_decode(
+                        cfg, bp, x, seg_cache["k"][j], seg_cache["v"][j],
+                        pos, cache.slot_pos, window, kind)
+                    kcs.append(kc)
+                    vcs.append(vc)
+                new_segs.append({"k": jnp.stack(kcs), "v": jnp.stack(vcs)})
+            else:
+                def body(carry, xs):
+                    x_, sp = carry
+                    bp, kc, vc = xs
+                    x_, kc, vc, sp = _attn_block_decode(cfg, bp, x_, kc, vc,
+                                                        pos, cache.slot_pos,
+                                                        window, kind)
+                    return (x_, sp), (kc, vc)
+                (x, new_slot_pos), (kcs, vcs) = jax.lax.scan(
+                    body, (x, new_slot_pos), (seg_params, seg_cache["k"],
+                                              seg_cache["v"]),
+                    unroll=min(n, _DECODE_LAYER_UNROLL))
+                new_segs.append({"k": kcs, "v": vcs})
 
     # all layers share slot geometry; recompute canonical slot_pos update once
-    C = cache.slot_pos.shape[0]
-    new_slot_pos = cache.slot_pos.at[pos % C].set(pos)
+    C = cache.slot_pos.shape[-1]
+    if pos.ndim == 1:
+        new_slot_pos = cache.slot_pos.at[
+            jnp.arange(pos.shape[0]), pos % C].set(pos)
+    else:
+        new_slot_pos = cache.slot_pos.at[pos % C].set(pos)
     x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     logits = _lm_logits(params, cfg, x)
     new_cache = Cache(segments=tuple(new_segs), pos=pos + 1,
@@ -554,3 +635,67 @@ def _ring_scatter(k: jax.Array, C: int) -> jax.Array:
     tail = k[:, S - C:]                        # last C tokens, positions S-C..S-1
     roll = (S - C) % C
     return jnp.roll(tail, shift=roll, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# serving: fused decode loop
+# ---------------------------------------------------------------------------
+
+def sample_logits(logits: jax.Array, key: jax.Array | None,
+                  temperature: float) -> jax.Array:
+    """Next-token sampling from last-position logits (always in float32).
+
+    ``temperature <= 0`` is greedy argmax and consumes NO key (``key`` may
+    be ``None`` — greedy decoding is fully deterministic and key-free in
+    both the fused and the py serving loops); otherwise
+    ``jax.random.categorical`` at the given temperature.
+
+    logits: ``(B, V)`` or ``(B, nq, V)`` -> ``(B,)`` / ``(B, nq)`` int32.
+    """
+    lg = logits.astype(jnp.float32)
+    if temperature <= 0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lg / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def decode_loop(params: PyTree, cfg: ModelConfig, cache: Cache,
+                first_logits: jax.Array, key: jax.Array | None, n: int, *,
+                temperature: float = 0.0, window: int | None = None,
+                unroll: int = 8):
+    """Fused n-token generation: sampling lives INSIDE the jitted step and
+    ``lax.scan`` drives the n decode steps, so tokens, cache, and PRNG
+    state stay on device and a whole generation is ONE dispatch — the
+    per-token py loop (``launch/serve.py --decode-loop py``) pays one
+    dispatch plus a host sync per token instead.
+
+    Args:
+      first_logits: the last-position logits from :func:`prefill` —
+        ``(B, V)``, or ``(B, nq, V)`` for multi-codebook audio.
+      key: PRNG key for sampled decoding; unused (may be ``None``) at
+        ``temperature <= 0``, where the loop is greedy and key-free.
+      n: number of tokens to generate (static).
+      unroll: partial unroll of the token scan (same trade as the
+        per-layer ``_DECODE_LAYER_UNROLL``: decode steps are tiny, so the
+        scan bookkeeping between them is measurable; 8 steps per loop
+        iteration removes most of it at bounded HLO cost — measured the
+        knee of the unroll sweep on the bench_serve gate shape).
+
+    Returns ``(tokens, last_logits, cache)`` with ``tokens`` int32
+    ``(B, n)`` or ``(B, n, nq)``, and ``last_logits`` the logits the
+    (n+1)-th token would be sampled from — carry it into the next call to
+    continue the generation (the serve loop's chunked decode).
+    """
+    greedy = temperature <= 0
+
+    def step(carry, ks):
+        lg, c = carry
+        nxt = sample_logits(lg, ks, temperature)       # (B,) or (B, nq)
+        tok = nxt[:, None] if not cfg.num_codebooks else nxt[:, None, :]
+        new_lg, c = decode_step(params, cfg, c, tok, window=window)
+        return (new_lg[:, 0], c), nxt
+
+    xs = None if greedy else jax.random.split(key, n)
+    (last_lg, cache), toks = jax.lax.scan(
+        step, (first_logits, cache), xs, length=n, unroll=min(n, unroll))
+    return jnp.moveaxis(toks, 0, 1), last_lg, cache
