@@ -15,9 +15,12 @@ Both engines come back with the SAME surface:
 ``engine="stacked"`` returns the exact-paper
 :class:`repro.core.diffusion.DiffusionEngine` (2-arg loss, no per-step rng);
 ``engine="sharded"`` the GSPMD :class:`repro.core.sharded.ShardedEngine`
-(3-arg loss with per-agent rng).  ``engine="auto"`` picks sharded when the
-model spec is self-contained (kind="transformer") and stacked for external
-losses — the combinations every driver and test in the repo uses.
+(3-arg loss with per-agent rng); ``engine="async"`` the event-driven
+:class:`repro.core.async_engine.AsyncEngine` (2-arg loss, per-agent
+clocks + staleness buffer).  ``engine="auto"`` picks async when
+``spec.asynchrony.enabled``, else sharded when the model spec is
+self-contained (kind="transformer") and stacked for external losses —
+the combinations every driver and test in the repo uses.
 """
 from __future__ import annotations
 
@@ -34,6 +37,7 @@ from repro.core import graphs as graph_lib
 from repro.core import mixing
 from repro.core import schedules
 from repro.core import topology as topo_lib
+from repro.core.async_engine import AsyncEngine
 from repro.core.diffusion import DiffusionEngine
 from repro.core.sharded import ShardedEngine
 from repro.optim import adam, momentum, sgd
@@ -118,7 +122,7 @@ def _cyclic(spec: ParticipationSpec, K: int):
 
 def _register_mixers():
     for kind in ("dense", "sparse", "pallas", "gather", "auto", "none",
-                 "trimmed_mean", "median"):
+                 "trimmed_mean", "median", "adaptive_trim"):
         @MIXERS.register(kind)
         def _build(spec: MixerSpec, topology, K: int, _kind=kind):
             return mixing.make_mixer(_kind, topology, num_agents=K,
@@ -214,7 +218,8 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
         per-agent loss in the convention of the selected engine (2-arg for
         stacked, 3-arg with rng for sharded).  Overrides the model bundle's
         loss when both exist.
-      engine: "stacked" | "sharded" | "auto" (sharded iff the model spec is
+      engine: "stacked" | "sharded" | "async" | "auto" (async iff
+        ``spec.asynchrony.enabled``, else sharded iff the model spec is
         self-contained).
       grad_transform: explicit gradient-transform override; defaults to the
         optimizer spec ("sgd" means None — exact Algorithm 1).
@@ -257,15 +262,39 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
     model = MODELS.get(spec.model.kind)(spec.model)
 
     if engine == "auto":
-        engine = "sharded" if model is not None else "stacked"
-    if engine not in ("stacked", "sharded"):
+        # an enabled AsyncSpec opts the whole experiment into the
+        # event-driven engine; otherwise sharded iff self-contained model
+        if spec.asynchrony.enabled:
+            engine = "async"
+        else:
+            engine = "sharded" if model is not None else "stacked"
+    if engine not in ("stacked", "sharded", "async"):
         raise ValueError(f"unknown engine {engine!r} "
-                         "(expected stacked|sharded|auto)")
+                         "(expected stacked|sharded|async|auto)")
+    if engine != "async" and spec.asynchrony.enabled:
+        # silently running a spec that asks for event-driven execution on
+        # a bulk-synchronous engine would misreport the experiment
+        raise ValueError(
+            f"spec.asynchrony.enabled is set but engine={engine!r} was "
+            "requested — use engine='async'/'auto', or disable the "
+            "asynchrony sub-spec")
     if grad_transform is None and (spec.optimizer.kind != "sgd"
                                    or spec.attack.kind != "none"):
         grad_transform = optimizer.update
 
-    if engine == "stacked":
+    if engine == "async":
+        # stacked-style 2-arg loss; the staleness buffer replaces the
+        # CommPipeline (the engine rejects compression itself)
+        loss = loss_fn if loss_fn is not None else (model.loss if model
+                                                    else None)
+        if loss is None:
+            raise ValueError('model kind "external" needs an explicit '
+                             "loss_fn (or select a self-contained model "
+                             "spec, e.g. kind='transformer')")
+        eng = AsyncEngine(cfg, loss, grad_transform,
+                          async_spec=spec.asynchrony,
+                          participation=process, graph=graph)
+    elif engine == "stacked":
         loss = loss_fn if loss_fn is not None else (model.loss if model
                                                     else None)
         if loss is None:

@@ -31,15 +31,16 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-from repro.api.spec import (AttackSpec, CompressionSpec, ExperimentSpec,
-                            GraphSpec, MixerSpec, ModelSpec, OptimizerSpec,
-                            ParticipationSpec, RunSpec, TopologySpec)
+from repro.api.spec import (AsyncSpec, AttackSpec, CompressionSpec,
+                            ExperimentSpec, GraphSpec, MixerSpec, ModelSpec,
+                            OptimizerSpec, ParticipationSpec, RunSpec,
+                            TopologySpec)
 
 __all__ = ["add_spec_args", "spec_from_args", "get_preset"]
 
 _MIX_CHOICES = ["dense", "sparse", "pallas", "gather", "auto", "none",
-                "trimmed_mean", "median"]
-_ROBUST_MIX_KINDS = ("trimmed_mean", "median")
+                "trimmed_mean", "median", "adaptive_trim"]
+_ROBUST_MIX_KINDS = ("trimmed_mean", "median", "adaptive_trim")
 _COMPRESS_CHOICES = ["none", "topk", "randk", "int8", "gauss"]
 _ATTACK_CHOICES = ["none", "sign_flip", "noise", "shift"]
 
@@ -154,8 +155,8 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                    action=_Track,
                    help="combination-step backend (MixerSpec.kind)")
     g.add_argument("--trim", type=int, default=1, action=_Track,
-                   help="per-side trim for --mix trimmed_mean "
-                        "(MixerSpec.trim)")
+                   help="per-side trim for --mix trimmed_mean; per-side "
+                        "CAP for --mix adaptive_trim (MixerSpec.trim)")
     g.add_argument("--robust-scope", default="global", action=_Track,
                    choices=["global", "neighborhood"],
                    help="robust-aggregation scope (MixerSpec.scope): "
@@ -197,6 +198,35 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                         "contraction (diff-mode pipelines, i.e. the "
                         "sparsifying compressors; other modes keep the "
                         "fixed default and warn)")
+    g.add_argument("--engine", default="auto", action=_Track,
+                   choices=["auto", "stacked", "sharded", "async"],
+                   help="execution engine (repro.api.build): stacked "
+                        "(exact Algorithm 1), sharded (GSPMD), async "
+                        "(event-driven per-agent clocks + staleness "
+                        "buffer; sets AsyncSpec.enabled), auto")
+    g.add_argument("--async-rate-dist", default="uniform", action=_Track,
+                   choices=["uniform", "lognormal"],
+                   help="per-agent event-rate model (AsyncSpec.rate_dist): "
+                        "lognormal simulates stragglers — delay_k ~ "
+                        "LogNormal(0, sigma), rate_k = 1/delay_k")
+    g.add_argument("--async-rate", type=float, default=1.0, action=_Track,
+                   help="uniform event rate (AsyncSpec.rates)")
+    g.add_argument("--async-rate-sigma", type=float, default=0.0,
+                   action=_Track,
+                   help="lognormal delay log-std (AsyncSpec.rate_sigma)")
+    g.add_argument("--async-rate-seed", type=int, default=0, action=_Track,
+                   help="lognormal delay-draw seed (AsyncSpec.rate_seed)")
+    g.add_argument("--async-tau-max", type=int, default=16, action=_Track,
+                   help="staleness cap in blocks (AsyncSpec.tau_max): "
+                        "buffered neighbor iterates older than this get "
+                        "zero combination weight")
+    g.add_argument("--async-discount", default="exp", action=_Track,
+                   choices=["none", "exp", "poly"],
+                   help="age-discount law (AsyncSpec.discount)")
+    g.add_argument("--async-discount-rate", type=float, default=0.1,
+                   action=_Track,
+                   help="discount strength (AsyncSpec.discount_rate): "
+                        "exp e^(-rate*age), poly (1+age)^-rate")
     g.add_argument("--blocks", type=int, default=20,
                    help="block iterations (RunSpec.blocks)")
     g.add_argument("--batch", type=int, default=2,
@@ -229,6 +259,13 @@ _PRESET_OVERRIDES = {
     "comm_gamma": ("compression", "gamma"),
     "optimizer": ("optimizer", "kind"),
     "drift_correction": ("run", "drift_correction"),
+    "async_rate_dist": ("asynchrony", "rate_dist"),
+    "async_rate": ("asynchrony", "rates"),
+    "async_rate_sigma": ("asynchrony", "rate_sigma"),
+    "async_rate_seed": ("asynchrony", "rate_seed"),
+    "async_tau_max": ("asynchrony", "tau_max"),
+    "async_discount": ("asynchrony", "discount"),
+    "async_discount_rate": ("asynchrony", "discount_rate"),
 }
 
 
@@ -275,6 +312,9 @@ def _run_overlay(spec: ExperimentSpec, args) -> ExperimentSpec:
         spec = spec.replace(participation=ParticipationSpec(
             kind=args.participation_process, q=args.participation,
             corr=args.markov_corr, num_groups=args.num_groups))
+    if getattr(args, "engine", "auto") == "async":
+        spec = spec.replace(asynchrony=dataclasses.replace(
+            spec.asynchrony, enabled=True))
     return spec
 
 
@@ -322,6 +362,23 @@ def _check_robust_flags(args, spec: ExperimentSpec) -> ExperimentSpec:
                     f"{flag} only applies to --graph {'|'.join(kinds)}; "
                     f"the {spec.graph.kind!r} graph process ignores it — "
                     "drop the flag or pick the matching kind")
+    # ... and on the async sub-flags: tuning clocks/staleness for an
+    # engine that never runs event-driven would silently report a
+    # bulk-synchronous run as an async experiment
+    asyn = [flag for dest, flag in
+            (("async_rate_dist", "--async-rate-dist"),
+             ("async_rate", "--async-rate"),
+             ("async_rate_sigma", "--async-rate-sigma"),
+             ("async_rate_seed", "--async-rate-seed"),
+             ("async_tau_max", "--async-tau-max"),
+             ("async_discount", "--async-discount"),
+             ("async_discount_rate", "--async-discount-rate"))
+            if dest in explicit]
+    if asyn and not spec.asynchrony.enabled:
+        raise ValueError(
+            f"{'/'.join(asyn)} configures the event-driven engine but "
+            "the run is bulk-synchronous — pass --engine async (or a "
+            "spec with asynchrony.enabled)")
     return spec
 
 
@@ -360,6 +417,13 @@ def spec_from_args(args) -> ExperimentSpec:
         optimizer=OptimizerSpec(kind=args.optimizer),
         model=ModelSpec(kind="transformer", arch=args.arch,
                         smoke=args.smoke),
+        asynchrony=AsyncSpec(
+            enabled=args.engine == "async", rates=args.async_rate,
+            rate_dist=args.async_rate_dist,
+            rate_sigma=args.async_rate_sigma,
+            rate_seed=args.async_rate_seed, tau_max=args.async_tau_max,
+            discount=args.async_discount,
+            discount_rate=args.async_discount_rate),
         run=RunSpec(num_agents=args.agents, local_steps=args.local_steps,
                     step_size=args.step_size,
                     drift_correction=args.drift_correction,

@@ -14,6 +14,8 @@ of sub-specs:
       ├─ OptimizerSpec       local-update gradient transform
       ├─ ModelSpec           what the agents train (transformer arch or an
       │                      externally supplied loss)
+      ├─ AsyncSpec           event-driven execution: per-agent clocks,
+      │                      staleness cap, age-discount law
       └─ RunSpec             scalar hyper-parameters (K, T, mu, ...) and
                              driver settings (blocks, batch, seed)
 
@@ -43,6 +45,7 @@ __all__ = [
     "AttackSpec",
     "OptimizerSpec",
     "ModelSpec",
+    "AsyncSpec",
     "RunSpec",
     "ExperimentSpec",
     "PRESETS",
@@ -133,10 +136,12 @@ class MixerSpec:
     """Combination-step backend (core/mixing.py)."""
 
     kind: str = "dense"          # dense|sparse|pallas|gather|auto|none|
-                                 # trimmed_mean|median|<registered>
+                                 # trimmed_mean|median|adaptive_trim|
+                                 # <registered>
     tile_m: int = 512            # pallas tile
     interpret: Optional[bool] = None   # pallas interpret override
-    trim: int = 1                # trimmed_mean: per-side trim count
+    trim: int = 1                # trimmed_mean: per-side trim count;
+                                 # adaptive_trim: per-side trim CAP
     scope: str = "global"        # robust backends: global (SLSGD server)
                                  # | neighborhood (realized A_t support)
     gather: str = "auto"         # neighborhood scope: bounded-degree
@@ -200,6 +205,37 @@ class ModelSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AsyncSpec:
+    """Event-driven execution model (core/async_engine.py).
+
+    ``enabled=False`` is the bulk-synchronous default (both classic
+    engines).  When enabled (or ``engine="async"`` is requested from
+    :func:`repro.api.build`), each agent carries a local clock whose
+    event times arrive at a per-agent rate: within a block an agent
+    *fires* iff its participation draw succeeds AND its thinned clock
+    ticks, runs its local updates, and combines against the
+    *last-received* neighbor iterates from a bounded-degree staleness
+    buffer with age-discounted weights (Rizk/Yuan/Sayed, arXiv
+    2402.05529).  At ``tau_max=0`` with uniform rates every buffered
+    iterate is fresh and the engine reduces exactly to the synchronous
+    eq.-20 combination.
+    """
+
+    enabled: bool = False
+    rates: Any = 1.0             # per-agent event rates (scalar or tuple);
+                                 # ignored when rate_dist="lognormal"
+    rate_dist: str = "uniform"   # uniform|lognormal (straggler simulation:
+                                 # delay_k ~ LogNormal(0, rate_sigma),
+                                 # rate_k = 1/delay_k)
+    rate_sigma: float = 0.0      # lognormal: log-std of per-agent delays
+    rate_seed: int = 0           # lognormal: delay-draw seed
+    tau_max: int = 16            # staleness cap: buffered iterates older
+                                 # than tau_max events get zero weight
+    discount: str = "exp"        # age-discount law — none|exp|poly
+    discount_rate: float = 0.1   # exp: e^(-rate*age); poly: (1+age)^-rate
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """Scalar hyper-parameters of Algorithm 1 + driver settings."""
 
@@ -214,7 +250,8 @@ class RunSpec:
 
 
 _SUBSPECS = (TopologySpec, GraphSpec, ParticipationSpec, MixerSpec,
-             CompressionSpec, AttackSpec, OptimizerSpec, ModelSpec, RunSpec)
+             CompressionSpec, AttackSpec, OptimizerSpec, ModelSpec,
+             AsyncSpec, RunSpec)
 
 
 def _tuplify(v):
@@ -256,6 +293,7 @@ class ExperimentSpec:
     attack: AttackSpec = AttackSpec()
     optimizer: OptimizerSpec = OptimizerSpec()
     model: ModelSpec = ModelSpec()
+    asynchrony: AsyncSpec = AsyncSpec()   # "async" is a keyword
     run: RunSpec = RunSpec()
 
     # -- serialization ------------------------------------------------------

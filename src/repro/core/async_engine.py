@@ -1,0 +1,319 @@
+"""AsyncEngine — event-driven diffusion with per-agent clocks and a
+bounded-degree staleness buffer (Rizk/Yuan/Sayed, arXiv 2402.05529).
+
+Both classic engines (:mod:`repro.core.diffusion`,
+:mod:`repro.core.sharded`) are bulk-synchronous: every block iteration
+implicitly waits on the slowest agent before the combination step.  This
+engine models the asynchronous regime of the sequel paper: each agent k
+carries a *local clock* that advances only when it fires, event times
+arrive at a per-agent rate ``rate_k`` (thinned into the block grid as an
+independent Bernoulli(rate_k / max_j rate_j) tick on top of the
+participation draw), and the combination step consumes the
+*last-received* neighbor iterates from a staleness buffer instead of the
+neighbors' current-block values:
+
+  1. ``fire = active * tick`` — an agent updates this block iff its
+     participation draw succeeds AND its clock ticks;
+  2. fired agents run the T local updates through the shared
+     :func:`repro.core.diffusion.local_update_scan` (non-fired agents get
+     step size 0 and keep their iterate bit-exactly);
+  3. fired agents overwrite their slots in every neighbor's buffer; each
+     buffer slot carries an *age* (blocks since last receive);
+  4. fired agents combine over their bounded-degree buffer with
+     age-discounted weights ``A_t[j, k] * discount(age_kj)``, where the
+     discount law zeroes entries older than ``tau_max``; the self slot
+     (always fresh) absorbs the removed mass, eq.-20 style, so every row
+     sums to exactly 1 and the self weight never drops below the realized
+     ``a_kk > 0``.
+
+The buffer is ``(K, D, ...)``-shaped on PR 6's
+:meth:`repro.core.topology.Topology.neighbor_table` — D = max degree + 1,
+never ``(K, K, ...)`` — and lives in ``EngineState.async_state`` together
+with the per-slot ages and the per-agent clocks, so checkpoints carry the
+full asynchronous state (:func:`repro.checkpoint.save_experiment`).
+
+Reduction to the synchronous engine: at ``tau_max=0`` with uniform rates
+the tick is surely 1 (``fire == active`` on the identical key stream) and
+only age-0 entries — neighbors that fired THIS block — keep weight, so
+the weighted buffer row is exactly the eq.-20 masked combination
+``masked_combination(A_t, active)`` applied to the current iterates.
+``tests/test_async_engine.py`` gates single-step parity and stationary
+MSD parity against :class:`repro.core.diffusion.DiffusionEngine` on the
+paper-regression preset.
+
+Wall-clock accounting: every fired event on agent k costs
+``delay_k = 1 / rate_k`` seconds of that agent's local time; the engine
+reports ``max_k t_local`` as the makespan.  A bulk-synchronous run pays
+``max_k delay_k`` per block — under lognormal straggler delays the async
+engine reaches the same MSD in far less wall-clock (``bench_async``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graphs as graph_lib
+from repro.core import participation as part
+from repro.core import schedules
+from repro.core.diffusion import (DiffusionConfig, local_update_scan,
+                                  network_msd)
+from repro.core.state import EngineState
+
+PyTree = Any
+LossFn = Callable[[PyTree, Any], jax.Array]
+
+__all__ = ["AsyncEngine", "resolve_rates"]
+
+_DISCOUNTS = ("none", "exp", "poly")
+_RATE_DISTS = ("uniform", "lognormal")
+
+
+def resolve_rates(async_spec, num_agents: int) -> np.ndarray:
+    """(K,) per-agent event rates (float64) from an
+    :class:`repro.api.spec.AsyncSpec`.
+
+    ``rate_dist="lognormal"`` is the straggler model: per-agent compute
+    delays ``delay_k ~ LogNormal(0, rate_sigma)`` drawn once per run from
+    ``rate_seed`` (heavy right tail — a few agents are much slower), with
+    ``rate_k = 1 / delay_k``.  ``rate_dist="uniform"`` broadcasts the
+    ``rates`` field (scalar or length-K).
+    """
+    if async_spec.rate_dist not in _RATE_DISTS:
+        raise ValueError(f"unknown rate_dist {async_spec.rate_dist!r} "
+                         f"(expected one of {_RATE_DISTS})")
+    if async_spec.rate_dist == "lognormal":
+        rng = np.random.default_rng(async_spec.rate_seed)
+        delays = rng.lognormal(0.0, float(async_spec.rate_sigma),
+                               size=num_agents)
+        rates = 1.0 / delays
+    else:
+        rates = np.asarray(async_spec.rates, dtype=np.float64)
+        if rates.ndim == 0:
+            rates = np.full((num_agents,), float(rates))
+        if rates.shape != (num_agents,):
+            raise ValueError(f"rates shape {rates.shape} != "
+                             f"({num_agents},)")
+    if (rates <= 0).any():
+        raise ValueError("per-agent event rates must be positive")
+    return rates
+
+
+def _slot_bshape(m: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Reshape a (K, D) slot mask for broadcasting against (K, D, ...)."""
+    return m.reshape(m.shape + (1,) * (leaf.ndim - 2))
+
+
+def _agent_bshape(v: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Reshape a (K,) vector for broadcasting against a (K, ...) leaf."""
+    return v.reshape((v.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+class AsyncEngine:
+    """Event-driven executor speaking the unified step contract.
+
+    ``engine.step(state, block_batch, key) -> (state, metrics)`` with the
+    same :class:`~repro.core.state.EngineState` both synchronous engines
+    thread — plus the ``async_state`` component this engine owns:
+    ``{"t_local": (K,) f32, "ages": (K, D) i32, "buffer": (K, D, ...)}``.
+
+    Args:
+      config: the shared :class:`~repro.core.diffusion.DiffusionConfig`
+        view (``compress`` must be "none": the staleness buffer IS the
+        wire format; ``mix`` must be a linear kind — robust aggregation
+        over stale buffers is future work).
+      loss_fn: per-agent scalar loss, vmapped across the agent axis.
+      grad_transform: optional per-agent gradient transform.
+      async_spec: :class:`repro.api.spec.AsyncSpec` (rates, ``tau_max``,
+        discount law).  ``None`` means the defaults (uniform unit rates).
+      participation / graph: process overrides, as on
+        :class:`~repro.core.diffusion.DiffusionEngine`.  The graph
+        process must stay on base support (``within_base_support``): the
+        staleness buffer is indexed by the base-topology neighbor table.
+    """
+
+    def __init__(self, config: DiffusionConfig, loss_fn: LossFn,
+                 grad_transform=None, *, async_spec=None,
+                 participation=None, graph=None):
+        if async_spec is None:
+            from repro.api.spec import AsyncSpec
+            async_spec = AsyncSpec(enabled=True)
+        if config.num_agents < 2:
+            raise ValueError("AsyncEngine needs num_agents >= 2 (the "
+                             "staleness buffer is built on the neighbor "
+                             "table of a real topology)")
+        if config.compress != "none":
+            raise ValueError(
+                f"AsyncEngine does not compose with compression "
+                f"(compress={config.compress!r}): the staleness buffer "
+                "holds full last-received iterates")
+        if config.mix not in ("dense", "auto", "gather"):
+            raise ValueError(
+                f"AsyncEngine combines through its staleness buffer "
+                f"(a linear bounded-degree gather); mix={config.mix!r} "
+                "is not supported — use dense|auto|gather")
+        if async_spec.discount not in _DISCOUNTS:
+            raise ValueError(f"unknown discount {async_spec.discount!r} "
+                             f"(expected one of {_DISCOUNTS})")
+        if async_spec.tau_max < 0:
+            raise ValueError("tau_max must be >= 0")
+        self.config = config
+        self.loss_fn = loss_fn
+        self.grad_transform = grad_transform
+        self.async_spec = async_spec
+        self.topology = config.make_topology()
+        self.process, q = schedules.resolve(config, participation)
+        self._q = jnp.asarray(q, dtype=jnp.float32)
+        self.graph = graph_lib.make_graph_process(
+            graph if graph is not None else config.graph, self.topology,
+            num_agents=config.num_agents, **dict(config.graph_kwargs))
+        if not self.graph.within_base_support:
+            raise ValueError(
+                f"{type(self.graph).__name__} leaves the base-topology "
+                "support; the AsyncEngine staleness buffer is indexed by "
+                "the base neighbor table and needs within_base_support")
+        idx, valid = self.topology.neighbor_table()
+        self._idx = jnp.asarray(idx)                    # (K, D) int32
+        self._valid = jnp.asarray(valid)                # (K, D) bool
+        rates = resolve_rates(async_spec, config.num_agents)
+        self.rates = rates
+        self.delays = 1.0 / rates                        # seconds / event
+        self._delays = jnp.asarray(self.delays, dtype=jnp.float32)
+        self._rel_rate = jnp.asarray(rates / rates.max(),
+                                     dtype=jnp.float32)  # thinning probs
+        self._q_eff = self._q * self._rel_rate           # P[fire_k]
+        self._grad_fn = jax.vmap(jax.grad(loss_fn))
+
+    # -- staleness discount --------------------------------------------------
+    def _discount(self, ages: jax.Array) -> jax.Array:
+        """(K, D) age-discount weights; zero beyond the staleness cap."""
+        s = self.async_spec
+        age = ages.astype(jnp.float32)
+        if s.discount == "exp":
+            w = jnp.exp(-s.discount_rate * age)
+        elif s.discount == "poly":
+            w = (1.0 + age) ** (-s.discount_rate)
+        else:
+            w = jnp.ones_like(age)
+        return w * (ages <= s.tau_max)
+
+    # -- state construction --------------------------------------------------
+    def init_state(self, params: PyTree, opt_state: PyTree = None, *,
+                   key: jax.Array | None = None) -> EngineState:
+        """Initial :class:`EngineState` with the async component filled:
+        clocks at 0, every buffer slot holding the initial iterate at
+        age 0 (everything starts "fresh")."""
+        k = key if key is not None else jax.random.PRNGKey(0)
+        part_state = (self.process.init_state(k)
+                      if self.process.stateful else None)
+        graph_state = (self.graph.init_state(jax.random.fold_in(k, 0x9A))
+                       if self.graph.stateful else None)
+        K, D = self._idx.shape
+        async_state = {
+            "t_local": jnp.zeros((K,), jnp.float32),
+            "ages": jnp.zeros((K, D), jnp.int32),
+            "buffer": jax.tree.map(lambda p: p[self._idx], params),
+        }
+        return EngineState(params, opt_state, part_state, None,
+                           graph_state, async_state)
+
+    # -- the single block iteration (jit-compatible) -------------------------
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state: EngineState, block_batch: PyTree,
+             key: jax.Array):
+        """One event-grid iteration — the unified step contract.
+
+        Returns ``(new_state, metrics)`` with ``metrics["active"]`` the
+        realized (K,) *fired* mask (participation AND clock tick) and
+        ``metrics["t_wall"]`` the running makespan ``max_k t_local``.
+        """
+        cfg = self.config
+        if self.process.stateful and state.part_state is None:
+            raise ValueError(
+                f"{type(self.process).__name__} carries participation "
+                "state but state.part_state is None; build the state "
+                "with engine.init_state(params, opt_state, key=...)")
+        if self.graph.stateful and state.graph_state is None:
+            raise ValueError(
+                f"{type(self.graph).__name__} carries graph state but "
+                "state.graph_state is None; build the state with "
+                "engine.init_state(params, opt_state, key=...)")
+        if state.async_state is None:
+            raise ValueError(
+                "AsyncEngine threads clocks/ages/buffer through "
+                "state.async_state; build the state with "
+                "engine.init_state(params, opt_state, key=...)")
+        # identical key discipline to DiffusionEngine.step: the unused
+        # second split keeps the activation stream bit-identical, and the
+        # clock tick is a fold on a fresh constant (a new stream — the
+        # activation / graph draws are unchanged vs the synchronous step)
+        key_act, _key_comm = jax.random.split(key)
+        active, part_state = self.process.sample(state.part_state,
+                                                 key_act)        # eq. (18)
+        A_t, graph_state = self.graph.sample(state.graph_state,
+                                             jax.random.fold_in(key, 0x9A))
+        tick = jax.random.bernoulli(jax.random.fold_in(key, 0xA5),
+                                    self._rel_rate)
+        fire = active * tick.astype(active.dtype)
+        mus = part.step_size_matrix(cfg.step_size, fire, self._q_eff,
+                                    cfg.drift_correction)        # (K,)
+        psi, opt_state = local_update_scan(
+            self._grad_fn, state.params, state.opt_state, mus, block_batch,
+            local_steps=cfg.local_steps, grad_transform=self.grad_transform)
+
+        idx, valid = self._idx, self._valid
+        K = cfg.num_agents
+        # receive: fired source agents refresh their slots everywhere
+        # (slot 0 is self: fired agents refresh their own entry)
+        nf = fire[idx].astype(jnp.float32)               # (K, D)
+        ages = jnp.where(nf > 0, 0,
+                         state.async_state["ages"] + 1).astype(jnp.int32)
+        buffer = jax.tree.map(
+            lambda b, p: jnp.where(_slot_bshape(nf, b) > 0,
+                                   p[idx].astype(b.dtype), b),
+            state.async_state["buffer"], psi)
+
+        # combine: age-discounted realized weights over the buffer, self
+        # slot completing each row to exactly 1 (eq.-20 style — removed /
+        # discounted neighbor mass folds into the always-fresh self slot)
+        gw = (A_t.astype(jnp.float32)[idx, jnp.arange(K)[:, None]]
+              * valid.astype(jnp.float32) * self._discount(ages))
+        gw = gw.at[:, 0].set(0.0)
+        gw = gw.at[:, 0].set(1.0 - gw.sum(axis=1))
+        mixed = jax.tree.map(
+            lambda b: jnp.einsum("kd,kd...->k...", gw,
+                                 b.astype(jnp.float32)), buffer)
+        # non-fired agents keep their iterate bit-exactly (the eq.-20
+        # inactive-keep invariant)
+        params = jax.tree.map(
+            lambda p, m: jnp.where(_agent_bshape(fire, p) > 0,
+                                   m.astype(p.dtype), p), psi, mixed)
+
+        t_local = (state.async_state["t_local"]
+                   + fire.astype(jnp.float32) * self._delays)
+        new_state = EngineState(params, opt_state, part_state,
+                                state.comm_state, graph_state,
+                                {"t_local": t_local, "ages": ages,
+                                 "buffer": buffer})
+        return new_state, {"active": fire, "t_wall": t_local.max()}
+
+    # -- convenience runner --------------------------------------------------
+    def run(self, params: PyTree, sampler: Callable[[jax.Array], PyTree],
+            num_blocks: int, seed: int = 0, opt_state: PyTree = None,
+            w_star: PyTree | None = None):
+        """Run ``num_blocks`` event-grid iterations (the same driver loop
+        and key schedule as :meth:`DiffusionEngine.run`); returns
+        (params, opt_state, msd_history)."""
+        key = jax.random.PRNGKey(seed)
+        state = self.init_state(params, opt_state,
+                                key=jax.random.fold_in(key, 0x5EED))
+        history = []
+        for _ in range(num_blocks):
+            key, k_batch, k_step = jax.random.split(key, 3)
+            state, _ = self.step(state, sampler(k_batch), k_step)
+            if w_star is not None:
+                history.append(float(network_msd(state.params, w_star)))
+        return state.params, state.opt_state, history

@@ -39,6 +39,10 @@ Backends differ only in *how* the contraction is executed:
   row of the realized ``A_t`` intersected with the active mask — the
   decentralized setting the paper's eq. 20 actually describes, composing
   with every dynamic :class:`repro.core.graphs.GraphProcess`.
+* :class:`AdaptiveTrimMixer` — trimmed mean whose per-side trim count is
+  *estimated per coordinate* from a MAD outlier fence over the realized
+  contributor set (capped at ``trim``); with no attack it reduces to the
+  plain mean, so the robustness tax of the fixed trim disappears.
 
 Use :func:`make_mixer` to construct one; ``"auto"`` picks the Pallas kernel
 on TPU and the sparse path for bounded-degree topologies on other backends.
@@ -81,6 +85,7 @@ __all__ = [
     "FusedNeighborhoodMixer",
     "TrimmedMeanMixer",
     "CoordinateMedianMixer",
+    "AdaptiveTrimMixer",
     "CommPipeline",
     "choco_gamma",
     "make_mixer",
@@ -835,6 +840,156 @@ class CoordinateMedianMixer(_SortedRobustMixer):
                 f"scope={self.scope!r})")
 
 
+class AdaptiveTrimMixer(TrimmedMeanMixer):
+    """Trimmed mean with a per-coordinate DATA-DEPENDENT trim count.
+
+    The fixed :class:`TrimmedMeanMixer` always discards ``trim`` values
+    per side — paying a robustness tax (less averaging, higher MSD) even
+    when nobody is attacking.  This backend *estimates* the outlier count
+    per (target, coordinate) from the contributions themselves and trims
+    only what it flags, capped at ``trim`` per side:
+
+    * robust location/scale over the S contributors: the coordinate
+      median and the MAD (median absolute deviation, normal-consistency
+      factor 1.4826);
+    * a contribution further than ``mad_thresh`` consistent-MADs from the
+      median is flagged as an outlier.  In ascending sorted order the low
+      flags occupy the first slots and the high flags the last, so the
+      adaptive trim is still an order-statistic slot-weighting —
+      ``b_lo = min(#low flags, trim)`` / ``b_hi = min(#high flags,
+      trim)`` (each also capped at ``floor((S-1)/2)`` so the median
+      always survives);
+    * the surviving slots are averaged, exactly like the fixed trim.
+
+    With no attack almost nothing clears a 3-MAD fence (~4.45 sigma for
+    Gaussian contributions), so the aggregate is the plain mean over the
+    realized neighborhood and the MSD matches the LINEAR mixer — no
+    robustness tax (gated in ``tests/test_adaptive_trim.py``).  Under a
+    sign-flip attack the corrupted coordinates blow through the fence and
+    the backend degrades to the fixed trimmed mean.  Flagging is strict
+    (``<`` / ``>``), so an exactly-tied majority (MAD = 0) never flags
+    equal values.
+
+    Weights depend on the data per coordinate, so the Pallas fused
+    gather kernel (precomputed per-row slot weights) does not apply —
+    ``make_mixer`` keeps this backend on the vmapped gather table.
+    """
+
+    name = "adaptive_trim"
+
+    def __init__(self, num_agents: int, trim: int = 1,
+                 scope: str = "global", mad_thresh: float = 3.0):
+        super().__init__(num_agents, trim=trim, scope=scope)
+        if mad_thresh <= 0:
+            raise ValueError(f"mad_thresh={mad_thresh} must be > 0")
+        self.mad_thresh = float(mad_thresh)
+
+    def _adaptive_weights(self, srt: jax.Array, S: jax.Array) -> jax.Array:
+        """Per-coordinate keep weights over ascending sorted slots.
+
+        ``srt``: (n, ...) sorted along axis 0, +inf beyond the S live
+        slots; ``S``: scalar contributor count.  Returns weights shaped
+        like ``srt`` that are zero on dead slots and on the flagged
+        outlier tails, renormalized to sum to 1 per coordinate.
+        """
+        n = srt.shape[0]
+        ranks = jnp.arange(n, dtype=jnp.float32).reshape(
+            (n,) + (1,) * (srt.ndim - 1))
+        live = (ranks < S).astype(jnp.float32)
+        lo_i = jnp.clip(jnp.floor((S - 1.0) / 2.0), 0.0).astype(jnp.int32)
+        hi_i = jnp.clip(jnp.ceil((S - 1.0) / 2.0), 0.0).astype(jnp.int32)
+        med = jnp.where(S >= 1.0,
+                        0.5 * (jnp.take(srt, lo_i, axis=0)
+                               + jnp.take(srt, hi_i, axis=0)), 0.0)
+        # MAD needs a second sort: |x - med| is not monotone in x
+        dev = jnp.where(live > 0, jnp.abs(srt - med), jnp.inf)
+        dev_srt = jnp.sort(dev, axis=0)
+        mad = jnp.where(S >= 1.0,
+                        0.5 * (jnp.take(dev_srt, lo_i, axis=0)
+                               + jnp.take(dev_srt, hi_i, axis=0)), 0.0)
+        thr = self.mad_thresh * 1.4826 * mad
+        # strict inequalities: exactly-tied values (MAD = 0) never flag
+        lo_out = jnp.sum(live * (srt < med - thr), axis=0)
+        hi_out = jnp.sum(live * (srt > med + thr), axis=0)
+        cap = jnp.clip(jnp.minimum(float(self.trim),
+                                   jnp.floor((S - 1.0) / 2.0)), 0.0)
+        b_lo = jnp.minimum(lo_out, cap)
+        b_hi = jnp.minimum(hi_out, cap)
+        keep = live * (ranks >= b_lo) * (ranks < S - b_hi)
+        return keep / jnp.maximum(keep.sum(axis=0, keepdims=True), 1.0)
+
+    # the three aggregation paths mirror the base class, with the
+    # per-row scalar slot weights replaced by per-coordinate adaptive
+    # weights computed from the sorted values themselves
+    def _global(self, params: PyTree, active: jax.Array) -> PyTree:
+        K = self.num_agents
+        S = active.astype(jnp.float32).sum()
+
+        def leaf(p: jax.Array) -> jax.Array:
+            m = active.astype(jnp.float32).reshape(
+                (K,) + (1,) * (p.ndim - 1))
+            x = p.astype(jnp.float32)
+            srt = jnp.sort(jnp.where(m > 0, x, jnp.inf), axis=0)
+            w = self._adaptive_weights(srt, S)
+            agg = jnp.sum(jnp.where(w > 0, srt, 0.0) * w, axis=0,
+                          keepdims=True)
+            return jnp.where(m > 0, agg.astype(p.dtype), p)
+
+        return jax.tree.map(leaf, params)
+
+    def _neighborhood_dense(self, params: PyTree, active: jax.Array,
+                            A_t: jax.Array) -> PyTree:
+        K = self.num_agents
+        m = active.astype(jnp.float32)
+        A_eff = part.masked_combination(A_t.astype(jnp.float32), active)
+        member = ((A_eff != 0) | jnp.eye(K, dtype=bool))   # (contrib, target)
+        S = member.astype(jnp.float32).sum(axis=0)
+        mem_t = member.T
+
+        def leaf(p: jax.Array) -> jax.Array:
+            x = p.astype(jnp.float32).reshape(K, -1)       # (K, M)
+
+            def row(mem_k, S_k):
+                vals = jnp.where(mem_k[:, None], x, jnp.inf)
+                srt = jnp.sort(vals, axis=0)
+                w = self._adaptive_weights(srt, S_k)
+                return jnp.sum(jnp.where(w > 0, srt, 0.0) * w, axis=0)
+
+            agg = jax.vmap(row)(mem_t, S)                  # (K, M)
+            out = jnp.where(m[:, None] > 0, agg.astype(p.dtype),
+                            p.reshape(K, -1))
+            return out.reshape(p.shape)
+
+        return jax.tree.map(leaf, params)
+
+    def _neighborhood_gather(self, params: PyTree, active: jax.Array,
+                             A_t: jax.Array) -> PyTree:
+        K = self.num_agents
+        idx, valid = self._table
+        m = active.astype(jnp.float32)
+        A_eff = part.masked_combination(A_t.astype(jnp.float32), active)
+        gw = (A_eff[idx, jnp.arange(K)[:, None]]
+              * valid.astype(jnp.float32))                 # (K, D)
+        member = (gw != 0).at[:, 0].set(True)
+        S = member.astype(jnp.float32).sum(axis=1)
+
+        def leaf(p: jax.Array) -> jax.Array:
+            x = p.astype(jnp.float32).reshape(K, -1)       # (K, M)
+            vals = jnp.where(member[:, :, None], x[idx], jnp.inf)
+            srt = jnp.sort(vals, axis=1)
+            w = jax.vmap(self._adaptive_weights)(srt, S)   # (K, D, M)
+            agg = jnp.sum(jnp.where(w > 0, srt, 0.0) * w, axis=1)
+            out = jnp.where(m[:, None] > 0, agg.astype(p.dtype),
+                            p.reshape(K, -1))
+            return out.reshape(p.shape)
+
+        return jax.tree.map(leaf, params)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"AdaptiveTrimMixer(K={self.num_agents}, trim={self.trim}, "
+                f"mad_thresh={self.mad_thresh}, scope={self.scope!r})")
+
+
 class FusedNeighborhoodMixer(Mixer):
     """Neighborhood-robust aggregation through the fused Pallas gather
     kernel (:func:`repro.kernels.diffusion_mix.gather_robust_mix`).
@@ -1298,15 +1453,17 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
 
     Args:
       name: "dense" | "sparse" | "pallas" | "gather" | "auto" | "none" |
-        "trimmed_mean" | "median", or an existing :class:`Mixer` (returned
-        unchanged).
+        "trimmed_mean" | "median" | "adaptive_trim", or an existing
+        :class:`Mixer` (returned unchanged).
       topology: source of the circulant offsets / neighbor table / auto
         policy / K.
       A: (K, K) base matrix — used only to infer ``num_agents``.
       offsets: circulant offsets override for the sparse path.
       num_agents: disables mixing when 1 (returns :class:`NullMixer`).
       tile_m / interpret: Pallas kernel knobs (see :class:`PallasFusedMixer`).
-      trim: per-side trim count for the "trimmed_mean" backend.
+      trim: per-side trim count for the "trimmed_mean" backend; per-side
+        trim CAP for "adaptive_trim" (the realized count is estimated per
+        coordinate from a MAD outlier fence).
       scope: robust-aggregation scope — "global" (SLSGD server setting,
         A_t ignored) or "neighborhood" (per-agent over the realized
         neighborhood of A_t).
@@ -1327,7 +1484,7 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
             num_agents = int(np.asarray(A).shape[0])
     if name == "none" or (num_agents is not None and num_agents <= 1):
         return NullMixer()
-    if name in ("trimmed_mean", "median"):
+    if name in ("trimmed_mean", "median", "adaptive_trim"):
         # robust aggregation; needs only K (and A_t per call for the
         # neighborhood scope)
         if num_agents is None:
@@ -1336,8 +1493,15 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
         if gather not in ("auto", "table", "fused", "off"):
             raise ValueError(f"gather={gather!r} must be auto|table|"
                              "fused|off")
+        if name == "adaptive_trim" and gather == "fused":
+            raise ValueError(
+                "adaptive_trim computes data-dependent per-coordinate "
+                "weights — the fused kernel precomputes slot weights per "
+                "row and cannot apply it; use gather=table|auto|off")
         mixer = (TrimmedMeanMixer(num_agents, trim=trim, scope=scope)
                  if name == "trimmed_mean"
+                 else AdaptiveTrimMixer(num_agents, trim=trim, scope=scope)
+                 if name == "adaptive_trim"
                  else CoordinateMedianMixer(num_agents, scope=scope))
         if scope != "neighborhood":
             return mixer
@@ -1352,8 +1516,10 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
             # auto without structure: all-slots sort for now;
             # check_mixer_support attaches a table from graph.topology
             return mixer
-        if (gather == "fused"
-                or (gather == "auto" and jax.default_backend() == "tpu")):
+        if (name != "adaptive_trim"
+                and (gather == "fused"
+                     or (gather == "auto"
+                         and jax.default_backend() == "tpu"))):
             # the wrapped inner stays _gather_mode="auto" so an
             # off-support graph degrades to the all-slots sort instead of
             # erroring (only use_kernel=True makes that a hard error)
@@ -1383,7 +1549,8 @@ def make_mixer(name: str | Mixer, topology: topo_lib.Topology | None = None,
     if name == "pallas":
         return PallasFusedMixer(tile_m=tile_m, interpret=interpret)
     raise ValueError(f"unknown mixer {name!r} (expected dense|sparse|"
-                     "pallas|gather|auto|none|trimmed_mean|median)")
+                     "pallas|gather|auto|none|trimmed_mean|median|"
+                     "adaptive_trim)")
 
 
 def make_pipeline(mix: str | Mixer, topology: topo_lib.Topology | None = None,

@@ -28,6 +28,20 @@ enumeration is 2^K) with a deterministic seed; for K <= 12 we enumerate
 exactly.  ``(x)`` denotes the Kronecker product (the paper's block-Kronecker
 ``(x)_b`` reduces to the ordinary Kronecker once everything is expressed on
 the stacked KM-dimensional state, which is what we do).
+
+Dynamic graphs (Theorem 5 over a :class:`repro.core.graphs.GraphProcess`):
+the base matrix ``A`` generalizes to the LAW of the realized combination
+matrix — a finite list of ``(weight, A_g)`` pairs built by
+:func:`graph_matrix_law` — and every operator expectation runs over the
+product law (graph draw x activation mask; the two are independent by
+construction, the engines fold separate keys).  For
+:class:`~repro.core.graphs.LinkDropout` the law is EXACT: all 2^E link
+up/down masks of the base edge set, each Metropolis-reweighted exactly as
+the jit-side process does (``corr > 0`` shares the stationary per-block
+marginal, so the per-block expectations are exact but the block-to-block
+independence Theorem 5 factorizes over is an approximation — bursty
+outages correlate consecutive F_i draws).  Other processes fall back to a
+deduplicated Monte-Carlo matrix law through the process's own ``sample``.
 """
 from __future__ import annotations
 
@@ -40,7 +54,7 @@ import numpy as np
 from repro.core import participation as part
 
 __all__ = ["QuadraticProblem", "theoretical_msd", "theoretical_curve",
-           "mask_batches"]
+           "mask_batches", "graph_matrix_law"]
 
 
 @dataclasses.dataclass
@@ -130,14 +144,97 @@ def _exact_masks(K: int, q: np.ndarray):
     return masks, pm
 
 
+def _metropolis_np(off_adj: np.ndarray) -> np.ndarray:
+    """numpy twin of :func:`repro.core.graphs.metropolis_weights_jnp` —
+    same ``1 / (1 + max(deg_l, deg_k))`` rule, so the enumerated law
+    reproduces the jit-side realized matrices exactly."""
+    off = np.asarray(off_adj, dtype=np.float64)
+    deg = off.sum(axis=1)
+    pair = np.maximum(deg[:, None], deg[None, :])
+    W = off / (1.0 + pair)
+    return W + np.diag(1.0 - W.sum(axis=0))
+
+
+def graph_matrix_law(graph=None, *, A=None, max_edges: int = 12,
+                     num_samples: int = 256, seed: int = 0):
+    """The law of the realized combination matrix as ``[(weight, A_g)]``.
+
+    * ``graph=None`` (or a static graph): the singleton ``[(1.0, A)]`` —
+      Theorem 5 exactly as before.
+    * :class:`~repro.core.graphs.LinkDropout`: EXACT enumeration of all
+      2^E link up/down masks of the base edge set (requires ``E <=
+      max_edges``), each realized adjacency Metropolis-reweighted with the
+      same rule the jit-side process applies.  At ``drop = 0`` this
+      collapses to the single base matrix, so the dynamic law degenerates
+      to the static one exactly (gated in tests/test_msd_theory.py).
+      ``corr > 0`` is handled through the stationary per-link marginal
+      (up-probability ``1 - drop``): per-block expectations stay exact,
+      block-to-block independence becomes an approximation.
+    * any other process: deduplicated Monte-Carlo — ``num_samples`` draws
+      through the process's own ``sample`` (deterministic in ``seed``),
+      identical realized matrices collapsed into one weighted atom (the
+      gossip matching law on small graphs has few atoms, so this is
+      near-exact at modest sample counts).
+    """
+    from repro.core import graphs as graphs_lib   # local: keeps msd numpy-only
+    if graph is None or isinstance(graph, graphs_lib.StaticGraph):
+        if A is None and graph is None:
+            raise ValueError("graph_matrix_law needs a graph or a matrix A")
+        base = A if A is not None else np.asarray(graph.base_matrix())
+        return [(1.0, np.asarray(base, dtype=np.float64))]
+    if isinstance(graph, graphs_lib.LinkDropout):
+        off = np.asarray(graph._base_off, dtype=np.float64)
+        K = off.shape[0]
+        iu, ju = np.nonzero(np.triu(off, k=1))
+        E = len(iu)
+        if E > max_edges:
+            raise ValueError(
+                f"LinkDropout law enumerates 2^E link masks but the base "
+                f"graph has E={E} edges (> max_edges={max_edges}) — raise "
+                "max_edges (cost doubles per edge) or use a smaller base "
+                "graph")
+        up = 1.0 - graph.drop
+        law = []
+        for bits in itertools.product((0, 1), repeat=E):
+            w = float(np.prod([up if b else graph.drop for b in bits]))
+            if w == 0.0:
+                continue
+            adj = np.zeros((K, K))
+            for b, i, j in zip(bits, iu, ju):
+                if b:
+                    adj[i, j] = adj[j, i] = 1.0
+            law.append((w, _metropolis_np(adj)))
+        return law
+    # generic fallback: MC through the process's own sampler, dedup exact
+    # repeats (finite-support processes collapse to few atoms)
+    import jax
+    key = jax.random.PRNGKey(seed)
+    state = graph.init_state(jax.random.fold_in(key, 1))
+    atoms: dict[bytes, list] = {}
+    for i in range(num_samples):
+        A_t, state = graph.sample(state, jax.random.fold_in(key, 2 + i))
+        A_np = np.round(np.asarray(A_t, dtype=np.float64), 9)
+        k = A_np.tobytes()
+        if k in atoms:
+            atoms[k][0] += 1.0 / num_samples
+        else:
+            atoms[k] = [1.0 / num_samples, A_np]
+    return [(w, Ag) for w, Ag in atoms.values()]
+
+
 def _mask_expectation_operators(problem: QuadraticProblem, *, A: np.ndarray,
                                 q: np.ndarray, mu: float, T: int,
                                 batch: int = 1,
                                 drift_correction: bool = False,
                                 num_mask_samples: int = 400, seed: int = 0,
-                                exact_threshold: int = 12) -> dict:
+                                exact_threshold: int = 12,
+                                A_law=None) -> dict:
     """All Theorem-5 operators: E[F], E[G], E[F⊗F], E[G⊗G], E[G⊗F],
-    E[F⊗G], Σ_t E[N_t⊗N_t], plus H, b, S_noise, w_o."""
+    E[F⊗G], Σ_t E[N_t⊗N_t], plus H, b, S_noise, w_o.
+
+    ``A_law`` (a ``[(weight, A_g)]`` list from :func:`graph_matrix_law`)
+    replaces the static ``A`` with the realized-matrix law; expectations
+    run over the independent product with the activation-mask law."""
     K = problem.num_agents
     M = problem.dim
     KM = K * M
@@ -171,10 +268,13 @@ def _mask_expectation_operators(problem: QuadraticProblem, *, A: np.ndarray,
         batches = [(m, np.full(m.shape[0], 1.0 / num_mask_samples))
                    for m in mask_batches(K, q, num_mask_samples, seed)]
 
+    if A_law is None:
+        A_law = [(1.0, np.asarray(A, dtype=np.float64))]
+
     for masks_b, w_b in batches:
         for mask, wgt in zip(masks_b, w_b):
-            A_i = part.masked_combination_np(A, mask)
-            Ai = np.kron(A_i.T, I_M)                       # (A_i^T (x) I_M)
+            # the local-update factors depend on the mask only — hoist
+            # them out of the graph-law loop
             mus = mu * mask / q if drift_correction else mu * mask
             Mi = np.kron(np.diag(mus), I_M)
             P = I_KM - Mi @ H
@@ -182,17 +282,23 @@ def _mask_expectation_operators(problem: QuadraticProblem, *, A: np.ndarray,
             Pt = [I_KM]
             for _ in range(T):
                 Pt.append(Pt[-1] @ P)
-            F = Ai @ Pt[T]
-            G = Ai @ sum(Pt[t] for t in range(T)) @ Mi
-            EF += wgt * F
-            EG += wgt * G
-            EFF += wgt * np.kron(F, F)
-            EGG += wgt * np.kron(G, G)
-            EGF += wgt * np.kron(G, F)
-            EFG += wgt * np.kron(F, G)
-            for t in range(T):
-                N_t = Ai @ Pt[t] @ Mi
-                ENN += wgt * np.kron(N_t, N_t)
+            PT = Pt[T]
+            Psum_M = sum(Pt[t] for t in range(T)) @ Mi
+            for g_w, A_g in A_law:
+                w = wgt * g_w
+                A_i = part.masked_combination_np(A_g, mask)
+                Ai = np.kron(A_i.T, I_M)                   # (A_i^T (x) I_M)
+                F = Ai @ PT
+                G = Ai @ Psum_M
+                EF += w * F
+                EG += w * G
+                EFF += w * np.kron(F, F)
+                EGG += w * np.kron(G, G)
+                EGF += w * np.kron(G, F)
+                EFG += w * np.kron(F, G)
+                for t in range(T):
+                    N_t = Ai @ Pt[t] @ Mi
+                    ENN += w * np.kron(N_t, N_t)
 
     # steady-state mean (paper eq. 175) --------------------------------------
     m_inf = -np.linalg.solve(I_KM - EF, EG @ b)
@@ -226,22 +332,43 @@ def _mask_expectation_operators(problem: QuadraticProblem, *, A: np.ndarray,
     }
 
 
-def theoretical_msd(problem: QuadraticProblem, *, A: np.ndarray,
+def theoretical_msd(problem: QuadraticProblem, *, A: np.ndarray | None = None,
                     q: np.ndarray, mu: float, T: int, batch: int = 1,
                     drift_correction: bool = False,
                     num_mask_samples: int = 400, seed: int = 0,
-                    exact_threshold: int = 12) -> dict:
+                    exact_threshold: int = 12, graph=None,
+                    max_graph_edges: int = 12,
+                    num_graph_samples: int = 256) -> dict:
     """Evaluate Theorem 5's MSD for a quadratic problem.
+
+    With the default ``graph=None`` this is the static Theorem 5 over the
+    base matrix ``A``.  Passing a :class:`repro.core.graphs.GraphProcess`
+    evaluates the dynamic-graph law instead: every operator expectation
+    runs over the product of the activation-mask law and the realized-
+    matrix law from :func:`graph_matrix_law` (exact for LinkDropout with
+    ``E <= max_graph_edges`` base edges, deduplicated MC with
+    ``num_graph_samples`` draws otherwise — see that function for the
+    ``corr > 0`` caveat).  ``A`` is then optional (defaults to the
+    process's base matrix, used only for w_opt-independent bookkeeping).
 
     Returns dict with msd, w_opt, m_inf (steady-state mean error), the
     spectral radius of E[F (x) F] (sanity: < 1 for stability), and the
     raw mask-expectation operators for transient analysis.
     """
+    A_law = None
+    if graph is not None:
+        A_law = graph_matrix_law(graph, A=A, max_edges=max_graph_edges,
+                                 num_samples=num_graph_samples, seed=seed)
+        if A is None:
+            A = A_law[0][1]
+    elif A is None:
+        raise ValueError("theoretical_msd needs A= (static) or graph= "
+                         "(dynamic law)")
     return _mask_expectation_operators(
         problem, A=A, q=q, mu=mu, T=T, batch=batch,
         drift_correction=drift_correction,
         num_mask_samples=num_mask_samples, seed=seed,
-        exact_threshold=exact_threshold)
+        exact_threshold=exact_threshold, A_law=A_law)
 
 
 def theoretical_curve(theory: dict, w0: np.ndarray, num_blocks: int) -> np.ndarray:

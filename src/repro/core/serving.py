@@ -76,7 +76,22 @@ def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
     ``quantize_seed``.
 
     Take agent 0 at the end.
+
+    Accepts either the bare (K, ...) stacked pytree or a full
+    :class:`repro.core.state.EngineState` — async-engine checkpoints carry
+    per-agent clocks and the staleness buffer next to the iterate, and the
+    consensus comes from the param stack only (the buffer holds
+    last-*received* copies, not the iterate).
     """
+    from repro.core.state import EngineState
+    if isinstance(stacked, EngineState):
+        stacked = stacked.params
+    elif (isinstance(stacked, dict) and "params" in stacked
+          and ("async_state" in stacked or "opt_state" in stacked)):
+        # dict-shaped EngineState (e.g. a hand-built archive view): the
+        # non-param components (async buffer/clocks, opt state) are not
+        # averageable — use the param stack
+        stacked = stacked["params"]
     if quantize not in (None,) + CONSENSUS_QUANTIZE:
         raise ValueError(f"quantize={quantize!r} not in {CONSENSUS_QUANTIZE}")
     if quantize == "int8":

@@ -20,7 +20,12 @@ block iterations:
 * ``graph_state`` — combination-graph-process state (``None`` for the
   static topology and the i.i.d. dynamic graphs; Markov-correlated link
   dropout carries the current link up/down mask —
-  :mod:`repro.core.graphs`).
+  :mod:`repro.core.graphs`);
+* ``async_state`` — event-driven-engine state (``None`` for the
+  bulk-synchronous engines; :class:`repro.core.async_engine.AsyncEngine`
+  carries ``{"t_local", "ages", "buffer"}`` — per-agent clocks, the
+  per-slot staleness ages, and the bounded-degree ``(K, D, ...)``
+  last-received-neighbor-params buffer).
 
 Absent components are ``None`` leaves, so ONE pytree structure covers every
 engine configuration: the state is jit-transparent, `jax.tree`-mappable,
@@ -50,6 +55,9 @@ class EngineState:
     part_state: PyTree = None
     comm_state: PyTree = None
     graph_state: PyTree = None
+    # appended LAST: positional construction of the 5 classic components
+    # (both sync engines) stays valid
+    async_state: PyTree = None
 
     def replace(self, **changes) -> "EngineState":
         return dataclasses.replace(self, **changes)

@@ -130,7 +130,7 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                      error_feedback: bool = False, graph: str = "static",
                      graph_kwargs: tuple = (), trim: int = 1,
                      robust_scope: str = "global",
-                     robust_gather: str = "auto"):
+                     robust_gather: str = "auto", asynchrony=None):
     cfg = bundle.model
     pc = bundle.parallel
     tp = pc.tp if tp is None else tp
@@ -147,6 +147,23 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
         topo, A = None, jnp.eye(1)
     mix = mix_override or (pc.mix_path if K > 1 else "none")
 
+    # shardings
+    inner = sh.param_pspecs(tf.param_specs(cfg), mesh, fsdp=pc.fsdp, tp=tp)
+    pspec = sh.add_agent_axis(inner, agent_axis)
+    param_sds = jax.tree.map(
+        lambda s, p: SDS((K,) + s.shape, s.dtype,
+                         sharding=jax.NamedSharding(mesh, p)),
+        tf.param_specs(cfg), pspec, is_leaf=lambda x: isinstance(x, SDS))
+
+    specs = input_specs(bundle.model.name, shape.name, multi_pod=multi_pod,
+                        mesh=mesh, tp=tp)
+    param_shardings = jax.tree.map(lambda s: s.sharding, param_sds,
+                                   is_leaf=lambda x: isinstance(x, SDS))
+
+    if asynchrony is not None and asynchrony.enabled:
+        return _build_async_train_step(cfg, pc, topo_cfg, asynchrony, mesh,
+                                       K, param_sds, param_shardings, specs)
+
     def loss_fn(agent_params, agent_batch, rng):
         return tf.train_loss(agent_params, cfg, agent_batch, rng,
                              remat=pc.remat)
@@ -160,18 +177,6 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
                                  robust_gather=robust_gather,
                                  mesh=mesh, agent_axis=agent_axis)
 
-    # shardings
-    inner = sh.param_pspecs(tf.param_specs(cfg), mesh, fsdp=pc.fsdp, tp=tp)
-    pspec = sh.add_agent_axis(inner, agent_axis)
-    param_sds = jax.tree.map(
-        lambda s, p: SDS((K,) + s.shape, s.dtype,
-                         sharding=jax.NamedSharding(mesh, p)),
-        tf.param_specs(cfg), pspec, is_leaf=lambda x: isinstance(x, SDS))
-
-    specs = input_specs(bundle.model.name, shape.name, multi_pod=multi_pod,
-                        mesh=mesh, tp=tp)
-    param_shardings = jax.tree.map(lambda s: s.sharding, param_sds,
-                                   is_leaf=lambda x: isinstance(x, SDS))
     comm_sds = comm_shardings = None
     if block_step.pipeline.stateful:
         # comm state: params-shaped leaves (EF residual / diff-mode
@@ -211,6 +216,61 @@ def build_train_step(bundle: ArchBundle, shape: InputShape, mesh,
 
     def step(state, key, batch):
         new_state, metrics = block_step(state, batch, key)
+        return new_state, metrics["active"]
+
+    args = (state_sds, specs["key"], specs["batch"])
+    return step, args, (state_shardings, None)
+
+
+def _build_async_train_step(cfg, pc, topo_cfg, asynchrony, mesh, K,
+                            param_sds, param_shardings, specs):
+    """Compile path for ``--engine async``: the event-driven engine's step
+    against ShapeDtypeStruct stand-ins, including the staleness-buffer
+    component of the state (buffer leaves shard like the params they
+    mirror, with the neighbor-slot axis replicated)."""
+    from repro.core.async_engine import AsyncEngine
+
+    if K < 2:
+        raise ValueError("--engine async needs a multi-agent arch (K >= 2)")
+
+    def loss_fn(agent_params, agent_batch):
+        return tf.train_loss(agent_params, cfg, agent_batch, remat=pc.remat)
+
+    eng = AsyncEngine(topo_cfg, loss_fn, async_spec=asynchrony)
+    D = int(eng._idx.shape[1])
+    replicated = jax.NamedSharding(mesh, P())
+
+    def _buf_sharding(s):
+        spec = tuple(s.sharding.spec)
+        agent = spec[0] if spec else None
+        return jax.NamedSharding(mesh, P(agent, None, *spec[1:]))
+
+    buffer_sds = jax.tree.map(
+        lambda s: SDS((K, D) + s.shape[1:], s.dtype,
+                      sharding=_buf_sharding(s)),
+        param_sds, is_leaf=lambda x: isinstance(x, SDS))
+    async_sds = {
+        "t_local": SDS((K,), jnp.float32, sharding=replicated),
+        "ages": SDS((K, D), jnp.int32, sharding=replicated),
+        "buffer": buffer_sds,
+    }
+    async_shardings = jax.tree.map(lambda s: s.sharding, async_sds,
+                                   is_leaf=lambda x: isinstance(x, SDS))
+    graph_sds = graph_shardings = None
+    if eng.graph.stateful:
+        g_struct = jax.eval_shape(eng.graph.init_state,
+                                  SDS((2,), jnp.uint32))
+        graph_sds = jax.tree.map(
+            lambda l: SDS(l.shape, l.dtype, sharding=replicated), g_struct)
+        graph_shardings = jax.tree.map(lambda l: replicated, g_struct)
+
+    state_sds = EngineState(param_sds, None, None, None, graph_sds,
+                            async_sds)
+    state_shardings = EngineState(param_shardings, None, None, None,
+                                  graph_shardings, async_shardings)
+
+    def step(state, key, batch):
+        new_state, metrics = eng.step(state, batch, key)
         return new_state, metrics["active"]
 
     args = (state_sds, specs["key"], specs["batch"])
@@ -381,7 +441,7 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                error_feedback: bool = False, graph: str = "static",
                graph_kwargs: tuple = (), trim: int = 1,
                robust_scope: str = "global",
-               robust_gather: str = "auto") -> dict:
+               robust_gather: str = "auto", asynchrony=None) -> dict:
     multi_pod = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
     bundle = get_config(arch)
@@ -399,7 +459,8 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
                                               graph_kwargs=graph_kwargs,
                                               trim=trim,
                                               robust_scope=robust_scope,
-                                              robust_gather=robust_gather)
+                                              robust_gather=robust_gather,
+                                              asynchrony=asynchrony)
     elif shape.kind == "prefill":
         step, args, out_sh = build_prefill_step(bundle, shape, mesh, multi_pod)
     else:
@@ -433,6 +494,8 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str,
         "shape": shape_name,
         "mesh": mesh_kind,
         "mix": mix_override or "default",
+        "engine": ("async" if asynchrony is not None and asynchrony.enabled
+                   else "sharded"),
         "graph": graph,
         "compress": compress or "none",
         "compress_ratio": compress_ratio,
@@ -492,6 +555,7 @@ def main():
     for arch, shape, mesh_kind in combos:
         tag = (f"{arch}_{shape}_{mesh_kind}"
                + (f"_{mix}" if mix else "")
+               + ("_async" if spec.asynchrony.enabled else "")
                + (f"_{spec.graph.kind}" if spec.graph.kind != "static"
                   else "")
                + (f"_{compress}" if compress != "none" else "")
@@ -510,7 +574,8 @@ def main():
                              graph_kwargs=spec.graph_kwargs(),
                              trim=spec.mixer.trim,
                              robust_scope=spec.mixer.scope,
-                             robust_gather=spec.mixer.gather)
+                             robust_gather=spec.mixer.gather,
+                             asynchrony=spec.asynchrony)
             with open(out_path, "w") as f:
                 json.dump(res, f, indent=1)
             print(f"OK   {tag}: compile={res['compile_seconds']}s "

@@ -49,11 +49,12 @@ def main():
     args = ap.parse_args()
 
     spec = spec_from_args(args)
-    eng = build(spec)                       # transformer model -> sharded
+    eng = build(spec, engine=args.engine)   # transformer model -> sharded
     run = spec.run
     K, T = run.num_agents, run.local_steps
     cfg = eng.model.cfg
-    pipeline = eng.pipeline
+    pipeline = getattr(eng, "pipeline", None)   # async: no CommPipeline
+    is_async = spec.asynchrony.enabled
 
     key = jax.random.PRNGKey(run.seed)
     kp, key = jax.random.split(key)
@@ -63,6 +64,16 @@ def main():
         print(f"graph: {spec.graph.kind} — the combination matrix is "
               f"resampled every block ({g!r}); "
               f"stateful={bool(g is not None and g.stateful)}")
+    if is_async:
+        # straggler simulation: per-agent event delays fixed for the run
+        d = eng.delays
+        a = spec.asynchrony
+        print(f"async: {a.rate_dist} rates "
+              f"(sigma={a.rate_sigma}, seed={a.rate_seed}) — per-event "
+              f"delays min={d.min():.3f}s median={float(jnp.median(jnp.asarray(d))):.3f}s "
+              f"max={d.max():.3f}s; tau_max={a.tau_max} "
+              f"discount={a.discount}({a.discount_rate}); a synchronous "
+              f"block would pay the max every time")
     # state leaves mirror the stacked (K, ...) layout; step counter is shared
     opt_state = eng.optimizer.init(params)
     state = eng.init_state(params, opt_state,
@@ -109,10 +120,12 @@ def main():
             active = metrics["active"]
             losses = eval_loss(state.params,
                                jax.tree.map(lambda x: x[0], batch))
+            wall = (f"  sim_wall={float(metrics['t_wall']):.1f}s"
+                    if is_async else "")
             print(f"block {i:4d}  active={int(active.sum())}/{K}  "
                   f"mean_loss={float(losses.mean()):.4f}  "
                   f"spread={float(losses.max() - losses.min()):.4f}  "
-                  f"t={time.time() - t0:.1f}s")
+                  f"t={time.time() - t0:.1f}s{wall}")
 
     if args.checkpoint:
         save_experiment(args.checkpoint, state, spec=spec, step=run.blocks,

@@ -1,10 +1,14 @@
-"""Theorem 5: closed-form MSD matches simulation (the paper's Fig. 5 claim)."""
+"""Theorem 5: closed-form MSD matches simulation (the paper's Fig. 5 claim),
+including the dynamic-graph extension (expectations over the realized
+combination-matrix law from graph_matrix_law)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.diffusion import DiffusionConfig, DiffusionEngine
-from repro.core.msd import theoretical_msd
+from repro.core.graphs import make_graph_process
+from repro.core.msd import graph_matrix_law, theoretical_msd
+from repro.core.topology import make_topology
 from repro.data.synthetic import make_block_sampler, make_regression_problem
 
 
@@ -67,6 +71,75 @@ def test_msd_scales_with_mu():
     m2 = theoretical_msd(data.problem(), A=topo.A, q=q, mu=0.02, T=2)["msd"]
     ratio = m2 / m1
     assert 2.0 < ratio < 8.0  # ~linear in mu (4x expected)
+
+
+def test_graph_law_drop_zero_degenerates_to_static():
+    """LinkDropout at drop=0 has a one-atom law equal to the Metropolis
+    base matrix, so the dynamic Theorem 5 is bit-equal to the static one."""
+    K = 6
+    topo = make_topology("ring", K)
+    g = make_graph_process("link_dropout", topo, drop=0.0)
+    law = graph_matrix_law(g)
+    assert len(law) == 1 and law[0][0] == 1.0
+    np.testing.assert_allclose(law[0][1], np.asarray(topo.A), atol=1e-7)
+    data = make_regression_problem(K=K, N=80, M=2, rho=0.1, seed=3)
+    q = np.full(K, 0.8)
+    static = theoretical_msd(data.problem(), A=topo.A, q=q, mu=0.01, T=2)
+    dynamic = theoretical_msd(data.problem(), graph=g, q=q, mu=0.01, T=2)
+    assert dynamic["msd"] == static["msd"]
+
+
+def test_graph_law_shape_and_guards():
+    """drop>0: weights form a probability law over doubly-stochastic atoms;
+    enumeration refuses base graphs beyond the 2^E budget; theoretical_msd
+    needs at least one of A / graph."""
+    K = 6
+    topo = make_topology("ring", K)
+    g = make_graph_process("link_dropout", topo, drop=0.3)
+    law = graph_matrix_law(g)
+    assert len(law) == 2 ** K                  # ring: E = K edges
+    np.testing.assert_allclose(sum(w for w, _ in law), 1.0, atol=1e-12)
+    for w, Ag in law:
+        assert w > 0
+        np.testing.assert_allclose(Ag.sum(axis=0), 1.0, atol=1e-9)
+        np.testing.assert_allclose(Ag, Ag.T, atol=1e-12)
+    with pytest.raises(ValueError, match="max_edges"):
+        graph_matrix_law(g, max_edges=3)
+    data = make_regression_problem(K=K, N=40, M=2, rho=0.1, seed=3)
+    with pytest.raises(ValueError):
+        theoretical_msd(data.problem(), q=np.full(K, 0.8), mu=0.01, T=1)
+
+
+@pytest.mark.slow
+def test_dynamic_graph_msd_matches_simulation():
+    """Theorem 5 over the enumerated LinkDropout law tracks the simulated
+    steady state where the static law (base matrix only) visibly does not
+    — link failures slow information flow and raise the network MSD."""
+    K, T, mu, drop = 6, 2, 0.01, 0.3
+    data = make_regression_problem(K=K, N=80, M=2, rho=0.1, seed=7)
+    q = np.full(K, 0.9)
+    cfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=mu,
+                          topology="ring", participation=0.9,
+                          graph="link_dropout",
+                          graph_kwargs=(("drop", drop),))
+    topo = cfg.make_topology()
+    g = make_graph_process("link_dropout", topo, drop=drop)
+    th_dyn = theoretical_msd(data.problem(), graph=g, q=q, mu=mu, T=T)
+    th_sta = theoretical_msd(data.problem(), A=topo.A, q=q, mu=mu, T=T)
+    assert th_dyn["msd"] > th_sta["msd"]       # dropped links must cost MSD
+
+    eng = DiffusionEngine(cfg, data.loss_fn())
+    sampler = make_block_sampler(data, T=T, batch=1)
+    msds = []
+    for rep in range(3):
+        _, _, hist = eng.run(jnp.zeros((K, 2)), sampler, 2500, seed=rep,
+                             w_star=jnp.asarray(th_dyn["w_opt"]))
+        msds.append(np.mean(hist[-600:]))
+    sim = float(np.mean(msds))
+    rel_dyn = abs(sim - th_dyn["msd"]) / sim
+    rel_sta = abs(sim - th_sta["msd"]) / sim
+    assert rel_dyn < 0.15, (sim, th_dyn["msd"])
+    assert rel_dyn < rel_sta                   # the dynamic law earns its keep
 
 
 @pytest.mark.slow

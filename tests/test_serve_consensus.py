@@ -68,6 +68,29 @@ def test_robust_scopes_over_spec_topology():
         assert float(jnp.abs(out["w"]).max()) < 1.0, scope
 
 
+def test_engine_state_input_uses_param_stack():
+    """Async-engine checkpoints hand the whole EngineState to serving:
+    consensus must come from the param stack alone and match the bare-stack
+    call bit for bit — clocks/staleness buffers are not averageable."""
+    from repro.core.state import EngineState
+
+    K = 6
+    stacked = _stacked(K)
+    want = consensus_from_stacked(stacked, K, "dense")
+    state = EngineState(params=stacked, opt_state=(),
+                        async_state={"t_local": jnp.zeros((K,)),
+                                     "ages": jnp.zeros((K, 3))})
+    got = consensus_from_stacked(state, K, "dense")
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # dict-shaped EngineState (hand-built archive views) routes the same way
+    got2 = consensus_from_stacked(
+        {"params": stacked, "async_state": {"t_local": jnp.zeros((K,))}},
+        K, "dense")
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_single_model_checkpoint_unchanged():
     """K = 1 (plain checkpoints) stays the identity."""
     params = {"w": jax.random.normal(KEY, (1, 3))}
