@@ -1172,6 +1172,139 @@ def bench_async():
          f"async_wall={async_wall:.1f}s;speedup={speedup:.2f}x;ok={ok}")
 
 
+def bench_privacy():
+    """Privacy tier (EXPERIMENTS.md §Privacy).
+
+    Two acceptance surfaces next to the compression bench's MSD-vs-bytes
+    curve: (1) mask exactness — the secure-agg wire masks must cancel
+    over every realized neighborhood, so the masked-wire run matches the
+    unmasked run bit-close, on the static ring AND under LinkDropout
+    (degraded edges re-pair per block); (2) the MSD-vs-epsilon frontier —
+    for each epsilon budget the noise multiplier is calibrated by the RDP
+    accountant over the run length, the steady-state MSD is measured, and
+    Theorem 5 with the injected-variance law
+    (:func:`repro.core.msd.dp_injected_variance`) predicts it.  Gates:
+    masked == unmasked within f32 accumulation on both graphs, MSD
+    decreasing in epsilon toward the non-private floor, realized
+    accountant epsilon at the calibrated target, theory within a loose
+    band at the noise-dominated point.
+    """
+    import dataclasses
+    from repro.api.build import build
+    from repro.api.spec import (ExperimentSpec, GraphSpec,
+                                ParticipationSpec, PrivacySpec, RunSpec,
+                                TopologySpec)
+    from repro.core.msd import dp_injected_variance
+    from repro.core.topology import make_topology
+
+    K, M = 8, 2
+    q = 0.8
+    data = make_regression_problem(K=K, N=100, M=M, rho=0.1, seed=11)
+    prob = data.problem()
+    qv = np.full(K, q)
+    w_o = prob.w_opt(qv)
+    sampler = make_block_sampler(data, T=2, batch=1)
+    blocks = 600 if FAST else 2000
+    base = ExperimentSpec(
+        topology=TopologySpec(kind="ring"),
+        participation=ParticipationSpec(kind="iid", q=q),
+        run=RunSpec(num_agents=K, local_steps=2, step_size=0.01,
+                    blocks=blocks, seed=0))
+
+    # -- (1) mask exactness: masked wire vs unmasked combination ---------
+    # same privacy seed on both sides => identical clip+noise stream; the
+    # only difference is whether the wire carries masked payloads
+    p0 = jax.random.normal(jax.random.PRNGKey(3), (K, M)) * 0.5
+    tol = 5e-5
+    diffs = {}
+    for gname, gspec in (
+            ("static", GraphSpec(kind="static")),
+            ("link_dropout", GraphSpec(kind="link_dropout", drop=0.3))):
+        states, us_masked = [], 0.0
+        for secure_agg in (True, False):
+            spec = base.replace(graph=gspec, privacy=PrivacySpec(
+                enabled=True, noise_multiplier=0.8, clip=1.0,
+                secure_agg=secure_agg))
+            eng = build(spec, data.loss_fn())
+            st = eng.init_state(p0, eng.optimizer.init(p0),
+                                key=jax.random.PRNGKey(5))
+            jit_step = jax.jit(eng.step)
+            batches = [sampler(jax.random.PRNGKey(100 + i))
+                       for i in range(6)]
+            if secure_agg:
+                _, us_masked = _time_us(
+                    lambda: jit_step(st, batches[0], jax.random.PRNGKey(0)),
+                    reps=2 if FAST else 5)
+            for i, bb in enumerate(batches):
+                st, _ = jit_step(st, bb, jax.random.PRNGKey(200 + i))
+            states.append(st)
+        diffs[gname] = float(jnp.abs(states[0].params
+                                     - states[1].params).max())
+        _row(f"privacy_mask_{gname}", us_masked,
+             f"max_abs_diff={diffs[gname]:.2e}")
+    ok_mask = all(d < tol for d in diffs.values())
+    _row("privacy_mask_exact", 0.0,
+         f"tol={tol:g};static={diffs['static']:.2e};"
+         f"link_dropout={diffs['link_dropout']:.2e};ok={ok_mask}")
+
+    # -- (2) MSD-vs-epsilon frontier -------------------------------------
+    topo = make_topology("ring", K)
+    base_theory = theoretical_msd(prob, A=topo.A, q=qv, mu=0.01, T=2)["msd"]
+
+    def steady(spec):
+        eng = build(spec, data.loss_fn())
+        st = eng.init_state(jnp.zeros((K, M)),
+                            eng.optimizer.init(jnp.zeros((K, M))),
+                            key=jax.random.PRNGKey(1))
+        jit_step = jax.jit(eng.step)
+        key = jax.random.PRNGKey(0)
+        from repro.core.diffusion import network_msd
+        hist, eps_spent, t0 = [], None, time.time()
+        for _ in range(blocks):
+            key, kb, ks = jax.random.split(key, 3)
+            st, metrics = jit_step(st, sampler(kb), ks)
+            hist.append(float(network_msd(st.params, jnp.asarray(w_o))))
+            if "epsilon" in metrics:
+                eps_spent = float(metrics["epsilon"])
+        us = (time.time() - t0) / blocks * 1e6
+        return float(np.mean(hist[-blocks // 4:])), eps_spent, us, eng
+
+    msd_floor, _, us_floor, _ = steady(base)
+    _row("privacy_msd_nonprivate", us_floor, f"msd={msd_floor:.4e}")
+    eps_points = (2.0, 8.0, 32.0)
+    msds, eps_hit = {}, {}
+    for eps in eps_points:
+        spec = base.replace(privacy=PrivacySpec(enabled=True, epsilon=eps,
+                                                delta=1e-5, clip=1.0))
+        msd, spent, us, eng = steady(spec)
+        nm = eng.privacy.noise_multiplier
+        theory = theoretical_msd(
+            prob, A=topo.A, q=qv, mu=0.01, T=2,
+            injected_variance=dp_injected_variance(1.0, nm))["msd"]
+        msds[eps], eps_hit[eps] = msd, spent
+        _row(f"privacy_msd_eps{eps:g}", us,
+             f"msd={msd:.4e};noise_multiplier={nm:.3f};"
+             f"eps_spent={spent:.2f};theory={theory:.4e};"
+             f"ratio={msd / theory:.2f}")
+        if eps == max(eps_points):
+            # gate the surrogate where the injected noise dominates the
+            # gradient noise but clipping is still inactive — at the
+            # tightest budget the multiplier is so large the clip
+            # saturates, which dp_injected_variance documents as out of
+            # scope (the tightest-budget ratio stays visible in its row)
+            noisy_ratio = msd / theory
+    # the calibration spends the budget over exactly `blocks` steps at the
+    # stationary rate; realized participation wanders a little around it
+    cal_ok = all(0.7 <= eps_hit[e] / e <= 1.3 for e in eps_points)
+    mono_ok = (msds[2.0] > msds[8.0] > msds[32.0] > 0.5 * msd_floor)
+    theory_ok = 0.25 <= noisy_ratio <= 4.0
+    _row("privacy_frontier_ok", 0.0,
+         f"msd_eps2={msds[2.0]:.3e};msd_eps8={msds[8.0]:.3e};"
+         f"msd_eps32={msds[32.0]:.3e};floor={msd_floor:.3e};"
+         f"cal_ok={cal_ok};theory_ratio={noisy_ratio:.2f};"
+         f"ok={mono_ok and cal_ok and theory_ok}")
+
+
 ALL_BENCHES = (
     bench_fig5_msd_vs_theory,
     bench_fig6_participation,
@@ -1190,6 +1323,7 @@ ALL_BENCHES = (
     bench_scale_K,
     bench_serve,
     bench_async,
+    bench_privacy,
 )
 
 

@@ -35,6 +35,7 @@ from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
 from repro.core import graphs as graph_lib
 from repro.core import mixing
+from repro.core import privacy as privacy_lib
 from repro.core import schedules
 from repro.core import topology as topo_lib
 from repro.core.async_engine import AsyncEngine
@@ -245,6 +246,31 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
     graph_lib.check_mixer_support(mixer, graph)
     compressor = COMPRESSORS.get(spec.compression.kind)(spec.compression)
     optimizer = OPTIMIZERS.get(spec.optimizer.kind)(spec.optimizer)
+    privacy = privacy_lib.compile_privacy(spec)
+    if privacy is not None:
+        if grad_transform is not None:
+            # same ambiguity class as the attack guard below: silently
+            # dropping the clip+noise stage would report a non-private run
+            # as private (and misreport the accountant's epsilon)
+            raise ValueError(
+                "spec.privacy and an explicit grad_transform were both "
+                "supplied — compose them yourself via "
+                "repro.core.privacy.PrivateGradients(..., inner=...) and "
+                "pass its .update as grad_transform, or drop one")
+        if (spec.compression.kind == "gauss"
+                and not spec.privacy.allow_gauss):
+            raise ValueError(
+                "spec.privacy with GaussianMask compression double-noises "
+                "the exchange: the compressor's sigma is NOT counted by "
+                "the accountant, so it is silent utility loss with no "
+                "epsilon credit — set PrivacySpec.allow_gauss=True to opt "
+                "in deliberately, or drop one of the noise sources")
+        # composition order (defined HERE, once): raw grads -> attack
+        # corrupts -> privacy clips + noises -> optimizer.  The privacy
+        # stage wraps the optimizer first so the attack wrapper below
+        # lands outermost — the DP mechanism bounds the influence of
+        # whatever gradient an agent computes, Byzantine or honest.
+        optimizer = privacy.wrap(optimizer)
     if spec.attack.kind != "none":
         if grad_transform is not None:
             # silently dropping the attack would report an honest network
@@ -279,7 +305,8 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
             "requested — use engine='async'/'auto', or disable the "
             "asynchrony sub-spec")
     if grad_transform is None and (spec.optimizer.kind != "sgd"
-                                   or spec.attack.kind != "none"):
+                                   or spec.attack.kind != "none"
+                                   or privacy is not None):
         grad_transform = optimizer.update
 
     if engine == "async":
@@ -291,9 +318,16 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
             raise ValueError('model kind "external" needs an explicit '
                              "loss_fn (or select a self-contained model "
                              "spec, e.g. kind='transformer')")
+        if privacy is not None and privacy.secure_agg:
+            raise ValueError(
+                "secure-agg wire masks ride the CommPipeline, which the "
+                "async engine's staleness buffer replaces — stale masked "
+                "payloads from different blocks cannot cancel; drop "
+                "PrivacySpec.secure_agg or use a synchronous engine")
         eng = AsyncEngine(cfg, loss, grad_transform,
                           async_spec=spec.asynchrony,
-                          participation=process, graph=graph)
+                          participation=process, graph=graph,
+                          privacy=privacy)
     elif engine == "stacked":
         loss = loss_fn if loss_fn is not None else (model.loss if model
                                                     else None)
@@ -303,7 +337,7 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
                              "spec, e.g. kind='transformer')")
         eng = DiffusionEngine(cfg, loss, grad_transform, mixer=mixer,
                               participation=process, compressor=compressor,
-                              graph=graph)
+                              graph=graph, privacy=privacy)
     else:
         loss = loss_fn if loss_fn is not None else (model.loss_rng if model
                                                     else None)
@@ -312,7 +346,8 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
                              "3-arg loss_fn for the sharded engine")
         eng = ShardedEngine(loss, cfg, topology=topology, mix=mixer,
                             participation=process, compress=compressor,
-                            graph=graph, grad_transform=grad_transform)
+                            graph=graph, grad_transform=grad_transform,
+                            privacy=privacy)
 
     eng.spec = spec
     eng.optimizer = optimizer

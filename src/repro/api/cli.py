@@ -33,8 +33,8 @@ import dataclasses
 
 from repro.api.spec import (AsyncSpec, AttackSpec, CompressionSpec,
                             ExperimentSpec, GraphSpec, MixerSpec, ModelSpec,
-                            OptimizerSpec, ParticipationSpec, RunSpec,
-                            TopologySpec)
+                            OptimizerSpec, ParticipationSpec, PrivacySpec,
+                            RunSpec, TopologySpec)
 
 __all__ = ["add_spec_args", "spec_from_args", "get_preset"]
 
@@ -227,6 +227,37 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                    action=_Track,
                    help="discount strength (AsyncSpec.discount_rate): "
                         "exp e^(-rate*age), poly (1+age)^-rate")
+    g.add_argument("--privacy", action=_TrackTrue, default=False,
+                   help="enable the differential-privacy tier "
+                        "(PrivacySpec.enabled): per-agent clip + Gaussian "
+                        "noise on local gradients plus an RDP accountant "
+                        "threaded through EngineState.privacy_state")
+    g.add_argument("--privacy-epsilon", type=float, default=0.0,
+                   action=_Track,
+                   help="epsilon budget (PrivacySpec.epsilon): with "
+                        "--privacy-noise 0 the noise multiplier is "
+                        "CALIBRATED to spend this over RunSpec.blocks; "
+                        "with an explicit noise multiplier it is a halt "
+                        "budget for launch.train")
+    g.add_argument("--privacy-delta", type=float, default=1e-5,
+                   action=_Track,
+                   help="delta of the (epsilon, delta) guarantee "
+                        "(PrivacySpec.delta)")
+    g.add_argument("--privacy-clip", type=float, default=1.0, action=_Track,
+                   help="per-agent gradient L2 clip norm "
+                        "(PrivacySpec.clip)")
+    g.add_argument("--privacy-noise", type=float, default=0.0, action=_Track,
+                   help="Gaussian noise multiplier sigma "
+                        "(PrivacySpec.noise_multiplier); 0 derives it "
+                        "from --privacy-epsilon")
+    g.add_argument("--privacy-secure-agg", action=_TrackTrue, default=False,
+                   help="pairwise-canceling secure-agg wire masks on the "
+                        "combination step (PrivacySpec.secure_agg); "
+                        "synchronous engines only")
+    g.add_argument("--privacy-allow-gauss", action=_TrackTrue, default=False,
+                   help="opt in to stacking the DP tier with the "
+                        "GaussianMask compressor (PrivacySpec.allow_gauss) "
+                        "— double noise injection, rejected by default")
     g.add_argument("--blocks", type=int, default=20,
                    help="block iterations (RunSpec.blocks)")
     g.add_argument("--batch", type=int, default=2,
@@ -266,6 +297,13 @@ _PRESET_OVERRIDES = {
     "async_tau_max": ("asynchrony", "tau_max"),
     "async_discount": ("asynchrony", "discount"),
     "async_discount_rate": ("asynchrony", "discount_rate"),
+    "privacy": ("privacy", "enabled"),
+    "privacy_epsilon": ("privacy", "epsilon"),
+    "privacy_delta": ("privacy", "delta"),
+    "privacy_clip": ("privacy", "clip"),
+    "privacy_noise": ("privacy", "noise_multiplier"),
+    "privacy_secure_agg": ("privacy", "secure_agg"),
+    "privacy_allow_gauss": ("privacy", "allow_gauss"),
 }
 
 
@@ -379,6 +417,22 @@ def _check_robust_flags(args, spec: ExperimentSpec) -> ExperimentSpec:
             f"{'/'.join(asyn)} configures the event-driven engine but "
             "the run is bulk-synchronous — pass --engine async (or a "
             "spec with asynchrony.enabled)")
+    # ... and on the privacy sub-flags: tuning an accountant that never
+    # runs would report a non-private run as an (epsilon, delta) one —
+    # the worst kind of silent swallow, a false privacy claim
+    priv = [flag for dest, flag in
+            (("privacy_epsilon", "--privacy-epsilon"),
+             ("privacy_delta", "--privacy-delta"),
+             ("privacy_clip", "--privacy-clip"),
+             ("privacy_noise", "--privacy-noise"),
+             ("privacy_secure_agg", "--privacy-secure-agg"),
+             ("privacy_allow_gauss", "--privacy-allow-gauss"))
+            if dest in explicit]
+    if priv and not spec.privacy.enabled:
+        raise ValueError(
+            f"{'/'.join(priv)} configures the differential-privacy tier "
+            "but privacy is not enabled — pass --privacy (or a preset/"
+            "spec with privacy.enabled)")
     return spec
 
 
@@ -417,6 +471,12 @@ def spec_from_args(args) -> ExperimentSpec:
         optimizer=OptimizerSpec(kind=args.optimizer),
         model=ModelSpec(kind="transformer", arch=args.arch,
                         smoke=args.smoke),
+        privacy=PrivacySpec(
+            enabled=args.privacy, epsilon=args.privacy_epsilon,
+            delta=args.privacy_delta, clip=args.privacy_clip,
+            noise_multiplier=args.privacy_noise,
+            secure_agg=args.privacy_secure_agg,
+            allow_gauss=args.privacy_allow_gauss),
         asynchrony=AsyncSpec(
             enabled=args.engine == "async", rates=args.async_rate,
             rate_dist=args.async_rate_dist,

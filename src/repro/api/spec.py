@@ -16,6 +16,9 @@ of sub-specs:
       │                      externally supplied loss)
       ├─ AsyncSpec           event-driven execution: per-agent clocks,
       │                      staleness cap, age-discount law
+      ├─ PrivacySpec         differential privacy: clip + noise on the
+      │                      grad_transform seam, RDP accountant,
+      │                      secure-agg wire masks (core/privacy.py)
       └─ RunSpec             scalar hyper-parameters (K, T, mu, ...) and
                              driver settings (blocks, batch, seed)
 
@@ -46,6 +49,7 @@ __all__ = [
     "OptimizerSpec",
     "ModelSpec",
     "AsyncSpec",
+    "PrivacySpec",
     "RunSpec",
     "ExperimentSpec",
     "PRESETS",
@@ -236,6 +240,39 @@ class AsyncSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrivacySpec:
+    """Differential-privacy tier (core/privacy.py).
+
+    ``enabled=False`` is the non-private default (bit-identical to every
+    pre-privacy configuration).  When enabled, each agent's local-update
+    gradient is L2-clipped to ``clip`` and Gaussian-noised at std
+    ``noise_multiplier * clip`` on the grad_transform seam, and an RDP
+    accountant in ``EngineState.privacy_state`` tracks the spent epsilon
+    at the *realized* per-block participation rate (partial participation
+    is the subsampling event).  Exactly one of ``noise_multiplier`` /
+    ``epsilon`` must be positive to drive the mechanism: a positive
+    ``noise_multiplier`` is used as given (``epsilon`` then only sets the
+    budget ``train`` halts at), otherwise the noise multiplier is derived
+    from the ``epsilon`` budget over ``run.blocks`` blocks.  With
+    ``secure_agg`` the combination step runs through pairwise-canceling
+    per-edge wire masks (identity-mode linear pipelines only)."""
+
+    enabled: bool = False
+    epsilon: float = 0.0         # budget (and calibration target when
+                                 # noise_multiplier is 0); 0 = no budget
+    delta: float = 1e-5          # the (epsilon, delta)-DP delta
+    clip: float = 1.0            # per-agent L2 clip norm
+    noise_multiplier: float = 0.0  # noise std / clip; 0 = derive from
+                                 # epsilon over run.blocks
+    secure_agg: bool = False     # pairwise-canceling wire masks
+    mask_scale: float = 1.0      # secure-agg mask std
+    seed: int = 0                # noise + mask PRNG seed
+    allow_gauss: bool = False    # opt in to combining with GaussianMask
+                                 # compression (double noising otherwise
+                                 # rejected — uncounted utility loss)
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSpec:
     """Scalar hyper-parameters of Algorithm 1 + driver settings."""
 
@@ -251,7 +288,7 @@ class RunSpec:
 
 _SUBSPECS = (TopologySpec, GraphSpec, ParticipationSpec, MixerSpec,
              CompressionSpec, AttackSpec, OptimizerSpec, ModelSpec,
-             AsyncSpec, RunSpec)
+             AsyncSpec, PrivacySpec, RunSpec)
 
 
 def _tuplify(v):
@@ -294,6 +331,7 @@ class ExperimentSpec:
     optimizer: OptimizerSpec = OptimizerSpec()
     model: ModelSpec = ModelSpec()
     asynchrony: AsyncSpec = AsyncSpec()   # "async" is a keyword
+    privacy: PrivacySpec = PrivacySpec()
     run: RunSpec = RunSpec()
 
     # -- serialization ------------------------------------------------------

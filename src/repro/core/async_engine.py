@@ -133,11 +133,17 @@ class AsyncEngine:
         :class:`~repro.core.diffusion.DiffusionEngine`.  The graph
         process must stay on base support (``within_base_support``): the
         staleness buffer is indexed by the base-topology neighbor table.
+      privacy: compiled :class:`repro.core.privacy.Privacy` tier or None —
+        the RDP accountant advances on the realized FIRED rate (the
+        event-driven subsampling event), threading
+        ``EngineState.privacy_state``.  Secure-agg wire masks are not
+        supported (the staleness buffer replaces the CommPipeline and
+        stale cross-block payloads cannot cancel).
     """
 
     def __init__(self, config: DiffusionConfig, loss_fn: LossFn,
                  grad_transform=None, *, async_spec=None,
-                 participation=None, graph=None):
+                 participation=None, graph=None, privacy=None):
         if async_spec is None:
             from repro.api.spec import AsyncSpec
             async_spec = AsyncSpec(enabled=True)
@@ -160,6 +166,13 @@ class AsyncEngine:
                              f"(expected one of {_DISCOUNTS})")
         if async_spec.tau_max < 0:
             raise ValueError("tau_max must be >= 0")
+        if privacy is not None and privacy.secure_agg:
+            raise ValueError(
+                "AsyncEngine does not support secure-agg wire masks: the "
+                "staleness buffer replaces the CommPipeline, and masked "
+                "payloads received in different blocks cannot cancel — "
+                "drop PrivacySpec.secure_agg or use a synchronous engine")
+        self.privacy = privacy
         self.config = config
         self.loss_fn = loss_fn
         self.grad_transform = grad_transform
@@ -217,8 +230,11 @@ class AsyncEngine:
             "ages": jnp.zeros((K, D), jnp.int32),
             "buffer": jax.tree.map(lambda p: p[self._idx], params),
         }
+        privacy_state = (self.privacy.init_state()
+                         if self.privacy is not None else None)
         return EngineState(params, opt_state, part_state, None,
-                           graph_state, async_state)
+                           graph_state, async_state,
+                           privacy_state=privacy_state)
 
     # -- the single block iteration (jit-compatible) -------------------------
     @partial(jax.jit, static_argnums=0)
@@ -245,6 +261,11 @@ class AsyncEngine:
             raise ValueError(
                 "AsyncEngine threads clocks/ages/buffer through "
                 "state.async_state; build the state with "
+                "engine.init_state(params, opt_state, key=...)")
+        if self.privacy is not None and state.privacy_state is None:
+            raise ValueError(
+                "the privacy tier carries accountant state but "
+                "state.privacy_state is None; build the state with "
                 "engine.init_state(params, opt_state, key=...)")
         # identical key discipline to DiffusionEngine.step: the unused
         # second split keeps the activation stream bit-identical, and the
@@ -294,11 +315,19 @@ class AsyncEngine:
 
         t_local = (state.async_state["t_local"]
                    + fire.astype(jnp.float32) * self._delays)
+        metrics = {"active": fire, "t_wall": t_local.max()}
+        privacy_state = state.privacy_state
+        if self.privacy is not None:
+            # the realized FIRED rate is the subsampling event here: an
+            # agent that does not fire computes (and leaks) nothing
+            privacy_state = self.privacy.advance(privacy_state, fire)
+            metrics["epsilon"] = self.privacy.epsilon(privacy_state)
         new_state = EngineState(params, opt_state, part_state,
                                 state.comm_state, graph_state,
                                 {"t_local": t_local, "ages": ages,
-                                 "buffer": buffer})
-        return new_state, {"active": fire, "t_wall": t_local.max()}
+                                 "buffer": buffer},
+                                privacy_state=privacy_state)
+        return new_state, metrics
 
     # -- convenience runner --------------------------------------------------
     def run(self, params: PyTree, sampler: Callable[[jax.Array], PyTree],

@@ -199,11 +199,19 @@ class DiffusionEngine:
         path).  The realized per-block matrix A_t flows into the
         combination step as data; stateful graphs (correlated link
         dropout) carry their link mask in ``EngineState.graph_state``.
+      privacy: compiled differential-privacy tier — a
+        :class:`repro.core.privacy.Privacy` or None (non-private, the
+        default).  The engine advances its RDP accountant every block at
+        the realized participation rate (``EngineState.privacy_state``)
+        and routes the combination step through the secure-agg wire masks
+        when the tier requests them; the clip+noise gradient transform
+        itself arrives pre-composed via ``grad_transform`` (``build()``
+        owns the composition order).
     """
 
     def __init__(self, config: DiffusionConfig, loss_fn: LossFn,
                  grad_transform=None, *, mixer=None, participation=None,
-                 compressor=None, graph=None):
+                 compressor=None, graph=None, privacy=None):
         self.config = config
         self.loss_fn = loss_fn
         self.grad_transform = grad_transform
@@ -223,10 +231,12 @@ class DiffusionEngine:
                 config.compress, ratio=config.compress_ratio,
                 error_feedback=config.error_feedback,
                 sigma=config.compress_sigma)
-        self.pipeline = mixing.CommPipeline(self.mixer, compressor,
-                                            mode=config.comm_mode,
-                                            gamma=config.comm_gamma,
-                                            base_A=self.topology.A)
+        self.privacy = privacy
+        self.pipeline = mixing.CommPipeline(
+            self.mixer, compressor, mode=config.comm_mode,
+            gamma=config.comm_gamma, base_A=self.topology.A,
+            secure_agg=(privacy.make_mask_stage() if privacy is not None
+                        else None))
         self.compressor = self.pipeline.compressor
         self._grad_fn = jax.vmap(jax.grad(loss_fn))
 
@@ -243,7 +253,8 @@ class DiffusionEngine:
         stay ``None``.
         """
         return init_engine_state(self.process, self.pipeline, params,
-                                 opt_state, key=key, graph=self.graph)
+                                 opt_state, key=key, graph=self.graph,
+                                 privacy=self.privacy)
 
     # -- the single block iteration (jit-compatible) ------------------------
     @partial(jax.jit, static_argnums=0)
@@ -264,7 +275,8 @@ class DiffusionEngine:
         """
         cfg = self.config
         check_engine_state(self.process, self.pipeline, self.compressor,
-                           state, "engine.init_state", graph=self.graph)
+                           state, "engine.init_state", graph=self.graph,
+                           privacy=self.privacy)
         key_act, key_comm = jax.random.split(key)
         active, part_state = self.process.sample(state.part_state,
                                                  key_act)       # eq. (18)
@@ -280,9 +292,14 @@ class DiffusionEngine:
         params, comm_state = self.pipeline(params, active, A_t,
                                            state.comm_state,
                                            key_comm)            # eq. (20)
+        metrics = {"active": active}
+        privacy_state = state.privacy_state
+        if self.privacy is not None:
+            privacy_state = self.privacy.advance(privacy_state, active)
+            metrics["epsilon"] = self.privacy.epsilon(privacy_state)
         new_state = EngineState(params, opt_state, part_state, comm_state,
-                                graph_state)
-        return new_state, {"active": active}
+                                graph_state, privacy_state=privacy_state)
+        return new_state, metrics
 
     # -- convenience runner -------------------------------------------------
     def run(self, params: PyTree, sampler: Callable[[jax.Array], PyTree],

@@ -1134,12 +1134,22 @@ class CommPipeline:
     signal, which for top-k is far larger than the worst-case ``ratio``).
     The EMA is a scalar in ``comm_state`` ("delta"), so the annealed gamma
     checkpoints and restores with everything else.
+
+    With ``secure_agg`` (a stage from
+    :func:`repro.core.privacy.make_secure_agg`) the identity-mode
+    combination runs through pairwise-canceling per-edge wire masks —
+    payloads are noise to honest-but-curious receivers, the combination
+    stays exact up to float accumulation, and the pipeline carries a
+    block counter in ``comm_state`` (the mask epoch, so masked runs
+    checkpoint and resume on the same mask stream).  The masks presume a
+    linear combination over uncompressed payloads: compressed modes and
+    robust (non-linear) mixers are rejected loudly.
     """
 
     def __init__(self, mixer: Mixer,
                  compressor: comp_lib.Compressor | None = None,
                  *, mode: str = "auto", gamma=None, base_A=None,
-                 mesh=None):
+                 mesh=None, secure_agg=None):
         # mesh: when set, the generic direct int8 path pins the quantized
         # buffer + per-agent scales with sharding constraints so GSPMD's
         # collective carries s8 bytes, not the dequantized f32 (the 4x on
@@ -1175,6 +1185,26 @@ class CommPipeline:
             # wrapper would silently never run (diff uses encode_contractive)
             self.compressor = base
         self.mode = mode
+        self.secure_agg = secure_agg
+        if secure_agg is not None:
+            # the masks telescope to zero inside each receiver's LINEAR
+            # weighted sum over uncompressed payloads — any other pipeline
+            # silently breaks the cancellation invariant, so refuse
+            if mode != "identity":
+                raise ValueError(
+                    f"secure-agg wire masks require the uncompressed "
+                    f"identity-mode pipeline; this pipeline runs {mode!r} "
+                    "mode — use compress='none' (or drop secure_agg)")
+            if isinstance(mixer, NullMixer):
+                raise ValueError(
+                    "secure-agg wire masks need a real combination step "
+                    "(K >= 2, mixing enabled) — there is no wire to mask")
+            if not mixer.linear:
+                raise ValueError(
+                    f"{type(mixer).__name__} is a robust (non-linear) "
+                    "backend; per-edge masks only cancel inside a linear "
+                    "combination — use a linear mixer kind (dense/sparse/"
+                    "pallas/gather/auto) or drop secure_agg")
         self.adaptive = (gamma == "auto" and mode == "diff"
                          and not isinstance(mixer, NullMixer))
         if gamma == "auto" and not self.adaptive:
@@ -1225,6 +1255,8 @@ class CommPipeline:
     def stateful(self) -> bool:
         if isinstance(self.mixer, NullMixer):
             return False          # __call__ is a no-op: no state to thread
+        if self.secure_agg is not None:
+            return True           # the block counter (mask epoch)
         if self.mode == "diff":
             return True
         return self.mode == "direct" and self.compressor.stateful
@@ -1236,6 +1268,8 @@ class CommPipeline:
     def init_state(self, params: PyTree) -> PyTree:
         if not self.stateful:
             return ()
+        if self.secure_agg is not None:
+            return {"t": jnp.zeros((), jnp.uint32)}
         if self.mode == "diff":
             state = {"ref": jax.tree.map(jnp.zeros_like, params)}
             if self.adaptive:
@@ -1277,6 +1311,13 @@ class CommPipeline:
         ``A_t`` is the realized combination matrix for this block (sampled
         by the engine's :class:`repro.core.graphs.GraphProcess`)."""
         if self.mode == "identity":
+            if self.secure_agg is not None:
+                # the combination THROUGH per-edge masked payloads — same
+                # result as the plain mixer up to float accumulation
+                # (gated by bench_privacy's mask-exactness row)
+                t = comm_state["t"]
+                mixed = self.secure_agg(params, active, A_t, t)
+                return mixed, {"t": t + 1}
             # bit-identical to the plain mixer (the Mixer contract)
             return self.mixer(params, active, A_t), comm_state
         if isinstance(self.mixer, NullMixer):

@@ -54,7 +54,54 @@ import numpy as np
 from repro.core import participation as part
 
 __all__ = ["QuadraticProblem", "theoretical_msd", "theoretical_curve",
-           "mask_batches", "graph_matrix_law"]
+           "mask_batches", "graph_matrix_law", "dp_injected_variance",
+           "compressor_injected_variance"]
+
+
+def dp_injected_variance(clip: float, noise_multiplier: float) -> float:
+    """Per-coordinate gradient-noise variance injected by the DP tier.
+
+    The privacy transform (:mod:`repro.core.privacy`) adds
+    ``N(0, (noise_multiplier * clip)^2)`` per coordinate to every agent's
+    local-update gradient — i.i.d. across steps and agents, exactly the
+    shape of the gradient-noise term Theorem 5 integrates through
+    ``S_noise``.  Feed the result to ``theoretical_msd(...,
+    injected_variance=...)`` (the clipping itself is ignored: at the
+    steady state the true gradients are small against any sane ``clip``,
+    so the transform is noise-dominated — the same regime DP-SGD analyses
+    assume)."""
+    return float(noise_multiplier * clip) ** 2
+
+
+def compressor_injected_variance(kind: str, *, ratio: float = 1.0,
+                                 sigma: float = 0.0,
+                                 signal_power: float = 1.0,
+                                 q: float | np.ndarray = 1.0):
+    """Per-coordinate variance surrogate for an UNBIASED wire compressor.
+
+    Unbiased compressors satisfy ``E||C(x) - x||^2 = omega ||x||^2`` with
+    a kind-specific relative variance ``omega`` (rand-k with rescaling:
+    ``1/ratio - 1``; the Gaussian mask adds ``sigma^2`` per kept
+    coordinate on top of its rand-k core).  Theorem 5 sees the wire error
+    as one more zero-mean noise source, entering the recursion where the
+    gradient noise does — so the surrogate maps it onto the same
+    ``S_noise`` injection with per-coordinate variance ``q * omega *
+    signal_power`` (``signal_power`` = per-coordinate second moment of
+    the wire payload; ``q`` weights by the participation rate, an
+    inactive agent puts nothing on the wire).  Biased compressors (top-k,
+    int8's EF-corrected path) are error-compensated — their steady-state
+    wire error is not white and this surrogate does not apply.
+    """
+    if kind == "randk":
+        omega = 1.0 / ratio - 1.0
+    elif kind == "gauss":
+        omega = (1.0 / ratio - 1.0) + sigma ** 2 / ratio
+    else:
+        raise ValueError(
+            f"compressor kind {kind!r} has no unbiased-variance surrogate "
+            "(randk|gauss are unbiased; topk/int8 run error feedback, "
+            "whose steady-state wire error is not white noise)")
+    return np.asarray(q, dtype=np.float64) * omega * float(signal_power)
 
 
 @dataclasses.dataclass
@@ -228,7 +275,7 @@ def _mask_expectation_operators(problem: QuadraticProblem, *, A: np.ndarray,
                                 drift_correction: bool = False,
                                 num_mask_samples: int = 400, seed: int = 0,
                                 exact_threshold: int = 12,
-                                A_law=None) -> dict:
+                                A_law=None, injected_variance=None) -> dict:
     """All Theorem-5 operators: E[F], E[G], E[F⊗F], E[G⊗G], E[G⊗F],
     E[F⊗G], Σ_t E[N_t⊗N_t], plus H, b, S_noise, w_o.
 
@@ -246,11 +293,22 @@ def _mask_expectation_operators(problem: QuadraticProblem, *, A: np.ndarray,
     H = np.zeros((KM, KM))
     b = np.zeros(KM)
     S_noise = np.zeros((KM, KM))
+    # extra per-agent white noise riding the gradient-noise channel —
+    # the DP tier's clip+Gaussian transform and the unbiased-compressor
+    # surrogate both land here (see dp_injected_variance /
+    # compressor_injected_variance)
+    v_inj = np.zeros(K)
+    if injected_variance is not None:
+        v_inj = np.broadcast_to(
+            np.asarray(injected_variance, dtype=np.float64), (K,)).copy()
+        if (v_inj < 0).any():
+            raise ValueError("injected_variance must be nonnegative")
     for k in range(K):
         sl = slice(k * M, (k + 1) * M)
         H[sl, sl] = problem.hessian(k)
         b[sl] = -problem.grad(k, w_o)                      # eq. (58)
-        S_noise[sl, sl] = problem.grad_noise_cov(k, w_o, batch)
+        S_noise[sl, sl] = (problem.grad_noise_cov(k, w_o, batch)
+                           + v_inj[k] * I_M)
 
     # expectations over the activation mask ---------------------------------
     EF = np.zeros((KM, KM))
@@ -338,7 +396,8 @@ def theoretical_msd(problem: QuadraticProblem, *, A: np.ndarray | None = None,
                     num_mask_samples: int = 400, seed: int = 0,
                     exact_threshold: int = 12, graph=None,
                     max_graph_edges: int = 12,
-                    num_graph_samples: int = 256) -> dict:
+                    num_graph_samples: int = 256,
+                    injected_variance=None) -> dict:
     """Evaluate Theorem 5's MSD for a quadratic problem.
 
     With the default ``graph=None`` this is the static Theorem 5 over the
@@ -350,6 +409,14 @@ def theoretical_msd(problem: QuadraticProblem, *, A: np.ndarray | None = None,
     ``num_graph_samples`` draws otherwise — see that function for the
     ``corr > 0`` caveat).  ``A`` is then optional (defaults to the
     process's base matrix, used only for w_opt-independent bookkeeping).
+
+    ``injected_variance`` (scalar or (K,), per-coordinate) adds extra
+    per-agent white noise to the gradient-noise covariance ``S_noise`` —
+    the surrogate channel for the DP tier's Gaussian perturbation
+    (:func:`dp_injected_variance`) and for unbiased wire compressors
+    (:func:`compressor_injected_variance`): both enter the long-term
+    recursion exactly where the gradient noise does, so the predicted MSD
+    rises linearly in the injected variance at fixed operators.
 
     Returns dict with msd, w_opt, m_inf (steady-state mean error), the
     spectral radius of E[F (x) F] (sanity: < 1 for stability), and the
@@ -368,7 +435,8 @@ def theoretical_msd(problem: QuadraticProblem, *, A: np.ndarray | None = None,
         problem, A=A, q=q, mu=mu, T=T, batch=batch,
         drift_correction=drift_correction,
         num_mask_samples=num_mask_samples, seed=seed,
-        exact_threshold=exact_threshold, A_law=A_law)
+        exact_threshold=exact_threshold, A_law=A_law,
+        injected_variance=injected_variance)
 
 
 def theoretical_curve(theory: dict, w0: np.ndarray, num_blocks: int) -> np.ndarray:

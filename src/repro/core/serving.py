@@ -45,7 +45,7 @@ CONSENSUS_QUANTIZE = ("none", "int8")
 def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
                            trim: int = 1, scope: str = "global",
                            topology=None, quantize: str | None = None,
-                           quantize_seed: int = 0):
+                           quantize_seed: int = 0, weights=None):
     """Collapse (K, ...)-stacked agent params to the consensus model via
     the mixing layer, over the topology the checkpoint was TRAINED on.
 
@@ -77,6 +77,15 @@ def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
 
     Take agent 0 at the end.
 
+    ``weights`` (a (K,) nonnegative vector) switches to the *freshness-
+    weighted* consensus ``sum_k w_k x_k / sum_k w_k`` — the serving-side
+    view of an async checkpoint where per-agent clocks say some iterates
+    are staler than others (``launch/serving.load_consensus`` derives the
+    weights from the engine's age-discount law).  A weighted mean is only
+    a consensus under linear combination semantics, so the robust
+    (order-statistic) backends reject it.  All-zero weights fall back to
+    the uniform mean.
+
     Accepts either the bare (K, ...) stacked pytree or a full
     :class:`repro.core.state.EngineState` — async-engine checkpoints carry
     per-agent clocks and the staleness buffer next to the iterate, and the
@@ -99,6 +108,23 @@ def consensus_from_stacked(stacked, K: int, mix: str = "dense", *,
         q, scales = comp.encode_quantized(
             stacked, jax.random.PRNGKey(quantize_seed))
         stacked = comp.dequantize(q, scales, stacked)
+    if weights is not None:
+        if mix in ("trimmed_mean", "median", "adaptive_trim"):
+            raise ValueError(
+                f"freshness weights need a linear collapse; the {mix!r} "
+                "backend is an order statistic — a weighted mean of its "
+                "inputs is not its robust aggregate")
+        w = jnp.asarray(weights, jnp.float32).reshape(-1)
+        if w.shape != (K,):
+            raise ValueError(f"weights shape {w.shape} != ({K},)")
+        total = w.sum()
+        w = jnp.where(total > 0, w / jnp.maximum(total, 1e-12),
+                      jnp.full((K,), 1.0 / K, jnp.float32))
+        return jax.tree.map(
+            lambda x: jnp.tensordot(
+                w, jnp.asarray(x).astype(jnp.float32),
+                axes=1).astype(jnp.asarray(x).dtype),
+            stacked)
     topo = topology if topology is not None else make_topology("fedavg", K)
     mixer = make_mixer(mix, topo, num_agents=K, trim=trim, scope=scope)
     A = jnp.asarray(topo.A, jnp.float32)

@@ -77,6 +77,7 @@ def make_block_step(
     comm_gamma: float | None = None,
     mesh=None,
     agent_axis: str | None = None,
+    privacy=None,
 ) -> Callable:
     """Build the pure block-step function for jit/pjit.
 
@@ -125,6 +126,11 @@ def make_block_step(
         agent rows to ``agent_axis`` (default "data") via
         :func:`repro.sharding.rules.agent_stack_pspec`, and the generic
         int8 pipeline keeps the quantized bytes on the wire under GSPMD.
+      privacy: compiled :class:`repro.core.privacy.Privacy` tier or None —
+        advances the RDP accountant in ``EngineState.privacy_state`` at
+        the realized participation rate every block and routes the
+        combination through the secure-agg wire masks when requested (the
+        clip+noise transform arrives pre-composed via ``grad_transform``).
 
     Returns:
       The unified-contract step function
@@ -178,7 +184,9 @@ def make_block_step(
         mixer, compressor,
         mode=comm_mode if comm_mode is not None else config.comm_mode,
         gamma=comm_gamma if comm_gamma is not None else config.comm_gamma,
-        base_A=topology.A if topology is not None else A, mesh=mesh)
+        base_A=topology.A if topology is not None else A, mesh=mesh,
+        secure_agg=(privacy.make_mask_stage() if privacy is not None
+                    else None))
     grad_fn = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0, 0))
 
     # key_comm / key_graph come from fold_ins (not a wider split) so the
@@ -186,7 +194,8 @@ def make_block_step(
     # static-topology step
     def block_step(state: EngineState, block_batch, key):
         check_engine_state(process, pipeline, compressor, state,
-                           "block_step.init_state", graph=graph_proc)
+                           "block_step.init_state", graph=graph_proc,
+                           privacy=privacy)
         key_act, key_loss = jax.random.split(key)
         key_comm = jax.random.fold_in(key, 0xC0)
         active, part_state = process.sample(state.part_state, key_act)
@@ -200,18 +209,25 @@ def make_block_step(
             loss_key=key_loss, num_agents=K)
         params, comm_state = pipeline(params, active, A_t,
                                       state.comm_state, key_comm)
+        metrics = {"active": active}
+        privacy_state = state.privacy_state
+        if privacy is not None:
+            privacy_state = privacy.advance(privacy_state, active)
+            metrics["epsilon"] = privacy.epsilon(privacy_state)
         new_state = EngineState(params, opt_state, part_state, comm_state,
-                                graph_state)
-        return new_state, {"active": active}
+                                graph_state, privacy_state=privacy_state)
+        return new_state, metrics
 
     def init_state(params, opt_state=None, *, key=None) -> EngineState:
         return init_engine_state(process, pipeline, params, opt_state,
-                                 key=key, graph=graph_proc)
+                                 key=key, graph=graph_proc,
+                                 privacy=privacy)
 
     block_step.pipeline = pipeline
     block_step.process = process
     block_step.graph = graph_proc
     block_step.config = config
+    block_step.privacy = privacy
     block_step.init_state = init_state
     return block_step
 
@@ -235,6 +251,7 @@ class ShardedEngine:
         self.pipeline = self.step.pipeline
         self.process = self.step.process
         self.graph = self.step.graph
+        self.privacy = self.step.privacy
         self.init_state = self.step.init_state
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid

@@ -25,7 +25,12 @@ block iterations:
   bulk-synchronous engines; :class:`repro.core.async_engine.AsyncEngine`
   carries ``{"t_local", "ages", "buffer"}`` — per-agent clocks, the
   per-slot staleness ages, and the bounded-degree ``(K, D, ...)``
-  last-received-neighbor-params buffer).
+  last-received-neighbor-params buffer);
+* ``privacy_state`` — RDP-accountant state (``None`` for non-private
+  runs; an enabled :class:`repro.api.spec.PrivacySpec` carries
+  ``{"rdp", "steps"}`` — the accumulated per-order Renyi divergences and
+  the block counter — so spent epsilon checkpoints and serves with the
+  model; :mod:`repro.core.privacy`).
 
 Absent components are ``None`` leaves, so ONE pytree structure covers every
 engine configuration: the state is jit-transparent, `jax.tree`-mappable,
@@ -58,6 +63,10 @@ class EngineState:
     # appended LAST: positional construction of the 5 classic components
     # (both sync engines) stays valid
     async_state: PyTree = None
+    # appended LAST again (the EngineState evolution pattern: new fields
+    # default to None at the end, so positional construction sites and
+    # pre-privacy checkpoints both stay valid)
+    privacy_state: PyTree = None
 
     def replace(self, **changes) -> "EngineState":
         return dataclasses.replace(self, **changes)
@@ -70,15 +79,16 @@ class EngineState:
 
 def init_engine_state(process, pipeline, params: PyTree,
                       opt_state: PyTree = None, *,
-                      key=None, graph=None) -> EngineState:
+                      key=None, graph=None, privacy=None) -> EngineState:
     """The one definition of initial-state construction, shared by BOTH
     engines: stateful participation processes draw their initial state from
     ``key``, stateful pipelines allocate their memory shaped like
     ``params``, stateful graph processes draw their initial link state from
     a fold of ``key`` (distinct stream: the participation draw is
-    unchanged), and components the configuration does not carry stay None.
+    unchanged), a compiled privacy tier allocates its fresh accountant,
+    and components the configuration does not carry stay None.
     """
-    part_state = comm_state = graph_state = None
+    part_state = comm_state = graph_state = privacy_state = None
     if process.stateful:
         part_state = process.init_state(
             key if key is not None else jax.random.PRNGKey(0))
@@ -87,13 +97,15 @@ def init_engine_state(process, pipeline, params: PyTree,
     if graph is not None and graph.stateful:
         graph_state = graph.init_state(jax.random.fold_in(
             key if key is not None else jax.random.PRNGKey(0), 0x9A))
+    if privacy is not None:
+        privacy_state = privacy.init_state()
     return EngineState(params, opt_state, part_state, comm_state,
-                       graph_state)
+                       graph_state, privacy_state=privacy_state)
 
 
 def check_engine_state(process, pipeline, compressor,
                        state: EngineState, init_hint: str,
-                       graph=None) -> None:
+                       graph=None, privacy=None) -> None:
     """Trace-time guard shared by both engines: a stateful process,
     pipeline, or graph fed a None state component fails loudly, pointing
     at the engine's init_state."""
@@ -114,3 +126,10 @@ def check_engine_state(process, pipeline, compressor,
             f"{type(graph).__name__} carries graph state (the link "
             "up/down mask) but state.graph_state is None; build the "
             f"state with {init_hint}(params, opt_state, key=...)")
+    if privacy is not None and state.privacy_state is None:
+        raise ValueError(
+            "the privacy tier carries accountant state (per-order RDP + "
+            "block counter) but state.privacy_state is None; build the "
+            f"state with {init_hint}(params, ...) — a checkpoint from a "
+            "non-private run cannot resume under a PrivacySpec without a "
+            "fresh accountant")

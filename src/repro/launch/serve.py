@@ -73,7 +73,29 @@ def load_params(args, key):
         # reason to materialize K full randomly initialized models
         like = EngineState(jax.eval_shape(eng.init_params,
                                           jax.random.PRNGKey(0)))
+        weights = None
+        if spec.asynchrony.enabled:
+            # restore the per-agent clocks too: the consensus weights the
+            # stack by iterate freshness (the engine's age-discount law)
+            like = EngineState(
+                like.params,
+                async_state={"t_local": jax.ShapeDtypeStruct(
+                    (K,), jnp.float32)})
         state, meta = load_experiment(args.checkpoint, like)
+        if spec.asynchrony.enabled:
+            t_local = jnp.asarray(state.async_state["t_local"])
+            weights = eng._discount(t_local.max() - t_local)
+            print(f"async checkpoint: freshness-weighted consensus "
+                  f"(discount={spec.asynchrony.discount}"
+                  f"({spec.asynchrony.discount_rate}); agent clock ages "
+                  f"max={float((t_local.max() - t_local).max()):.1f})")
+        if meta.get("epsilon_spent") is not None:
+            # the guarantee the served iterate carries, written by
+            # launch/train from the RDP accountant's final state
+            print(f"privacy: checkpoint trained under "
+                  f"(epsilon={float(meta['epsilon_spent']):.3f}, "
+                  f"delta={meta.get('privacy_delta', spec.privacy.delta):g})"
+                  "-DP (RDP accountant at the realized participation rate)")
         # the consensus must come from the topology the agents TRAINED on
         # (spec checkpoints used to hard-code FedAvg here); non-static
         # graphs are approximated by their base topology
@@ -91,7 +113,8 @@ def load_params(args, key):
         params = consensus_from_stacked(state.params, K, spec.mixer.kind,
                                         trim=spec.mixer.trim,
                                         scope=spec.mixer.scope,
-                                        topology=topo, quantize=quantize)
+                                        topology=topo, quantize=quantize,
+                                        weights=weights)
         return params, eng.model.cfg
 
     bundle = get_config(args.arch)

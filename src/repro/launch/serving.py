@@ -281,13 +281,25 @@ def load_consensus(path, *, quantize: str | None = None):
     eng = build(spec)
     K = spec.run.num_agents
     like = EngineState(jax.eval_shape(eng.init_params, jax.random.PRNGKey(0)))
+    weights = None
+    if spec.asynchrony.enabled:
+        # async checkpoints carry per-agent clocks next to the iterate:
+        # restore t_local too and weight the collapse by freshness via the
+        # engine's own age-discount law (sum_k w_k x_k, w = discount(age))
+        like = EngineState(
+            like.params,
+            async_state={"t_local": jax.ShapeDtypeStruct((K,),
+                                                         jnp.float32)})
     state, meta = load_experiment(path, like)
+    if spec.asynchrony.enabled:
+        t_local = jnp.asarray(state.async_state["t_local"])
+        weights = eng._discount(t_local.max() - t_local)
     topo = (TOPOLOGIES.get(spec.topology.kind)(spec.topology, K)
             if K > 1 else None)
     params = consensus_from_stacked(state.params, K, spec.mixer.kind,
                                     trim=spec.mixer.trim,
                                     scope=spec.mixer.scope, topology=topo,
-                                    quantize=quantize)
+                                    quantize=quantize, weights=weights)
     return params, eng.model.cfg, meta
 
 

@@ -64,6 +64,17 @@ def main():
         print(f"graph: {spec.graph.kind} — the combination matrix is "
               f"resampled every block ({g!r}); "
               f"stateful={bool(g is not None and g.stateful)}")
+    privacy = getattr(eng, "privacy", None)
+    if privacy is not None:
+        agg = ("secure-agg wire masks on"
+               if spec.privacy.secure_agg else "wire unmasked")
+        budget = (f"budget epsilon={spec.privacy.epsilon:g}"
+                  if spec.privacy.epsilon > 0 else "no epsilon budget")
+        print(f"privacy: clip={privacy.clip:g} "
+              f"noise_multiplier={privacy.noise_multiplier:.4g} "
+              f"delta={privacy.delta:g}  {budget}  {agg}  "
+              "(RDP accountant advances at the realized participation "
+              "rate; run halts when the budget is spent)")
     if is_async:
         # straggler simulation: per-agent event delays fixed for the run
         d = eng.delays
@@ -112,24 +123,43 @@ def main():
                                                             remat=False)))
 
     t0 = time.time()
+    eps_spent = None
+    blocks_done = 0
     for i in range(run.blocks):
         key, kb, ks = jax.random.split(key, 3)
         batch = sample_block(kb)
         state, metrics = jit_step(state, batch, ks)
+        blocks_done = i + 1
+        if privacy is not None:
+            eps_spent = float(metrics["epsilon"])
         if i % args.log_every == 0:
             active = metrics["active"]
             losses = eval_loss(state.params,
                                jax.tree.map(lambda x: x[0], batch))
             wall = (f"  sim_wall={float(metrics['t_wall']):.1f}s"
                     if is_async else "")
+            eps = (f"  epsilon={eps_spent:.3f}"
+                   if eps_spent is not None else "")
             print(f"block {i:4d}  active={int(active.sum())}/{K}  "
                   f"mean_loss={float(losses.mean()):.4f}  "
                   f"spread={float(losses.max() - losses.min()):.4f}  "
-                  f"t={time.time() - t0:.1f}s{wall}")
+                  f"t={time.time() - t0:.1f}s{wall}{eps}")
+        if (eps_spent is not None and spec.privacy.epsilon > 0
+                and eps_spent >= spec.privacy.epsilon):
+            print(f"privacy budget spent: epsilon={eps_spent:.3f} >= "
+                  f"{spec.privacy.epsilon:g} after {blocks_done} blocks — "
+                  "halting")
+            break
 
     if args.checkpoint:
-        save_experiment(args.checkpoint, state, spec=spec, step=run.blocks,
-                        metadata={"arch": spec.model.arch})
+        metadata = {"arch": spec.model.arch}
+        if eps_spent is not None:
+            # the guarantee the saved iterate carries — serve --checkpoint
+            # reports it next to the model
+            metadata["epsilon_spent"] = eps_spent
+            metadata["privacy_delta"] = spec.privacy.delta
+        save_experiment(args.checkpoint, state, spec=spec, step=blocks_done,
+                        metadata=metadata)
         print("saved", args.checkpoint)
 
 

@@ -51,6 +51,8 @@ PRESET_SPECS = {
         lambda: variants.byzantine_robust_diffusion(K, mu=0.02, q=0.9,
                                                     num_byzantine=2,
                                                     scale=3.0),
+    "private_diffusion":
+        lambda: variants.private_diffusion(K, 0.02, T=1, q=0.8),
 }
 
 
@@ -191,6 +193,14 @@ def _legacy_engine(name, loss):
             participation=0.9, mix="trimmed_mean"), loss,
             grad_transform=atk.update,
             mixer=TrimmedMeanMixer(K, trim=1, scope="neighborhood"))
+    if name == "private_diffusion":
+        from repro.core.privacy import compile_privacy
+        from repro.optim.optimizers import sgd
+        p = compile_privacy(PRESET_SPECS[name]())
+        return DiffusionEngine(DiffusionConfig(
+            num_agents=K, local_steps=1, step_size=0.02, topology="ring",
+            participation=0.8), loss,
+            grad_transform=p.wrap(sgd()).update, privacy=p)
     raise AssertionError(name)
 
 
@@ -209,8 +219,13 @@ def test_build_bit_identical_to_legacy_path(name):
     sampler = make_block_sampler(data, T=T, batch=1)
     params = jax.random.normal(jax.random.PRNGKey(0), (K, 2))
     key0 = jax.random.fold_in(jax.random.PRNGKey(3), 0x5EED)
-    s_new = eng_new.init_state(params, key=key0)
-    s_old = eng_old.init_state(params, key=key0)
+    # the private preset's clip+noise transform carries a counter state
+    # (build() composes it into eng.optimizer; the legacy ctor receives
+    # the identical pre-composed transform)
+    opt0 = (eng_new.optimizer.init(params)
+            if name == "private_diffusion" else None)
+    s_new = eng_new.init_state(params, opt0, key=key0)
+    s_old = eng_old.init_state(params, opt0, key=key0)
     for i in range(4):
         batch = sampler(jax.random.PRNGKey(100 + i))
         k = jax.random.PRNGKey(200 + i)
