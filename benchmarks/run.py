@@ -1293,8 +1293,9 @@ def bench_privacy():
             # saturates, which dp_injected_variance documents as out of
             # scope (the tightest-budget ratio stays visible in its row)
             noisy_ratio = msd / theory
-    # the calibration spends the budget over exactly `blocks` steps at the
-    # stationary rate; realized participation wanders a little around it
+    # the calibration spends the budget over exactly blocks * local_steps
+    # mechanism invocations at the stationary rate; realized
+    # participation wanders a little around it
     cal_ok = all(0.7 <= eps_hit[e] / e <= 1.3 for e in eps_points)
     mono_ok = (msds[2.0] > msds[8.0] > msds[32.0] > 0.5 * msd_floor)
     theory_ok = 0.25 <= noisy_ratio <= 4.0

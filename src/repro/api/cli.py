@@ -236,9 +236,10 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                    action=_Track,
                    help="epsilon budget (PrivacySpec.epsilon): with "
                         "--privacy-noise 0 the noise multiplier is "
-                        "CALIBRATED to spend this over RunSpec.blocks; "
-                        "with an explicit noise multiplier it is a halt "
-                        "budget for launch.train")
+                        "CALIBRATED to spend this over RunSpec.blocks x "
+                        "local_steps mechanism invocations; with an "
+                        "explicit noise multiplier it is a halt budget "
+                        "for launch.train")
     g.add_argument("--privacy-delta", type=float, default=1e-5,
                    action=_Track,
                    help="delta of the (epsilon, delta) guarantee "

@@ -246,16 +246,22 @@ class PrivacySpec:
     ``enabled=False`` is the non-private default (bit-identical to every
     pre-privacy configuration).  When enabled, each agent's local-update
     gradient is L2-clipped to ``clip`` and Gaussian-noised at std
-    ``noise_multiplier * clip`` on the grad_transform seam, and an RDP
-    accountant in ``EngineState.privacy_state`` tracks the spent epsilon
-    at the *realized* per-block participation rate (partial participation
-    is the subsampling event).  Exactly one of ``noise_multiplier`` /
-    ``epsilon`` must be positive to drive the mechanism: a positive
-    ``noise_multiplier`` is used as given (``epsilon`` then only sets the
-    budget ``train`` halts at), otherwise the noise multiplier is derived
-    from the ``epsilon`` budget over ``run.blocks`` blocks.  With
-    ``secure_agg`` the combination step runs through pairwise-canceling
-    per-edge wire masks (identity-mode linear pipelines only)."""
+    ``noise_multiplier * clip`` on the grad_transform seam — at EVERY
+    one of the ``run.local_steps`` local steps — and an RDP accountant
+    in ``EngineState.privacy_state`` tracks the spent epsilon at the
+    *realized* per-block participation rate (partial participation is
+    the subsampling event), composing ``local_steps`` mechanism
+    invocations per block.  Requires a homogeneous participation rate
+    (the single tracked epsilon is a per-agent guarantee only when all
+    agents share one rate; heterogeneous ``q`` vectors are rejected in
+    ``build()``).  Exactly one of ``noise_multiplier`` / ``epsilon``
+    must be positive to drive the mechanism: a positive
+    ``noise_multiplier`` is used as given (``epsilon`` then only sets
+    the budget ``train`` halts at), otherwise the noise multiplier is
+    derived from the ``epsilon`` budget over
+    ``run.blocks * run.local_steps`` invocations.  With ``secure_agg``
+    the combination step runs through pairwise-canceling per-edge wire
+    masks (identity-mode linear pipelines only)."""
 
     enabled: bool = False
     epsilon: float = 0.0         # budget (and calibration target when

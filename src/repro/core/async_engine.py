@@ -135,7 +135,8 @@ class AsyncEngine:
         staleness buffer is indexed by the base-topology neighbor table.
       privacy: compiled :class:`repro.core.privacy.Privacy` tier or None —
         the RDP accountant advances on the realized FIRED rate (the
-        event-driven subsampling event), threading
+        event-driven subsampling event), scaled by the T local mechanism
+        invocations each fired event runs, threading
         ``EngineState.privacy_state``.  Secure-agg wire masks are not
         supported (the staleness buffer replaces the CommPipeline and
         stale cross-block payloads cannot cancel).

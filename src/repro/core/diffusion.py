@@ -202,7 +202,8 @@ class DiffusionEngine:
       privacy: compiled differential-privacy tier — a
         :class:`repro.core.privacy.Privacy` or None (non-private, the
         default).  The engine advances its RDP accountant every block at
-        the realized participation rate (``EngineState.privacy_state``)
+        the realized participation rate, scaled by the T local mechanism
+        invocations the block composes (``EngineState.privacy_state``)
         and routes the combination step through the secure-agg wire masks
         when the tier requests them; the clip+noise gradient transform
         itself arrives pre-composed via ``grad_transform`` (``build()``

@@ -30,13 +30,26 @@ three pillars, all pure jax/numpy (no new dependencies):
 
        A(alpha) = sum_k C(alpha,k) (1-q)^(alpha-k) q^k
                   exp((k^2 - k) / (2 sigma^2))
-       rdp(alpha) += log A(alpha) / (alpha - 1)
+       rdp(alpha) += T * log A(alpha) / (alpha - 1)
 
-   and converts to (epsilon, delta) with the improved bound of
-   Balle et al. 2020 (``rdp + log((a-1)/a) - (log delta + log a)/(a-1)``,
-   min over orders).  Because the accumulated per-order RDP vector rides
-   in the EngineState, epsilon-spent checkpoints and serves WITH the
-   model, and ``train`` can halt at a budget.
+   where ``T = steps_per_block`` (``RunSpec.local_steps``): the
+   clip+noise mechanism fires at EVERY local step inside the block scan
+   with fresh noise, so one block releases the adaptive composition of T
+   Gaussian invocations and the per-block increment is T times the
+   per-invocation bound — accounting one increment per block would
+   understate the spent budget by ~T.  Calibration
+   (:func:`calibrate_noise_multiplier` via :func:`compile_privacy`)
+   composes over ``run.blocks * local_steps`` invocations for the same
+   reason.  The accountant tracks ONE population epsilon, which is only
+   a per-agent guarantee when all agents share the same participation
+   rate — heterogeneous ``q_vector``s are rejected at compile time (an
+   agent sampled more often than the mean would get less amplification
+   than the accountant assumes).  Converts to (epsilon, delta) with the
+   improved bound of Balle et al. 2020
+   (``rdp + log((a-1)/a) - (log delta + log a)/(a-1)``, min over
+   orders).  Because the accumulated per-order RDP vector rides in the
+   EngineState, epsilon-spent checkpoints and serves WITH the model,
+   and ``train`` can halt at a budget.
 
 3. **Pairwise-canceling secure-aggregation masks**
    (:func:`make_secure_agg`) as a CommPipeline stage: per edge of each
@@ -136,8 +149,9 @@ def calibrate_noise_multiplier(epsilon: float, delta: float, q: float,
                                steps: int,
                                orders=DEFAULT_ORDERS) -> float:
     """Smallest noise multiplier whose spent epsilon after ``steps``
-    blocks at stationary participation rate ``q`` stays <= ``epsilon``
-    (bisection; epsilon is monotone decreasing in sigma)."""
+    mechanism INVOCATIONS (blocks x local steps — each local step draws
+    fresh noise) at stationary participation rate ``q`` stays <=
+    ``epsilon`` (bisection; epsilon is monotone decreasing in sigma)."""
     if epsilon <= 0:
         raise ValueError(f"epsilon={epsilon} must be > 0 to calibrate")
 
@@ -151,8 +165,9 @@ def calibrate_noise_multiplier(epsilon: float, delta: float, q: float,
         if hi > 1e6:
             raise ValueError(
                 f"cannot reach epsilon={epsilon} at delta={delta} over "
-                f"{steps} blocks (rate q={q}) with any reasonable noise "
-                "multiplier — raise the budget or shorten the run")
+                f"{steps} mechanism invocations (rate q={q}) with any "
+                "reasonable noise multiplier — raise the budget or "
+                "shorten the run")
     for _ in range(80):
         mid = 0.5 * (lo + hi)
         if spent(mid) > epsilon:
@@ -324,9 +339,13 @@ class Privacy:
                  noise_multiplier: float, delta: float,
                  epsilon_budget: float | None = None, seed: int = 0,
                  secure_agg: bool = False, mask_scale: float = 1.0,
-                 orders=DEFAULT_ORDERS):
+                 steps_per_block: int = 1, orders=DEFAULT_ORDERS):
         if clip <= 0:
             raise ValueError(f"privacy clip={clip} must be > 0")
+        if steps_per_block < 1:
+            raise ValueError(
+                f"steps_per_block={steps_per_block} must be >= 1 (the "
+                "number of local mechanism invocations per block)")
         if noise_multiplier <= 0:
             raise ValueError(
                 f"noise_multiplier={noise_multiplier} must be > 0 — give "
@@ -343,6 +362,7 @@ class Privacy:
         self.seed = int(seed)
         self.secure_agg = bool(secure_agg)
         self.mask_scale = float(mask_scale)
+        self.steps_per_block = int(steps_per_block)
         self.orders = tuple(int(a) for a in orders)
         # q-independent log-term constants per order, baked at sigma
         self._consts = [jnp.asarray(_order_constants(a, self.noise_multiplier))
@@ -366,7 +386,11 @@ class Privacy:
 
     def advance(self, pstate: PyTree, active: jax.Array) -> PyTree:
         """One block of accounting at the REALIZED participation rate
-        ``mean(active)`` (jit twin of :func:`rdp_increment_np`)."""
+        ``mean(active)`` (jit twin of :func:`rdp_increment_np`).  The
+        per-invocation increment is scaled by ``steps_per_block``: every
+        local step inside the block runs the clip+noise mechanism with
+        fresh noise, so the block releases the composition of that many
+        Gaussian invocations."""
         q = jnp.clip(jnp.sum(active.astype(jnp.float32)) / self.num_agents,
                      0.0, 1.0)
         logq, log1mq = jnp.log(q), jnp.log1p(-q)
@@ -377,7 +401,8 @@ class Privacy:
             b = jnp.where(ks == alpha, 0.0, (alpha - ks) * log1mq)
             la = jax.scipy.special.logsumexp(const + a + b)
             incs.append(jnp.where(jnp.isfinite(la), la, 0.0) / (alpha - 1))
-        return {"rdp": pstate["rdp"] + jnp.stack(incs).astype(jnp.float32),
+        inc = self.steps_per_block * jnp.stack(incs).astype(jnp.float32)
+        return {"rdp": pstate["rdp"] + inc,
                 "steps": pstate["steps"] + 1}
 
     def epsilon(self, pstate: PyTree) -> jax.Array:
@@ -401,6 +426,7 @@ class Privacy:
         return (f"Privacy(clip={self.clip}, "
                 f"noise_multiplier={self.noise_multiplier:.4g}, "
                 f"delta={self.delta}, budget={self.epsilon_budget}, "
+                f"steps_per_block={self.steps_per_block}, "
                 f"secure_agg={self.secure_agg})")
 
 
@@ -412,19 +438,38 @@ def compile_privacy(spec) -> Privacy | None:
     mechanism: a positive ``noise_multiplier`` is used as given (a
     positive ``epsilon`` then only sets the budget halt); otherwise a
     positive ``epsilon`` derives the noise multiplier by calibrating the
-    accountant over ``run.blocks`` blocks at the spec's STATIONARY
-    participation rate (the realized-rate accounting at run time then
-    tracks the actual draws).
+    accountant over ``run.blocks * run.local_steps`` mechanism
+    invocations (the clip+noise mechanism fires at every local step) at
+    the spec's STATIONARY participation rate — the realized-rate
+    accounting at run time then tracks the actual draws.
+
+    Heterogeneous per-agent participation rates are rejected: the
+    accountant tracks one population epsilon, and (epsilon, delta)-DP is
+    a per-agent guarantee — an agent with an individual rate above the
+    mean gets less subsampling amplification than the population rate
+    assumes, so the single reported epsilon would understate its spent
+    budget.
     """
     p = spec.privacy
     if not p.enabled:
         return None
+    qv = np.asarray(spec.q_vector(), np.float64)
+    if qv.size and float(qv.max() - qv.min()) > 1e-9:
+        raise ValueError(
+            "PrivacySpec requires a homogeneous participation rate, got "
+            f"per-agent rates in [{qv.min():g}, {qv.max():g}]: the "
+            "accountant tracks ONE epsilon at the population rate, which "
+            "understates the budget spent by any agent sampled more "
+            "often than the mean — use a uniform q (the (epsilon, delta) "
+            "guarantee is per-agent) or disable privacy")
+    steps_per_block = max(int(spec.run.local_steps), 1)
     if p.noise_multiplier > 0:
         sigma = float(p.noise_multiplier)
     elif p.epsilon > 0:
-        q_bar = float(np.mean(spec.q_vector()))
-        sigma = calibrate_noise_multiplier(p.epsilon, p.delta, q_bar,
-                                           max(int(spec.run.blocks), 1))
+        q_bar = float(np.mean(qv))
+        sigma = calibrate_noise_multiplier(
+            p.epsilon, p.delta, q_bar,
+            max(int(spec.run.blocks), 1) * steps_per_block)
     else:
         raise ValueError(
             "PrivacySpec is enabled but neither noise_multiplier nor "
@@ -433,4 +478,5 @@ def compile_privacy(spec) -> Privacy | None:
                    noise_multiplier=sigma, delta=p.delta,
                    epsilon_budget=p.epsilon if p.epsilon > 0 else None,
                    seed=p.seed, secure_agg=p.secure_agg,
-                   mask_scale=p.mask_scale)
+                   mask_scale=p.mask_scale,
+                   steps_per_block=steps_per_block)

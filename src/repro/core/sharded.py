@@ -128,7 +128,8 @@ def make_block_step(
         int8 pipeline keeps the quantized bytes on the wire under GSPMD.
       privacy: compiled :class:`repro.core.privacy.Privacy` tier or None —
         advances the RDP accountant in ``EngineState.privacy_state`` at
-        the realized participation rate every block and routes the
+        the realized participation rate every block (scaled by the T
+        local mechanism invocations per block) and routes the
         combination through the secure-agg wire masks when requested (the
         clip+noise transform arrives pre-composed via ``grad_transform``).
 

@@ -243,14 +243,16 @@ def private_diffusion(K: int, mu: float, *, T: int = 1, q=1.0,
 
     The block recursion is Algorithm 1 with (a) every agent's local-update
     gradient clipped to L2 norm ``clip`` and perturbed with Gaussian noise
-    ``noise_multiplier * clip`` (DP-SGD, arXiv:1607.00133), (b) an RDP
-    accountant threaded through ``EngineState.privacy_state`` whose
-    subsampling amplification uses the *realized* participation rate of
-    each block, and (c) pairwise-canceling secure-aggregation masks on the
-    combination step (on by default), so wire payloads are uninformative
-    while the eq.-20 exchange stays exact.  With ``noise_multiplier=0``
-    (the default) the multiplier is calibrated so the budget ``epsilon``
-    is spent over ``RunSpec.blocks`` at the stationary participation
+    ``noise_multiplier * clip`` (DP-SGD, arXiv:1607.00133) at every one
+    of the ``T`` local steps, (b) an RDP accountant threaded through
+    ``EngineState.privacy_state`` whose subsampling amplification uses
+    the *realized* participation rate of each block, composing the T
+    mechanism invocations each block releases, and (c) pairwise-canceling
+    secure-aggregation masks on the combination step (on by default), so
+    wire payloads are uninformative while the eq.-20 exchange stays
+    exact.  With ``noise_multiplier=0`` (the default) the multiplier is
+    calibrated so the budget ``epsilon`` is spent over
+    ``RunSpec.blocks * T`` invocations at the stationary participation
     rate; see ``benchmarks.run bench_privacy`` for the MSD-vs-epsilon
     frontier.
     """

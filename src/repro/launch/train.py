@@ -32,10 +32,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import build, spec_from_args
 from repro.api.cli import add_spec_args
 from repro.checkpoint import save_experiment
+from repro.core.privacy import epsilon_from_rdp_np, rdp_increment_np
 from repro.data.synthetic import lm_token_batch
 from repro.models import transformer as tf
 
@@ -65,16 +67,21 @@ def main():
               f"resampled every block ({g!r}); "
               f"stateful={bool(g is not None and g.stateful)}")
     privacy = getattr(eng, "privacy", None)
+    budget = (spec.privacy.epsilon
+              if privacy is not None and spec.privacy.epsilon > 0 else 0.0)
     if privacy is not None:
         agg = ("secure-agg wire masks on"
                if spec.privacy.secure_agg else "wire unmasked")
-        budget = (f"budget epsilon={spec.privacy.epsilon:g}"
-                  if spec.privacy.epsilon > 0 else "no epsilon budget")
+        btxt = (f"budget epsilon={budget:g}" if budget
+                else "no epsilon budget")
         print(f"privacy: clip={privacy.clip:g} "
               f"noise_multiplier={privacy.noise_multiplier:.4g} "
-              f"delta={privacy.delta:g}  {budget}  {agg}  "
+              f"delta={privacy.delta:g}  {btxt}  {agg}  "
               "(RDP accountant advances at the realized participation "
-              "rate; run halts when the budget is spent)")
+              f"rate x {privacy.steps_per_block} local steps/block; the "
+              "run halts before a block projected to overshoot the "
+              "budget — the checkpointed epsilon_spent is the binding "
+              "guarantee)")
     if is_async:
         # straggler simulation: per-agent event delays fixed for the run
         d = eng.delays
@@ -122,17 +129,46 @@ def main():
     eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b,
                                                             remat=False)))
 
+    if budget:
+        # one stationary-rate block of RDP: projecting the NEXT block's
+        # spend from the host-side mirror of the accountant lets the halt
+        # fire BEFORE the crossing block, so the checkpointed
+        # epsilon_spent stays at or under the budget (realized
+        # participation wanders around the stationary rate, so the
+        # post-step check below still backstops an early crossing)
+        q_bar = float(np.mean(spec.q_vector()))
+        inc_bar = privacy.steps_per_block * rdp_increment_np(
+            q_bar, privacy.noise_multiplier, privacy.orders)
+
     t0 = time.time()
     eps_spent = None
+    host_rdp = None
+    if budget:
+        host_rdp = np.zeros(len(privacy.orders), np.float64)
+        eps_spent = epsilon_from_rdp_np(host_rdp, privacy.delta,
+                                        privacy.orders)
     blocks_done = 0
     for i in range(run.blocks):
+        if budget:
+            projected = epsilon_from_rdp_np(host_rdp + inc_bar,
+                                            privacy.delta, privacy.orders)
+            if projected > budget:
+                print(f"privacy budget: epsilon={eps_spent:.3f} spent, "
+                      f"next block projects to {projected:.3f} > "
+                      f"{budget:g} — halting after {blocks_done} blocks")
+                break
         key, kb, ks = jax.random.split(key, 3)
         batch = sample_block(kb)
         state, metrics = jit_step(state, batch, ks)
         blocks_done = i + 1
-        if privacy is not None:
-            eps_spent = float(metrics["epsilon"])
-        if i % args.log_every == 0:
+        log_block = i % args.log_every == 0
+        if privacy is not None and (budget or log_block):
+            # host sync only when the value is consumed: every block for
+            # budgeted runs (the halt reads it), log blocks otherwise
+            host_rdp = np.asarray(state.privacy_state["rdp"], np.float64)
+            eps_spent = epsilon_from_rdp_np(host_rdp, privacy.delta,
+                                            privacy.orders)
+        if log_block:
             active = metrics["active"]
             losses = eval_loss(state.params,
                                jax.tree.map(lambda x: x[0], batch))
@@ -144,19 +180,18 @@ def main():
                   f"mean_loss={float(losses.mean()):.4f}  "
                   f"spread={float(losses.max() - losses.min()):.4f}  "
                   f"t={time.time() - t0:.1f}s{wall}{eps}")
-        if (eps_spent is not None and spec.privacy.epsilon > 0
-                and eps_spent >= spec.privacy.epsilon):
+        if budget and eps_spent >= budget:
             print(f"privacy budget spent: epsilon={eps_spent:.3f} >= "
-                  f"{spec.privacy.epsilon:g} after {blocks_done} blocks — "
-                  "halting")
+                  f"{budget:g} after {blocks_done} blocks — halting")
             break
 
     if args.checkpoint:
         metadata = {"arch": spec.model.arch}
-        if eps_spent is not None:
+        if privacy is not None:
             # the guarantee the saved iterate carries — serve --checkpoint
             # reports it next to the model
-            metadata["epsilon_spent"] = eps_spent
+            metadata["epsilon_spent"] = privacy.epsilon_np(
+                state.privacy_state)
             metadata["privacy_delta"] = spec.privacy.delta
         save_experiment(args.checkpoint, state, spec=spec, step=blocks_done,
                         metadata=metadata)

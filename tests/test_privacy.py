@@ -134,6 +134,50 @@ def test_calibration_spends_budget_tightly():
         priv.calibrate_noise_multiplier(0.0, delta, q, steps)
 
 
+def test_accountant_scales_with_local_steps():
+    """T local steps per block = T mechanism invocations per block: the
+    per-block increment is exactly T times the single-invocation bound
+    (the review-critical factor — one increment per block would
+    understate epsilon for any run with local_steps > 1)."""
+    kw = dict(num_agents=4, clip=1.0, noise_multiplier=1.2, delta=1e-5)
+    p1 = priv.Privacy(**kw)
+    p3 = priv.Privacy(steps_per_block=3, **kw)
+    active = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    s1 = p1.advance(p1.init_state(), active)
+    s3 = p3.advance(p3.init_state(), active)
+    np.testing.assert_allclose(np.asarray(s3["rdp"]),
+                               3.0 * np.asarray(s1["rdp"]), rtol=1e-6)
+    assert float(p3.epsilon(s3)) > float(p1.epsilon(s1))
+    with pytest.raises(ValueError, match="steps_per_block"):
+        priv.Privacy(steps_per_block=0, **kw)
+
+
+def test_compile_privacy_accounts_local_steps():
+    """Calibration composes over blocks * local_steps invocations, and
+    the compiled tier carries the per-block invocation count."""
+    spec = _private_spec(nm=0.0, epsilon=6.0).replace(
+        run=RunSpec(num_agents=4, local_steps=2, step_size=0.05, blocks=4))
+    p = priv.compile_privacy(spec)
+    assert p.steps_per_block == 2
+    spent = priv.epsilon_from_rdp_np(
+        4 * 2 * priv.rdp_increment_np(0.8, p.noise_multiplier), p.delta)
+    assert spent <= 6.0 + 1e-6
+    # T=2 needs MORE noise than T=1 for the same budget over the same
+    # number of blocks
+    p1 = priv.compile_privacy(_private_spec(nm=0.0, epsilon=6.0))
+    assert p.noise_multiplier > p1.noise_multiplier
+
+
+def test_compile_privacy_rejects_heterogeneous_rates():
+    """One tracked epsilon at the population rate is only a per-agent
+    guarantee under a uniform rate — mixed-rate networks are rejected."""
+    spec = _private_spec().replace(
+        participation=ParticipationSpec(kind="iid",
+                                        q=(1.0, 0.6, 0.8, 0.8)))
+    with pytest.raises(ValueError, match="homogeneous participation"):
+        priv.compile_privacy(spec)
+
+
 def test_privacy_ctor_validation():
     with pytest.raises(ValueError, match="clip"):
         priv.Privacy(num_agents=4, clip=0.0, noise_multiplier=1.0,
@@ -334,6 +378,29 @@ def test_engine_threads_accountant(asynchronous):
     # the metric agrees with the accountant read off the state
     assert abs(eps[-1] - float(eng.privacy.epsilon(state.privacy_state))) \
         < 1e-6
+
+
+def test_engine_accountant_counts_local_steps():
+    """End to end: a local_steps=2 engine accumulates TWICE the realized
+    single-invocation RDP per block (PrivateGradients draws fresh noise
+    at every local step inside the scan)."""
+    data = make_regression_problem(K=4, N=20)
+    spec = _private_spec(nm=1.0).replace(
+        run=RunSpec(num_agents=4, local_steps=2, step_size=0.05, blocks=4))
+    eng = build(spec, data.loss_fn())
+    assert eng.privacy.steps_per_block == 2
+    params = jnp.zeros((4, 2))
+    state = eng.init_state(params, eng.optimizer.init(params),
+                           key=jax.random.PRNGKey(0))
+    sampler = make_block_sampler(data, T=2, batch=1)
+    rdp = np.zeros(len(priv.DEFAULT_ORDERS), np.float64)
+    for i in range(3):
+        state, m = eng.step(state, sampler(jax.random.PRNGKey(i)),
+                            jax.random.PRNGKey(10 + i))
+        q = float(np.asarray(m["active"]).sum()) / 4
+        rdp += 2 * priv.rdp_increment_np(q, 1.0)
+    np.testing.assert_allclose(np.asarray(state.privacy_state["rdp"]),
+                               rdp, rtol=2e-4, atol=1e-6)
 
 
 def test_step_rejects_missing_privacy_state():
