@@ -1,26 +1,30 @@
 """Federated-style text training with a real data pipeline.
 
-Non-IID corpus partitioning (contiguous document shards) + Algorithm 1 with
-partial participation and local updates, end to end:
+Non-IID corpus partitioning + Algorithm 1 with partial participation and
+local updates, end to end, on the declarative spec path:
 
-    corpus -> per-agent partitions -> deterministic block batches ->
-    T local steps -> eq.(20) masked combination -> loss tracking.
+    ExperimentSpec (DataSpec shards/dirichlet) -> build() -> engine + a
+    compiled index-replayable block provider -> T local steps ->
+    eq.(20) masked combination -> loss tracking.
 
     PYTHONPATH=src python examples/train_federated_text.py --blocks 40
+    PYTHONPATH=src python examples/train_federated_text.py \
+        --data dirichlet --alpha 0.1 --topology scale_free
+
+The provider is a pure function of (DataSpec.seed, block_index, agent),
+so any block can be replayed from its index — checkpoint-resume needs no
+data-state files.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.core.diffusion import DiffusionConfig
-from repro.core.sharded import make_block_step
-from repro.data.pipeline import BlockIterator, TokenDataset, \
-    contiguous_partition
+from repro.api import build
+from repro.api.spec import (DataSpec, ExperimentSpec, MixerSpec, ModelSpec,
+                            ParticipationSpec, RunSpec, TopologySpec)
 from repro.models import transformer as tf
-from repro.optim import adam
 
 
 def main():
@@ -34,40 +38,55 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--corpus-tokens", type=int, default=200_000)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--data", default="shards",
+                    choices=["iid", "shards", "dirichlet"],
+                    help="per-agent distribution: shards = contiguous "
+                         "document-locality regions (the classic federated "
+                         "text setting), dirichlet = cluster skew at "
+                         "--alpha, iid = the synthetic stream")
+    ap.add_argument("--alpha", type=float, default=0.5,
+                    help="dirichlet concentration (DataSpec.alpha)")
+    ap.add_argument("--topology", default="ring",
+                    help="base combination graph (e.g. ring, scale_free)")
+    ap.add_argument("--local-steps-mode", default="uniform",
+                    choices=["uniform", "degree"],
+                    help="degree: hubs run fewer eq.-17 steps")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).smoke
-    K, T = args.agents, args.local_steps
+    spec = ExperimentSpec(
+        topology=TopologySpec(kind=args.topology),
+        participation=ParticipationSpec(q=args.participation),
+        mixer=MixerSpec(kind="dense"),
+        model=ModelSpec(kind="transformer", arch=args.arch, smoke=True),
+        data=DataSpec(kind=args.data, alpha=args.alpha,
+                      corpus_tokens=args.corpus_tokens),
+        run=RunSpec(num_agents=args.agents, local_steps=args.local_steps,
+                    step_size=args.lr, blocks=args.blocks,
+                    batch=args.batch, seq=args.seq,
+                    local_steps_mode=args.local_steps_mode))
+    # the default optimizer spec is adam — the engine threads it through
+    # the shared local-update scan
+    spec = spec.replace(optimizer=dataclasses.replace(
+        spec.optimizer, kind="adam"))
 
-    # 1. corpus + non-IID partition (each agent owns a contiguous region —
-    #    document-locality heterogeneity)
-    ds = TokenDataset.synthetic(vocab=cfg.vocab_size,
-                                n_tokens=args.corpus_tokens,
-                                seq_len=args.seq, seed=0)
-    parts = contiguous_partition(ds.num_windows, K)
-    data = BlockIterator(ds, parts, local_steps=T,
-                         per_agent_batch=args.batch, seed=0)
-
-    # 2. Algorithm 1
-    dcfg = DiffusionConfig(num_agents=K, local_steps=T, step_size=args.lr,
-                           topology="ring", participation=args.participation)
-    topo = dcfg.make_topology()
-    opt = adam()
-    block_step = make_block_step(
-        lambda p, b, r: tf.train_loss(p, cfg, b, remat=False), dcfg,
-        jnp.asarray(topo.A, jnp.float32), mix="sparse",
-        offsets=topo.neighbor_offsets_ring(), grad_transform=opt.update)
-    step = jax.jit(block_step)
+    eng = build(spec)
+    K, T, cfg = args.agents, args.local_steps, eng.model.cfg
+    if args.data != "iid":
+        sizes = [len(p) for p in eng.data.partitions]
+        print(f"data: {args.data} over {K} agents — windows/agent "
+              f"min={min(sizes)} max={max(sizes)}")
+    step = jax.jit(eng.step)
 
     key = jax.random.PRNGKey(0)
-    params = jax.vmap(lambda k: tf.init_params(k, cfg))(jax.random.split(key, K))
-    state = block_step.init_state(params, opt.init(params))
+    kp, key = jax.random.split(key)
+    params = eng.init_params(kp)
+    state = eng.init_state(params, eng.optimizer.init(params))
     eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b,
                                                             remat=False)))
     t0 = time.time()
     for i in range(args.blocks):
-        key, ks = jax.random.split(key)
-        batch = data.block(i)
+        key, kb, ks = jax.random.split(key, 3)
+        batch = eng.data(i, kb)
         state, metrics = step(state, batch, ks)
         if i % 10 == 0 or i == args.blocks - 1:
             per_agent = eval_loss(state.params,

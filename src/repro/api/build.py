@@ -28,9 +28,13 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 
-from repro.api.spec import (AttackSpec, CompressionSpec, ExperimentSpec,
-                            GraphSpec, MixerSpec, ModelSpec, OptimizerSpec,
-                            ParticipationSpec, Registry, TopologySpec)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import (AttackSpec, CompressionSpec, DataSpec,
+                            ExperimentSpec, GraphSpec, MixerSpec, ModelSpec,
+                            OptimizerSpec, ParticipationSpec, Registry,
+                            TopologySpec)
 from repro.core import attacks as attack_lib
 from repro.core import compression as comp_lib
 from repro.core import graphs as graph_lib
@@ -48,6 +52,8 @@ PyTree = Any
 __all__ = [
     "build",
     "ModelBundle",
+    "train_block_struct",
+    "make_block_provider",
     "TOPOLOGIES",
     "GRAPHS",
     "PARTICIPATION",
@@ -56,6 +62,7 @@ __all__ = [
     "ATTACKS",
     "OPTIMIZERS",
     "MODELS",
+    "DATASETS",
 ]
 
 TOPOLOGIES = Registry("topology")        # (TopologySpec, K) -> Topology
@@ -66,12 +73,13 @@ COMPRESSORS = Registry("compressor")     # (CompressionSpec,) -> Compressor
 ATTACKS = Registry("attack")             # (AttackSpec, K, inner) -> transform
 OPTIMIZERS = Registry("optimizer")       # (OptimizerSpec,) -> GradTransform
 MODELS = Registry("model")               # (ModelSpec,) -> ModelBundle | None
+DATASETS = Registry("dataset")           # (DataSpec, spec, cfg) -> provider
 
 
 # -- topologies (delegate to core/topology.make_topology) -------------------
 
 def _register_topologies():
-    for kind in ("ring", "grid", "full", "fedavg", "erdos"):
+    for kind in topo_lib.TOPOLOGY_KINDS:
         @TOPOLOGIES.register(kind)
         def _build(spec: TopologySpec, K: int, _kind=kind):
             return topo_lib.make_topology(_kind, K, **dict(spec.kwargs))
@@ -207,6 +215,139 @@ def _transformer(spec: ModelSpec):
                        init_params=lambda k: tf.init_params(k, cfg))
 
 
+# -- datasets (per-agent block providers) -----------------------------------
+
+def train_block_struct(cfg, *, T: int, K: int, batch: int, seq: int,
+                       img_dtype=jnp.float32) -> dict:
+    """ShapeDtypeStructs of one (T, K, B, S[, C]) training block — the ONE
+    place the engines' block-batch layout is written down.  Every provider
+    below and the dryrun compile driver derive their shapes from it, so the
+    data path and the roofline path cannot drift."""
+    from repro.models import transformer as tf   # lazy: keep api import light
+    tok_shape = (T, K, batch, seq)
+    if cfg.num_codebooks:
+        tok_shape = tok_shape + (cfg.num_codebooks,)
+    out = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+           "labels": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    if cfg.img_tokens:
+        out["img_embeds"] = jax.ShapeDtypeStruct(
+            (T, K, batch, cfg.img_tokens, tf.VISION_DIM), img_dtype)
+    return out
+
+
+def _img_embeds(key, struct):
+    return jax.random.normal(key, struct["img_embeds"].shape,
+                             jnp.float32) * 0.02
+
+
+@DATASETS.register("iid")
+def _iid_provider(dspec: DataSpec, spec: ExperimentSpec, cfg):
+    """The legacy synthetic stream: fresh uniform tokens every block, keyed
+    ONLY by the block key (the index is ignored).  Key discipline is
+    bit-identical to the pre-DataSpec inline ``sample_block``:
+    ``k_tok, k_img = split(key)`` — parity-gated by tests/test_api.py."""
+    from repro.data.synthetic import lm_token_batch
+    run = spec.run
+    struct = train_block_struct(cfg, T=run.local_steps, K=run.num_agents,
+                                batch=run.batch, seq=run.seq)
+    tok_shape = struct["tokens"].shape
+
+    def provider(index: int, key: jax.Array) -> dict:
+        k_tok, k_img = jax.random.split(key)
+        batch = lm_token_batch(k_tok, tok_shape, cfg.vocab_size)
+        if "img_embeds" in struct:
+            batch["img_embeds"] = _img_embeds(k_img, struct)
+        return batch
+
+    return provider
+
+
+def _corpus_provider(dspec: DataSpec, spec: ExperimentSpec, cfg,
+                     partition_fn):
+    """Shared body of the partitioned-corpus kinds: a seeded Zipf
+    :class:`~repro.data.pipeline.TokenDataset`, per-agent window partitions
+    from ``partition_fn``, and an index-replayable
+    :class:`~repro.data.pipeline.BlockIterator` (any block is a pure
+    function of ``(data.seed, index, agent)`` — resume needs no data-state
+    files)."""
+    from repro.data import pipeline as pipe
+    run = spec.run
+    if cfg.num_codebooks:
+        raise ValueError(
+            f"data kind {dspec.kind!r} partitions a flat token corpus, "
+            "which has no codebook axis — multi-codebook archs take the "
+            'synthetic stream (data kind "iid")')
+    struct = train_block_struct(cfg, T=run.local_steps, K=run.num_agents,
+                                batch=run.batch, seq=run.seq)
+    ds = pipe.TokenDataset.synthetic(cfg.vocab_size, dspec.corpus_tokens,
+                                     run.seq, seed=dspec.seed)
+    parts = partition_fn(pipe, ds.num_windows, run.num_agents)
+    it = pipe.BlockIterator(ds, parts, local_steps=run.local_steps,
+                            per_agent_batch=run.batch, seed=dspec.seed)
+
+    def provider(index: int, key: jax.Array) -> dict:
+        batch = it.block(index)
+        if "img_embeds" in struct:
+            # same key discipline as "iid": the img stream rides the
+            # second split half, the token half is owned by the iterator
+            _, k_img = jax.random.split(key)
+            batch["img_embeds"] = _img_embeds(k_img, struct)
+        return batch
+
+    provider.iterator = it
+    provider.partitions = parts
+    return provider
+
+
+@DATASETS.register("dirichlet")
+def _dirichlet_provider(dspec: DataSpec, spec: ExperimentSpec, cfg):
+    """Label-Dirichlet skew over ``dspec.clusters`` latent classes: corpus
+    windows are labeled by contiguous cluster (document locality), then
+    dealt to agents by per-class Dirichlet(alpha) draws."""
+    def partition(pipe, n_windows, K):
+        if n_windows < K:
+            raise ValueError(
+                f"corpus of {n_windows} windows cannot cover {K} agents — "
+                "raise DataSpec.corpus_tokens or shrink RunSpec.seq")
+        C = max(1, dspec.clusters)
+        labels = (np.arange(n_windows) * C) // n_windows
+        return pipe.dirichlet_partition(labels, K, dspec.alpha,
+                                        seed=dspec.seed)
+
+    return _corpus_provider(dspec, spec, cfg, partition)
+
+
+@DATASETS.register("shards")
+def _shards_provider(dspec: DataSpec, spec: ExperimentSpec, cfg):
+    """Contiguous disjoint shards (document-locality non-IIDness): the
+    corpus splits into K x shards_per_agent equal shards, dealt
+    ``shards_per_agent`` per agent in a seeded order."""
+    def partition(pipe, n_windows, K):
+        S = max(1, dspec.shards_per_agent)
+        if n_windows < K * S:
+            raise ValueError(
+                f"corpus of {n_windows} windows cannot cover {K} agents x "
+                f"{S} shards — raise DataSpec.corpus_tokens or shrink "
+                "RunSpec.seq/DataSpec.shards_per_agent")
+        shards = pipe.contiguous_partition(n_windows, K * S)
+        deal = np.random.default_rng(dspec.seed).permutation(K * S)
+        return [np.concatenate([shards[j] for j in deal[k * S:(k + 1) * S]])
+                for k in range(K)]
+
+    return _corpus_provider(dspec, spec, cfg, partition)
+
+
+def make_block_provider(spec: ExperimentSpec, cfg):
+    """Compile ``spec.data`` into ``provider(block_index, key) -> batch``.
+
+    The provider is the data half of the driver loop: TRAIN drivers call it
+    with the running block index and the per-block key, so ``kind="iid"``
+    reproduces the legacy key-only stream bit-for-bit while the partitioned
+    kinds replay any block from its index alone (checkpoint-resume without
+    data-state files)."""
+    return DATASETS.get(spec.data.kind)(spec.data, spec, cfg)
+
+
 # -- the entry point --------------------------------------------------------
 
 def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
@@ -297,6 +438,15 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
     if engine not in ("stacked", "sharded", "async"):
         raise ValueError(f"unknown engine {engine!r} "
                          "(expected stacked|sharded|async|auto)")
+    if spec.compression.ef_host_offload and engine != "sharded":
+        # the stacked/async engines have no between-block comm memory to
+        # park on the host; silently ignoring the flag would report a
+        # memory optimization that never ran
+        raise ValueError(
+            "CompressionSpec.ef_host_offload parks the sharded engine's "
+            f"between-block pipeline memory in host RAM; engine={engine!r} "
+            "has no such residency to move — use engine='sharded' or drop "
+            "the flag")
     if engine != "async" and spec.asynchrony.enabled:
         # silently running a spec that asks for event-driven execution on
         # a bulk-synchronous engine would misreport the experiment
@@ -347,7 +497,8 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
         eng = ShardedEngine(loss, cfg, topology=topology, mix=mixer,
                             participation=process, compress=compressor,
                             graph=graph, grad_transform=grad_transform,
-                            privacy=privacy)
+                            privacy=privacy,
+                            ef_host_offload=spec.compression.ef_host_offload)
 
     eng.spec = spec
     eng.optimizer = optimizer
@@ -356,4 +507,5 @@ def build(spec: ExperimentSpec, loss_fn=None, *, engine: str = "auto",
         def init_params(key, _init=model.init_params, _K=K):
             return jax.vmap(_init)(jax.random.split(key, _K))
         eng.init_params = init_params
+        eng.data = make_block_provider(spec, model.cfg)
     return eng

@@ -31,7 +31,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-from repro.api.spec import (AsyncSpec, AttackSpec, CompressionSpec,
+from repro.api.spec import (AsyncSpec, AttackSpec, CompressionSpec, DataSpec,
                             ExperimentSpec, GraphSpec, MixerSpec, ModelSpec,
                             OptimizerSpec, ParticipationSpec, PrivacySpec,
                             RunSpec, TopologySpec)
@@ -122,6 +122,39 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                    help="erdos: graph seed (TopologySpec.kwargs)")
     g.add_argument("--topology-rows", type=int, default=None, action=_Track,
                    help="grid: row count (TopologySpec.kwargs)")
+    g.add_argument("--topology-m", type=int, default=None, action=_Track,
+                   help="scale_free: edges each arriving node attaches "
+                        "(Barabasi-Albert m; TopologySpec.kwargs)")
+    g.add_argument("--topology-rewire", type=float, default=None,
+                   action=_Track,
+                   help="small_world: per-edge rewiring probability "
+                        "(Watts-Strogatz beta; TopologySpec.kwargs)")
+    g.add_argument("--local-steps-mode", default="uniform", action=_Track,
+                   choices=["uniform", "degree"],
+                   help="per-agent local-update counts "
+                        "(RunSpec.local_steps_mode): uniform (every agent "
+                        "runs T eq.-17 steps) or degree (T_k = max(1, "
+                        "round(T*d_min/d_k)) — hubs do less local work, "
+                        "freezing early inside the shared scan)")
+    g.add_argument("--data", default="iid", action=_Track,
+                   help="per-agent data distribution (DataSpec.kind): iid "
+                        "(legacy synthetic stream, bit-identical) | "
+                        "dirichlet | shards | <registered>")
+    g.add_argument("--data-alpha", type=float, default=1.0, action=_Track,
+                   help="dirichlet: concentration over latent classes "
+                        "(DataSpec.alpha); inf-like -> IID mixing, "
+                        "near-0 -> one-class agents")
+    g.add_argument("--data-shards", type=int, default=1, action=_Track,
+                   help="shards: contiguous shards per agent "
+                        "(DataSpec.shards_per_agent)")
+    g.add_argument("--data-clusters", type=int, default=4, action=_Track,
+                   help="dirichlet: latent class count (DataSpec.clusters)")
+    g.add_argument("--data-seed", type=int, default=0, action=_Track,
+                   help="partition + block-replay seed (DataSpec.seed)")
+    g.add_argument("--data-corpus-tokens", type=int, default=65536,
+                   action=_Track,
+                   help="partitioned kinds: synthetic corpus length "
+                        "(DataSpec.corpus_tokens)")
     g.add_argument("--graph", default="static", action=_Track,
                    help="time variation of the combination graph "
                         "(GraphSpec.kind): static|link_dropout|gossip|"
@@ -189,6 +222,12 @@ def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                    help="Gaussian-mask noise scale (CompressionSpec.sigma)")
     g.add_argument("--error-feedback", action=_TrackTrue, default=False,
                    help="EF residual memory (CompressionSpec.error_feedback)")
+    g.add_argument("--ef-host-offload", action=_TrackTrue, default=False,
+                   help="park the between-block pipeline memory (EF "
+                        "residual / diff-mode reference) in pinned host "
+                        "RAM (CompressionSpec.ef_host_offload; sharded "
+                        "engine; no-op on backends without a pinned_host "
+                        "memory space)")
     g.add_argument("--comm-gamma", type=_gamma_arg, default=None,
                    action=_Track,
                    help="consensus step of the compressed exchange "
@@ -288,9 +327,17 @@ _PRESET_OVERRIDES = {
     "compress_ratio": ("compression", "ratio"),
     "compress_sigma": ("compression", "sigma"),
     "error_feedback": ("compression", "error_feedback"),
+    "ef_host_offload": ("compression", "ef_host_offload"),
     "comm_gamma": ("compression", "gamma"),
     "optimizer": ("optimizer", "kind"),
     "drift_correction": ("run", "drift_correction"),
+    "local_steps_mode": ("run", "local_steps_mode"),
+    "data": ("data", "kind"),
+    "data_alpha": ("data", "alpha"),
+    "data_shards": ("data", "shards_per_agent"),
+    "data_clusters": ("data", "clusters"),
+    "data_seed": ("data", "seed"),
+    "data_corpus_tokens": ("data", "corpus_tokens"),
     "async_rate_dist": ("asynchrony", "rate_dist"),
     "async_rate": ("asynchrony", "rates"),
     "async_rate_sigma": ("asynchrony", "rate_sigma"),
@@ -312,7 +359,8 @@ _PRESET_OVERRIDES = {
 #: spec_from_args used to forward only the kind, so hops/p/seed/rows were
 #: unreachable from the launchers)
 _TOPOLOGY_KWARG_FLAGS = {"topology_hops": "hops", "topology_p": "p",
-                         "topology_seed": "seed", "topology_rows": "rows"}
+                         "topology_seed": "seed", "topology_rows": "rows",
+                         "topology_m": "m", "topology_rewire": "rewire"}
 
 
 def _topology_kwargs(args, base: tuple = (),
@@ -434,6 +482,21 @@ def _check_robust_flags(args, spec: ExperimentSpec) -> ExperimentSpec:
             f"{'/'.join(priv)} configures the differential-privacy tier "
             "but privacy is not enabled — pass --privacy (or a preset/"
             "spec with privacy.enabled)")
+    # ... and on the data sub-flags: each is consumed by exactly one
+    # builtin partition kind — tuning a skew dial the selected kind never
+    # reads would report a heterogeneity experiment that never ran
+    dcons = {"data_alpha": ("--data-alpha", ("dirichlet",)),
+             "data_clusters": ("--data-clusters", ("dirichlet",)),
+             "data_shards": ("--data-shards", ("shards",)),
+             "data_corpus_tokens": ("--data-corpus-tokens",
+                                    ("dirichlet", "shards"))}
+    if spec.data.kind in ("iid", "dirichlet", "shards"):
+        for dest, (flag, kinds) in dcons.items():
+            if dest in explicit and spec.data.kind not in kinds:
+                raise ValueError(
+                    f"{flag} only applies to --data {'|'.join(kinds)}; "
+                    f"the {spec.data.kind!r} data kind ignores it — drop "
+                    "the flag or pick the matching kind")
     return spec
 
 
@@ -466,7 +529,8 @@ def spec_from_args(args) -> ExperimentSpec:
         compression=CompressionSpec(
             kind=args.compress, ratio=args.compress_ratio,
             sigma=args.compress_sigma, error_feedback=args.error_feedback,
-            gamma=args.comm_gamma),
+            gamma=args.comm_gamma,
+            ef_host_offload=args.ef_host_offload),
         attack=AttackSpec(kind=args.attack, num_byzantine=args.attack_num,
                           scale=args.attack_scale),
         optimizer=OptimizerSpec(kind=args.optimizer),
@@ -489,4 +553,9 @@ def spec_from_args(args) -> ExperimentSpec:
                     step_size=args.step_size,
                     drift_correction=args.drift_correction,
                     blocks=args.blocks, batch=args.batch, seq=args.seq,
-                    seed=args.seed)))
+                    seed=args.seed,
+                    local_steps_mode=args.local_steps_mode),
+        data=DataSpec(kind=args.data, alpha=args.data_alpha,
+                      shards_per_agent=args.data_shards,
+                      seed=args.data_seed, clusters=args.data_clusters,
+                      corpus_tokens=args.data_corpus_tokens)))

@@ -14,6 +14,9 @@ of sub-specs:
       ├─ OptimizerSpec       local-update gradient transform
       ├─ ModelSpec           what the agents train (transformer arch or an
       │                      externally supplied loss)
+      ├─ DataSpec            who holds which data: the per-agent sampling /
+      │                      partitioning law (IID streams | Dirichlet
+      │                      label skew | contiguous shards)
       ├─ AsyncSpec           event-driven execution: per-agent clocks,
       │                      staleness cap, age-discount law
       ├─ PrivacySpec         differential privacy: clip + noise on the
@@ -48,6 +51,7 @@ __all__ = [
     "AttackSpec",
     "OptimizerSpec",
     "ModelSpec",
+    "DataSpec",
     "AsyncSpec",
     "PrivacySpec",
     "RunSpec",
@@ -164,6 +168,10 @@ class CompressionSpec:
     gamma: Union[float, str, None] = None  # consensus step: float fixed,
                                  # None legacy heuristic, "auto" spectral-
                                  # gap floor + observed-contraction anneal
+    ef_host_offload: bool = False  # park the error-feedback residual in
+                                 # host memory between blocks (sharded
+                                 # engine; no-op where the backend has no
+                                 # distinct host memory space)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,6 +214,38 @@ class ModelSpec:
     kind: str = "external"       # external|transformer|<registered>
     arch: str = "smollm-360m"
     smoke: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Who holds which data: the per-agent sampling / partitioning law
+    (data/pipeline.py, data/synthetic.py; compiled by the ``DATASETS``
+    registry in :mod:`repro.api.build`).
+
+    ``kind="iid"`` is the legacy fresh-random stream — bit-identical to the
+    pre-DataSpec inline samplers on the same key stream (parity-gated).
+    The heterogeneous kinds are *index-replayable*: block ``i`` for agent
+    ``k`` is a pure function of ``(seed, i, k)`` (the
+    :class:`repro.data.pipeline.BlockIterator` design), so checkpoint
+    resume replays the exact stream with no data-state files.
+
+    * ``dirichlet`` — label/cluster skew at concentration ``alpha`` (Hsu
+      et al.): each agent's local distribution is a Dirichlet(alpha) draw
+      over latent classes.  ``alpha -> inf`` recovers IID-like mixing,
+      ``alpha -> 0`` gives one-class agents.
+    * ``shards`` — contiguous disjoint shards (``shards_per_agent`` per
+      agent), the classic FedAvg pathological split; drives the LM token
+      path through :class:`repro.data.pipeline.TokenDataset`.
+    """
+
+    kind: str = "iid"            # iid|dirichlet|shards|<registered>
+    alpha: float = 1.0           # dirichlet: concentration over classes
+    shards_per_agent: int = 1    # shards: contiguous shards per agent
+    seed: int = 0                # partition + per-(block, agent) draw seed
+    clusters: int = 4            # dirichlet: latent classes (regression)
+    samples_per_agent: int = 0   # per-agent local dataset size; 0 = the
+                                 # workload default (N for regression)
+    corpus_tokens: int = 65536   # LM shard kinds: synthetic corpus length
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,11 +330,16 @@ class RunSpec:
     batch: int = 2               # driver: per-agent batch
     seq: int = 64                # driver: sequence length (LM models)
     seed: int = 0
+    local_steps_mode: str = "uniform"  # uniform: every agent runs T
+                                 # steps; degree: per-agent T_k =
+                                 # max(1, round(T * d_min / d_k)) — hubs
+                                 # do less local work (eq. 17 with early
+                                 # identity updates)
 
 
 _SUBSPECS = (TopologySpec, GraphSpec, ParticipationSpec, MixerSpec,
              CompressionSpec, AttackSpec, OptimizerSpec, ModelSpec,
-             AsyncSpec, PrivacySpec, RunSpec)
+             DataSpec, AsyncSpec, PrivacySpec, RunSpec)
 
 
 def _tuplify(v):
@@ -339,6 +384,8 @@ class ExperimentSpec:
     asynchrony: AsyncSpec = AsyncSpec()   # "async" is a keyword
     privacy: PrivacySpec = PrivacySpec()
     run: RunSpec = RunSpec()
+    data: DataSpec = DataSpec()  # appended (spec evolution: new sub-specs
+                                 # go last so older JSON still hydrates)
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -398,7 +445,7 @@ class ExperimentSpec:
             drift_correction=r.drift_correction, mix=self.mixer.kind,
             compress=c.kind, compress_ratio=c.ratio, compress_sigma=c.sigma,
             error_feedback=c.error_feedback, comm_mode=c.mode,
-            comm_gamma=c.gamma)
+            comm_gamma=c.gamma, local_steps_mode=r.local_steps_mode)
 
     def q_vector(self):
         """(K,) stationary activation probabilities (numpy)."""

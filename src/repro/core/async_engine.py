@@ -60,7 +60,7 @@ from repro.core import graphs as graph_lib
 from repro.core import participation as part
 from repro.core import schedules
 from repro.core.diffusion import (DiffusionConfig, local_update_scan,
-                                  network_msd)
+                                  network_msd, resolve_step_mask)
 from repro.core.state import EngineState
 
 PyTree = Any
@@ -189,9 +189,17 @@ class AsyncEngine:
                 f"{type(self.graph).__name__} leaves the base-topology "
                 "support; the AsyncEngine staleness buffer is indexed by "
                 "the base neighbor table and needs within_base_support")
-        idx, valid = self.topology.neighbor_table()
+        # hub-degree guard: the staleness buffer materializes (K, D, ...)
+        # per leaf — on heavy-tailed degree distributions (scale_free) the
+        # hub degree makes D comparable to K and the "bounded-degree"
+        # buffer denser than a dense (K, K) exchange.  The cap rejects
+        # loudly (topology.neighbor_table names the hub degree) rather
+        # than silently allocating a quasi-dense buffer.
+        idx, valid = self.topology.neighbor_table(
+            dmax_cap=max(config.num_agents // 2, 8))
         self._idx = jnp.asarray(idx)                    # (K, D) int32
         self._valid = jnp.asarray(valid)                # (K, D) bool
+        self.step_mask = resolve_step_mask(config, self.topology)
         rates = resolve_rates(async_spec, config.num_agents)
         self.rates = rates
         self.delays = 1.0 / rates                        # seconds / event
@@ -284,7 +292,8 @@ class AsyncEngine:
                                     cfg.drift_correction)        # (K,)
         psi, opt_state = local_update_scan(
             self._grad_fn, state.params, state.opt_state, mus, block_batch,
-            local_steps=cfg.local_steps, grad_transform=self.grad_transform)
+            local_steps=cfg.local_steps, grad_transform=self.grad_transform,
+            step_mask=self.step_mask)
 
         idx, valid = self._idx, self._valid
         K = cfg.num_agents

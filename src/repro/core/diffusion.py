@@ -58,7 +58,8 @@ PyTree = Any
 LossFn = Callable[[PyTree, Any], jax.Array]   # (agent_params, agent_batch) -> scalar
 
 __all__ = ["DiffusionConfig", "DiffusionEngine", "EngineState",
-           "local_update_scan", "mix_stacked", "network_msd"]
+           "degree_local_steps", "local_steps_mask", "local_update_scan",
+           "mix_stacked", "network_msd", "resolve_step_mask"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +82,7 @@ class DiffusionConfig:
     error_feedback: bool = False         # EF residual memory (direct mode)
     comm_mode: str = "auto"              # auto|identity|direct|diff
     comm_gamma: Any = None               # consensus step (None: auto)
+    local_steps_mode: str = "uniform"    # uniform|degree (per-agent T_k)
 
     def q_vector(self) -> np.ndarray:
         q = np.asarray(self.participation, dtype=np.float64)
@@ -112,15 +114,42 @@ def _bshape(v: jax.Array, leaf: jax.Array) -> jax.Array:
     return v.reshape((v.shape[0],) + (1,) * (leaf.ndim - 1))
 
 
+def degree_local_steps(topology, local_steps: int) -> np.ndarray:
+    """Per-agent local-update counts for ``local_steps_mode="degree"``.
+
+    ``T_k = max(1, round(T * d_min / d_k))`` — compute scales inversely
+    with degree, so hubs (which communicate the most) drift the least
+    toward their local optimum while leaves keep the full T.  On a regular
+    graph every ``d_k = d_min`` and the law collapses to the uniform T
+    (bit-identical to ``local_steps_mode="uniform"``).
+    """
+    K = topology.num_agents
+    off = np.asarray(topology.adjacency, dtype=bool) & ~np.eye(K, dtype=bool)
+    deg = np.maximum(off.sum(axis=1), 1)
+    return np.maximum(
+        1, np.round(local_steps * deg.min() / deg)).astype(np.int32)
+
+
+def local_steps_mask(t_k: np.ndarray, local_steps: int) -> jax.Array:
+    """(T, K) step mask: row t is 1 for agents still updating at local
+    step t (``t < T_k``), 0 once frozen — eq. 17 with early identity
+    updates, keeping the scan length uniform."""
+    t_k = np.asarray(t_k)
+    mask = np.arange(local_steps)[:, None] < t_k[None, :]
+    return jnp.asarray(mask.astype(np.float32))
+
+
 def local_update_scan(grad_fn, params: PyTree, opt_state: PyTree,
                       mus: jax.Array, block_batch: PyTree, *,
                       local_steps: int, grad_transform=None,
                       loss_key: jax.Array | None = None,
-                      num_agents: int | None = None):
+                      num_agents: int | None = None,
+                      step_mask: jax.Array | None = None):
     """The T local stochastic-gradient updates of Algorithm 1 (eq. 17).
 
-    The single scan body shared by BOTH execution engines (stacked and
-    mesh-sharded) — any change to the local-update semantics lands here once.
+    The single scan body shared by ALL execution engines (stacked,
+    mesh-sharded, async) — any change to the local-update semantics lands
+    here once.
 
     Args:
       grad_fn: vmapped per-agent gradient.  Two calling conventions:
@@ -135,11 +164,20 @@ def local_update_scan(grad_fn, params: PyTree, opt_state: PyTree,
       grad_transform: optional ``(grads, state, params) -> (updates, state)``.
       loss_key: enables the 3-arg grad_fn convention.
       num_agents: K, required when ``loss_key`` is given.
+      step_mask: optional (T, K) per-step freeze mask (see
+        :func:`local_steps_mask`): at local step t, agent k updates only
+        while ``step_mask[t, k] != 0`` — afterwards both its parameters
+        AND its optimizer state take the identity update (eq. 17's
+        A_{iT+t} = I applied early), so a frozen agent is bit-identical
+        to one whose scan ended at T_k.  ``None`` (the default) is the
+        uniform-T path, unchanged from before this knob existed.
     Returns:
       (params, opt_state) after T updates.
     """
     def local_step(carry, xs):
         p, s = carry
+        if step_mask is not None:
+            xs, mask_t = xs
         if loss_key is None:
             batch_t = xs
             grads = grad_fn(p, batch_t)
@@ -149,12 +187,24 @@ def local_update_scan(grad_fn, params: PyTree, opt_state: PyTree,
                                     num_agents)
             grads = grad_fn(p, batch_t, rngs)
         if grad_transform is not None:
-            updates, s = grad_transform(grads, s, p)
+            updates, s_new = grad_transform(grads, s, p)
         else:
-            updates = grads
+            updates, s_new = grads, s
+        m = mus if step_mask is None else mus * mask_t.astype(mus.dtype)
         p = jax.tree.map(
-            lambda w, g: w - _bshape(mus, w).astype(w.dtype) * g.astype(w.dtype),
+            lambda w, g: w - _bshape(m, w).astype(w.dtype) * g.astype(w.dtype),
             p, updates)
+        if step_mask is not None and grad_transform is not None:
+            # identity update for frozen agents extends to the optimizer
+            # state; leaves without the (K, ...) agent axis (global
+            # counters, e.g. the privacy mechanism index) advance as usual
+            def keep_frozen(n, o):
+                if n.ndim >= 1 and n.shape[0] == mask_t.shape[0]:
+                    return jnp.where(_bshape(mask_t, n).astype(bool), n, o)
+                return n
+            s = jax.tree.map(keep_frozen, s_new, s)
+        else:
+            s = s_new
         return (p, s), None
 
     if loss_key is None:
@@ -163,9 +213,31 @@ def local_update_scan(grad_fn, params: PyTree, opt_state: PyTree,
         if num_agents is None:
             raise ValueError("loss_key requires num_agents")
         xs = (block_batch, jnp.arange(local_steps))
+    if step_mask is not None:
+        xs = (xs, step_mask)
     (params, opt_state), _ = jax.lax.scan(
         local_step, (params, opt_state), xs, length=local_steps)
     return params, opt_state
+
+
+def resolve_step_mask(config: DiffusionConfig,
+                      topology) -> jax.Array | None:
+    """The (T, K) freeze mask a config's ``local_steps_mode`` denotes.
+
+    ``None`` for the uniform mode — and also for a degree law that
+    collapses to uniform (regular graphs), so the scan runs the exact
+    pre-mask code path (bit-parity) whenever the mask would be all-ones.
+    """
+    mode = config.local_steps_mode
+    if mode == "uniform":
+        return None
+    if mode != "degree":
+        raise ValueError(f"unknown local_steps_mode {mode!r} — valid "
+                         "modes: ['degree', 'uniform']")
+    t_k = degree_local_steps(topology, config.local_steps)
+    if (t_k == config.local_steps).all():
+        return None
+    return local_steps_mask(t_k, config.local_steps)
 
 
 class DiffusionEngine:
@@ -239,6 +311,7 @@ class DiffusionEngine:
             secure_agg=(privacy.make_mask_stage() if privacy is not None
                         else None))
         self.compressor = self.pipeline.compressor
+        self.step_mask = resolve_step_mask(config, self.topology)
         self._grad_fn = jax.vmap(jax.grad(loss_fn))
 
     # -- state construction -------------------------------------------------
@@ -289,7 +362,8 @@ class DiffusionEngine:
                                     cfg.drift_correction)       # (K,)
         params, opt_state = local_update_scan(
             self._grad_fn, state.params, state.opt_state, mus, block_batch,
-            local_steps=cfg.local_steps, grad_transform=self.grad_transform)
+            local_steps=cfg.local_steps, grad_transform=self.grad_transform,
+            step_mask=self.step_mask)
         params, comm_state = self.pipeline(params, active, A_t,
                                            state.comm_state,
                                            key_comm)            # eq. (20)

@@ -37,20 +37,66 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import compression as comp_lib
 from repro.core import graphs as graph_lib
 from repro.core import mixing
 from repro.core import participation as part
 from repro.core import schedules
-from repro.core.diffusion import DiffusionConfig, local_update_scan
+from repro.core import topology as topo_lib
+from repro.core.diffusion import (DiffusionConfig, local_update_scan,
+                                  resolve_step_mask)
 from repro.core.mixing import mix_dense, mix_sparse  # noqa: F401 (compat)
 from repro.core.state import (EngineState, check_engine_state,
                               init_engine_state)
 
 PyTree = Any
 
-__all__ = ["mix_dense", "mix_sparse", "make_block_step", "ShardedEngine"]
+__all__ = ["mix_dense", "mix_sparse", "make_block_step", "ShardedEngine",
+           "ef_host_sharding", "offload_comm_state", "fetch_comm_state"]
+
+
+# ---------------------------------------------------------------------------
+# error-feedback residual host offload (ROADMAP carry-over)
+# ---------------------------------------------------------------------------
+
+def ef_host_sharding():
+    """The host-memory sharding EF-residual offload parks tensors in, or
+    ``None`` when the backend exposes no distinct pinned-host space (CPU:
+    arrays already live in host RAM — offload is an explicit no-op there,
+    gated by the parity test, not a crash)."""
+    try:
+        dev = jax.devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+        if "pinned_host" in kinds:
+            return jax.sharding.SingleDeviceSharding(
+                dev, memory_kind="pinned_host")
+    except Exception:
+        return None
+    return None
+
+
+def offload_comm_state(comm_state: PyTree) -> PyTree:
+    """Move the pipeline memory (EF residual / diff reference) to host
+    memory between blocks — frees ~1x params of HBM while the model's
+    forward/backward owns the device.  ``may_alias`` lets the runtime
+    reuse an existing host copy instead of forcing a fresh transfer."""
+    host = ef_host_sharding()
+    if host is None or comm_state is None or comm_state == ():
+        return comm_state
+    return jax.tree.map(
+        lambda l: jax.device_put(l, host, may_alias=True), comm_state)
+
+
+def fetch_comm_state(comm_state: PyTree) -> PyTree:
+    """Bring an offloaded pipeline memory back to the default device
+    memory ahead of the next block's combination step."""
+    if ef_host_sharding() is None or comm_state is None or comm_state == ():
+        return comm_state
+    dev = jax.devices()[0]
+    return jax.tree.map(
+        lambda l: jax.device_put(l, dev, may_alias=True), comm_state)
 
 
 def make_block_step(
@@ -78,6 +124,7 @@ def make_block_step(
     mesh=None,
     agent_axis: str | None = None,
     privacy=None,
+    ef_host_offload: bool = False,
 ) -> Callable:
     """Build the pure block-step function for jit/pjit.
 
@@ -132,6 +179,13 @@ def make_block_step(
         local mechanism invocations per block) and routes the
         combination through the secure-agg wire masks when requested (the
         clip+noise transform arrives pre-composed via ``grad_transform``).
+      ef_host_offload: park the pipeline memory (EF residual / diff-mode
+        reference — ~1x params) in pinned host memory between blocks.
+        The driver calls the returned step's ``offload(state)`` after a
+        block and ``fetch(state)`` before the next one; where the backend
+        has no pinned-host space both are identity (CPU).  Requires a
+        stateful pipeline — requesting it on a stateless one is an error
+        (the flag would silently do nothing).
 
     Returns:
       The unified-contract step function
@@ -188,6 +242,21 @@ def make_block_step(
         base_A=topology.A if topology is not None else A, mesh=mesh,
         secure_agg=(privacy.make_mask_stage() if privacy is not None
                     else None))
+    if ef_host_offload and not pipeline.stateful:
+        raise ValueError(
+            "ef_host_offload requires a stateful pipeline (error feedback "
+            "or a diff-mode compressor) — this pipeline carries no "
+            "between-block memory to offload")
+    mask_topo = topology
+    if mask_topo is None and config.local_steps_mode != "uniform":
+        if A is None:
+            raise ValueError(
+                "local_steps_mode='degree' reads per-agent degrees — pass "
+                "topology= (or the base matrix A)")
+        A_np = np.asarray(A)
+        mask_topo = topo_lib.Topology(name="from_A", A=A_np,
+                                      adjacency=A_np != 0)
+    step_mask = resolve_step_mask(config, mask_topo)
     grad_fn = jax.vmap(jax.grad(loss_fn), in_axes=(0, 0, 0))
 
     # key_comm / key_graph come from fold_ins (not a wider split) so the
@@ -207,7 +276,7 @@ def make_block_step(
         params, opt_state = local_update_scan(
             grad_fn, state.params, state.opt_state, mus, block_batch,
             local_steps=config.local_steps, grad_transform=grad_transform,
-            loss_key=key_loss, num_agents=K)
+            loss_key=key_loss, num_agents=K, step_mask=step_mask)
         params, comm_state = pipeline(params, active, A_t,
                                       state.comm_state, key_comm)
         metrics = {"active": active}
@@ -224,12 +293,26 @@ def make_block_step(
                                  key=key, graph=graph_proc,
                                  privacy=privacy)
 
+    def offload(state: EngineState) -> EngineState:
+        if not ef_host_offload:
+            return state
+        return state.replace(comm_state=offload_comm_state(state.comm_state))
+
+    def fetch(state: EngineState) -> EngineState:
+        if not ef_host_offload:
+            return state
+        return state.replace(comm_state=fetch_comm_state(state.comm_state))
+
     block_step.pipeline = pipeline
     block_step.process = process
     block_step.graph = graph_proc
     block_step.config = config
     block_step.privacy = privacy
     block_step.init_state = init_state
+    block_step.step_mask = step_mask
+    block_step.ef_host_offload = ef_host_offload
+    block_step.offload = offload
+    block_step.fetch = fetch
     return block_step
 
 
@@ -254,6 +337,10 @@ class ShardedEngine:
         self.graph = self.step.graph
         self.privacy = self.step.privacy
         self.init_state = self.step.init_state
+        self.step_mask = self.step.step_mask
+        self.ef_host_offload = self.step.ef_host_offload
+        self.offload = self.step.offload
+        self.fetch = self.step.fetch
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"ShardedEngine(K={self.config.num_agents}, "

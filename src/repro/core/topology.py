@@ -8,6 +8,7 @@ diffusion literature plus validation helpers.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -17,6 +18,8 @@ __all__ = [
     "grid_adjacency",
     "full_adjacency",
     "erdos_renyi_adjacency",
+    "scale_free_adjacency",
+    "small_world_adjacency",
     "metropolis_weights",
     "averaging_matrix",
     "laplacian_weights",
@@ -26,6 +29,7 @@ __all__ = [
     "perron_vector",
     "spectral_gap",
     "Topology",
+    "TOPOLOGY_KINDS",
     "make_topology",
 ]
 
@@ -76,6 +80,77 @@ def erdos_renyi_adjacency(K: int, p: float, seed: int = 0,
     adj = np.triu(upper, 1)
     adj = adj | adj.T | np.eye(K, dtype=bool)
     if ensure_connected:
+        adj = adj | ring_adjacency(K, 1)
+    return adj
+
+
+def _connected(adj: np.ndarray) -> bool:
+    """Connectivity of a boolean adjacency by repeated squaring."""
+    adj = np.asarray(adj, dtype=bool) | np.eye(adj.shape[0], dtype=bool)
+    reach = adj
+    for _ in range(int(np.ceil(np.log2(max(adj.shape[0], 2)))) + 1):
+        reach = (reach.astype(np.float32) @ reach.astype(np.float32)) > 0
+        if reach.all():
+            return True
+    return bool(reach.all())
+
+
+def scale_free_adjacency(K: int, m: int = 2, seed: int = 0) -> np.ndarray:
+    """Barabási–Albert preferential attachment, self-loops added.
+
+    Starts from a complete seed graph on ``m + 1`` nodes (connected by
+    construction, so the result is always connected) and attaches each new
+    node to ``m`` distinct existing nodes with probability proportional to
+    degree — the classic repeated-nodes urn.  Degree distribution is a
+    power law: expect O(sqrt(K))-degree hubs, so ``max_degree`` (and the
+    ``(K, D)`` neighbor table) is NOT O(1) in K on these graphs.
+    """
+    if K < 2:
+        raise ValueError("scale_free: K must be >= 2")
+    m = int(min(max(m, 1), K - 1))
+    rng = np.random.default_rng(seed)
+    adj = np.eye(K, dtype=bool)
+    m0 = m + 1
+    adj[:m0, :m0] = True
+    # urn of endpoints: each edge contributes both ends, so a draw is
+    # degree-proportional
+    urn = [i for i in range(m0) for _ in range(m0 - 1)]
+    for v in range(m0, K):
+        targets: set[int] = set()
+        while len(targets) < m:
+            targets.add(int(urn[rng.integers(len(urn))]))
+        for t in targets:
+            adj[v, t] = adj[t, v] = True
+            urn.extend((v, t))
+    return adj
+
+
+def small_world_adjacency(K: int, hops: int = 2, rewire: float = 0.1,
+                          seed: int = 0,
+                          ensure_connected: bool = True) -> np.ndarray:
+    """Watts–Strogatz small world, self-loops added.
+
+    A ring lattice with ``hops`` neighbors per side; each clockwise lattice
+    edge is rewired to a uniform random target with probability ``rewire``.
+    Rewiring can (rarely) disconnect the graph; ``ensure_connected``
+    overlays the 1-hop ring in that case (same convention as
+    :func:`erdos_renyi_adjacency`) so Assumption 1's primitivity holds.
+    """
+    if K < 3:
+        raise ValueError("small_world: K must be >= 3")
+    hops = int(min(max(hops, 1), (K - 1) // 2))
+    rng = np.random.default_rng(seed)
+    adj = np.eye(K, dtype=bool)
+    for h in range(1, hops + 1):
+        for i in range(K):
+            j = (i + h) % K
+            if rng.random() < rewire:
+                # rewire i -> j to i -> t, avoiding self and duplicates
+                choices = np.flatnonzero(~adj[i])
+                if len(choices):
+                    j = int(choices[rng.integers(len(choices))])
+            adj[i, j] = adj[j, i] = True
+    if ensure_connected and not _connected(adj):
         adj = adj | ring_adjacency(K, 1)
     return adj
 
@@ -184,10 +259,24 @@ def perron_vector(A: np.ndarray) -> np.ndarray:
 
 
 def spectral_gap(A: np.ndarray) -> float:
-    """1 - |lambda_2(A)| — mixing rate of the network."""
+    """1 - |lambda_2(A)| — mixing rate of the network.
+
+    A disconnected doubly-stochastic matrix has ``|lambda_2| = 1`` and the
+    gap degenerates to 0 — that used to return silently, which downstream
+    consumers (choco_gamma floors, MSD surrogates) read as "never mixes".
+    We warn instead of raising because non-doubly-stochastic callers may
+    legitimately probe arbitrary matrices.
+    """
     vals = np.linalg.eigvals(np.asarray(A, dtype=np.float64))
     mags = np.sort(np.abs(vals))[::-1]
-    return float(1.0 - (mags[1] if len(mags) > 1 else 0.0))
+    gap = float(1.0 - (mags[1] if len(mags) > 1 else 0.0))
+    if len(mags) > 1 and gap <= 1e-12:
+        warnings.warn(
+            "spectral_gap: |lambda_2| ~= 1 — the graph is disconnected (or "
+            "periodic), so the mixing-rate gap is 0; check the topology "
+            "seed / connectivity before using this value",
+            stacklevel=2)
+    return gap
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +300,8 @@ class Topology:
         off = self.adjacency & ~np.eye(self.num_agents, dtype=bool)
         return int(off.sum(axis=1).max()) if self.num_agents > 1 else 0
 
-    def neighbor_table(self) -> tuple[np.ndarray, np.ndarray]:
+    def neighbor_table(self, *, dmax_cap: int | None = None
+                       ) -> tuple[np.ndarray, np.ndarray]:
         """Static bounded-degree gather table ``(idx, valid)``.
 
         ``idx`` is (K, D) int32 with ``D = max_degree + 1``: slot 0 is the
@@ -228,9 +318,23 @@ class Topology:
         edges and renormalizes the diagonal, and self is always slot 0.
         It is NOT valid for processes that realize edges outside the base
         adjacency (tv_erdos) — ``check_mixer_support`` guards that.
+
+        ``dmax_cap`` guards consumers that materialize O(K * D) state (the
+        async staleness buffer, the gather mixers): on heavy-tailed degree
+        distributions (``scale_free``) ``max_degree`` grows with K, so the
+        "bounded-degree" table silently degenerates toward dense.  When the
+        cap is exceeded the table REFUSES (with the hub degree named)
+        rather than capping — dropping a hub's edges would change the
+        realized combination matrix.
         """
         K = self.num_agents
         D = self.max_degree + 1
+        if dmax_cap is not None and self.max_degree > dmax_cap:
+            raise ValueError(
+                f"{self.name}: max degree {self.max_degree} exceeds the "
+                f"neighbor-table cap {dmax_cap} — hub degrees on this "
+                "topology make the (K, D) table quasi-dense; use a dense "
+                "mixer / engine or a bounded-degree topology")
         off = self.adjacency & ~np.eye(K, dtype=bool)
         idx = np.tile(np.arange(K, dtype=np.int32)[:, None], (1, D))
         valid = np.zeros((K, D), dtype=bool)
@@ -264,9 +368,19 @@ class Topology:
             raise ValueError(f"{self.name}: A not primitive")
 
 
+TOPOLOGY_KINDS = ("erdos", "fedavg", "full", "grid", "ring", "scale_free",
+                  "small_world")
+
+
 def make_topology(kind: str, K: int, *, seed: int = 0, p: float = 0.3,
-                  hops: int = 1, rows: int | None = None) -> Topology:
-    """Factory: ``kind`` in {ring, grid, full, erdos, fedavg}."""
+                  hops: int = 1, rows: int | None = None, m: int = 2,
+                  rewire: float = 0.1) -> Topology:
+    """Factory: ``kind`` in :data:`TOPOLOGY_KINDS`.
+
+    ``m`` is the Barabási–Albert attachment count (``scale_free``);
+    ``hops``/``rewire`` parameterize the Watts–Strogatz lattice
+    (``small_world`` reuses the ring's per-side neighbor count).
+    """
     if kind == "ring":
         adj = ring_adjacency(K, hops=hops)
         A = metropolis_weights(adj)
@@ -286,8 +400,16 @@ def make_topology(kind: str, K: int, *, seed: int = 0, p: float = 0.3,
     elif kind == "erdos":
         adj = erdos_renyi_adjacency(K, p, seed=seed)
         A = metropolis_weights(adj)
+    elif kind == "scale_free":
+        adj = scale_free_adjacency(K, m=m, seed=seed)
+        A = metropolis_weights(adj)
+    elif kind == "small_world":
+        adj = small_world_adjacency(K, hops=max(hops, 2), rewire=rewire,
+                                    seed=seed)
+        A = metropolis_weights(adj)
     else:
-        raise ValueError(f"unknown topology kind: {kind!r}")
+        raise ValueError(f"unknown topology kind {kind!r} — valid kinds: "
+                         f"{list(TOPOLOGY_KINDS)}")
     topo = Topology(name=f"{kind}(K={K})", A=A, adjacency=adj)
     topo.validate()
     return topo

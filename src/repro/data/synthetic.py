@@ -16,6 +16,7 @@ import numpy as np
 from repro.core.msd import QuadraticProblem
 
 __all__ = ["RegressionData", "make_regression_problem", "make_block_sampler",
+           "partition_regression_data", "make_indexed_block_sampler",
            "lm_token_batch"]
 
 
@@ -79,6 +80,67 @@ def make_regression_problem(K: int = 20, N: int = 100, M: int = 2,
                           noise_std=noise_std)
 
 
+def partition_regression_data(data: RegressionData, K: int, *,
+                              kind: str = "dirichlet", alpha: float = 1.0,
+                              shards_per_agent: int = 1, seed: int = 0,
+                              samples_per_agent: int = 0) -> RegressionData:
+    """Re-partition the §VII pool across ``K`` agents with controlled skew.
+
+    The generator's per-origin-agent input means (eq. 80) make the original
+    K₀ agents K₀ *latent classes*: pooling all (K₀·N) rows with their origin
+    label and re-dealing them via the federated partition protocols turns
+    the mean-shift non-IIDness into a tunable statistical-heterogeneity
+    dial.  ``kind="dirichlet"`` deals each class by a Dirichlet(alpha) draw
+    (alpha → ∞ every agent holds the global mixture; alpha → 0 one-class
+    agents); ``kind="shards"`` gives each agent ``shards_per_agent``
+    contiguous shards of the class-sorted pool; ``kind="iid"`` shuffles the
+    pool uniformly.
+
+    Every agent is resampled (with replacement, seeded) to the same local
+    size ``N'`` so the result keeps the fixed (K, N', M) stacked layout the
+    block samplers expect.  ``noise_std`` is recomputed empirically from
+    the residuals against ``w_star``.
+    """
+    pool_U = data.U.reshape(-1, data.U.shape[-1])          # (K0*N, M)
+    pool_d = data.d.reshape(-1)                            # (K0*N,)
+    labels = np.repeat(np.arange(data.num_agents), data.U.shape[1])
+    n_pool = len(pool_d)
+    n_local = samples_per_agent if samples_per_agent > 0 else max(
+        1, n_pool // K)
+
+    from repro.data.pipeline import contiguous_partition, dirichlet_partition
+    rng = np.random.default_rng(seed)
+    if kind == "dirichlet":
+        parts = dirichlet_partition(labels, K, alpha, seed=seed)
+    elif kind == "shards":
+        S = max(1, shards_per_agent)
+        order = np.argsort(labels, kind="stable")          # class-sorted pool
+        shards = contiguous_partition(n_pool, K * S)
+        deal = rng.permutation(K * S)
+        parts = [np.concatenate([order[shards[j]]
+                                 for j in deal[k * S:(k + 1) * S]])
+                 for k in range(K)]
+    elif kind == "iid":
+        perm = rng.permutation(n_pool)
+        parts = [perm[k::K] for k in range(K)]
+    else:
+        raise ValueError(f"unknown data kind {kind!r} — valid kinds for the "
+                         "regression path: ['dirichlet', 'iid', 'shards']")
+
+    U = np.empty((K, n_local, data.U.shape[-1]), data.U.dtype)
+    d = np.empty((K, n_local), data.d.dtype)
+    for k, part in enumerate(parts):
+        if len(part) == 0:  # pragma: no cover — dirichlet_partition backfills
+            raise ValueError(f"agent {k} received an empty partition")
+        agent_rng = np.random.default_rng(
+            np.random.SeedSequence([seed, 0x9A97, k]))
+        take = part[agent_rng.integers(0, len(part), size=n_local)]
+        U[k], d[k] = pool_U[take], pool_d[take]
+    resid = d - np.einsum("knm,m->kn", U, data.w_star)
+    return RegressionData(U=U, d=d, w_star=data.w_star, rho=data.rho,
+                          noise_std=resid.std(axis=1))
+
+
 def make_block_sampler(data: RegressionData, T: int, batch: int = 1):
     """Return sampler(key) -> ((T, K, B, M), (T, K, B)) uniform with
     replacement — matches the paper's 'sample n uniformly' model."""
@@ -92,6 +154,32 @@ def make_block_sampler(data: RegressionData, T: int, batch: int = 1):
                                   idx[..., None].repeat(M, -1), axis=2)
         d_b = jnp.take_along_axis(d[None, :, :], idx, axis=2)
         return (u_b, d_b)
+
+    return sampler
+
+
+def make_indexed_block_sampler(data: RegressionData, T: int, batch: int = 1,
+                               seed: int = 0):
+    """Return ``sampler(index) -> ((T, K, B, M), (T, K, B))`` — the
+    index-replayable sibling of :func:`make_block_sampler`.
+
+    Draw indices are a pure function of ``(seed, block_index, agent)``
+    (one :class:`numpy.random.SeedSequence` per pair), so any block can be
+    reconstructed from its index alone: checkpoint-resume replays the
+    exact stream with no data-state files.
+    """
+    U = np.asarray(data.U)
+    d = np.asarray(data.d)
+    K, N, M = U.shape
+
+    def sampler(index: int):
+        idx = np.empty((T, K, batch), np.int64)
+        for k in range(K):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([seed, int(index), k]))
+            idx[:, k, :] = rng.integers(0, N, size=(T, batch))
+        ar = np.arange(K)[None, :, None]
+        return (jnp.asarray(U[ar, idx]), jnp.asarray(d[ar, idx]))
 
     return sampler
 

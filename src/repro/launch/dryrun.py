@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.api.build import train_block_struct
 from repro.api.cli import add_spec_args, spec_from_args
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.configs.base import ArchBundle, InputShape, ModelConfig
@@ -70,22 +71,26 @@ def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     if shape.kind == "train":
         B_a = shape.global_batch // K
-        tok_shape = (T, K, B_a, shape.seq_len)
-        if cfg.num_codebooks:
-            tok_shape = tok_shape + (cfg.num_codebooks,)
-        bp = sh.batch_pspec(mesh, agent_axis=agent_axis, ndim=len(tok_shape),
-                            tp=tp, batch=B_a)
+        # one source of truth for the block layout: the same helper the
+        # DATASETS providers compile their shapes from (repro.api.build),
+        # so the roofline path cannot drift from the data path
+        struct = train_block_struct(cfg, T=T, K=K, batch=B_a,
+                                    seq=shape.seq_len,
+                                    img_dtype=jnp.bfloat16)
+        bp = sh.batch_pspec(mesh, agent_axis=agent_axis,
+                            ndim=struct["tokens"].ndim, tp=tp, batch=B_a)
         batch = {
-            "tokens": SDS(tok_shape, jnp.int32,
+            "tokens": SDS(struct["tokens"].shape, struct["tokens"].dtype,
                           sharding=jax.NamedSharding(mesh, bp)),
-            "labels": SDS(tok_shape, jnp.int32,
+            "labels": SDS(struct["labels"].shape, struct["labels"].dtype,
                           sharding=jax.NamedSharding(mesh, bp)),
         }
-        if cfg.img_tokens:
-            ip = sh.batch_pspec(mesh, agent_axis=agent_axis, ndim=5,
+        if "img_embeds" in struct:
+            ip = sh.batch_pspec(mesh, agent_axis=agent_axis,
+                                ndim=struct["img_embeds"].ndim,
                                 tp=tp, batch=B_a)
             batch["img_embeds"] = SDS(
-                (T, K, B_a, cfg.img_tokens, tf.VISION_DIM), jnp.bfloat16,
+                struct["img_embeds"].shape, struct["img_embeds"].dtype,
                 sharding=jax.NamedSharding(mesh, ip))
         return {"batch": batch, "key": SDS((2,), jnp.uint32)}
 

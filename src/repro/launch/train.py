@@ -38,7 +38,6 @@ from repro.api import build, spec_from_args
 from repro.api.cli import add_spec_args
 from repro.checkpoint import save_experiment
 from repro.core.privacy import epsilon_from_rdp_np, rdp_increment_np
-from repro.data.synthetic import lm_token_batch
 from repro.models import transformer as tf
 
 
@@ -114,17 +113,36 @@ def main():
 
     jit_step = jax.jit(eng.step)
 
-    def sample_block(k):
-        k_tok, k_img = jax.random.split(k)
-        shape = (T, K, run.batch, run.seq)
-        if cfg.num_codebooks:
-            shape = shape + (cfg.num_codebooks,)
-        batch = lm_token_batch(k_tok, shape, cfg.vocab_size)
-        if cfg.img_tokens:
-            batch["img_embeds"] = jax.random.normal(
-                k_img, (T, K, run.batch, cfg.img_tokens, tf.VISION_DIM),
-                jnp.float32) * 0.02
-        return batch
+    # the data half of the loop is compiled from spec.data by build():
+    # provider(block_index, key) — kind="iid" reproduces the legacy
+    # key-only stream bit-for-bit, the partitioned kinds (dirichlet/
+    # shards) replay any block from its index alone
+    sample_block = eng.data
+    if spec.data.kind != "iid":
+        sizes = [len(p) for p in sample_block.partitions]
+        print(f"data: {spec.data.kind} partition over {K} agents "
+              f"(alpha={spec.data.alpha:g}, seed={spec.data.seed}) — "
+              f"windows/agent min={min(sizes)} max={max(sizes)}; blocks "
+              "are index-replayable (resume re-derives every batch)")
+    if spec.run.local_steps_mode != "uniform":
+        mask = eng.step_mask
+        if mask is None:
+            print(f"local steps: mode={spec.run.local_steps_mode} on a "
+                  f"regular graph — every agent runs the full T={T}")
+        else:
+            t_k = np.asarray(mask.sum(axis=0), np.int64)
+            print(f"local steps: degree-aware T_k in [{t_k.min()}, "
+                  f"{t_k.max()}] (uniform T={T}; hubs run fewer eq.-17 "
+                  "steps, freezing early inside the shared scan)")
+    offload = getattr(eng, "offload", lambda s: s)
+    fetch = getattr(eng, "fetch", lambda s: s)
+    if getattr(eng, "ef_host_offload", False):
+        from repro.core.sharded import ef_host_sharding
+        host = ef_host_sharding()
+        print("comm: EF residual parks in host memory between blocks"
+              if host is not None else
+              "comm: --ef-host-offload requested but this backend exposes "
+              "no pinned_host memory space — offload is a documented no-op")
 
     eval_loss = jax.jit(jax.vmap(lambda p, b: tf.train_loss(p, cfg, b,
                                                             remat=False)))
@@ -158,8 +176,9 @@ def main():
                       f"{budget:g} — halting after {blocks_done} blocks")
                 break
         key, kb, ks = jax.random.split(key, 3)
-        batch = sample_block(kb)
-        state, metrics = jit_step(state, batch, ks)
+        batch = sample_block(i, kb)
+        state, metrics = jit_step(fetch(state), batch, ks)
+        state = offload(state)
         blocks_done = i + 1
         log_block = i % args.log_every == 0
         if privacy is not None and (budget or log_block):

@@ -53,6 +53,8 @@ PRESET_SPECS = {
                                                     scale=3.0),
     "private_diffusion":
         lambda: variants.private_diffusion(K, 0.02, T=1, q=0.8),
+    "heterogeneous_diffusion":
+        lambda: variants.heterogeneous_diffusion(K, 0.02, T=2, q=0.8),
 }
 
 
@@ -201,6 +203,11 @@ def _legacy_engine(name, loss):
             num_agents=K, local_steps=1, step_size=0.02, topology="ring",
             participation=0.8), loss,
             grad_transform=p.wrap(sgd()).update, privacy=p)
+    if name == "heterogeneous_diffusion":
+        return DiffusionEngine(DiffusionConfig(
+            num_agents=K, local_steps=2, step_size=0.02,
+            topology="scale_free", participation=0.8,
+            local_steps_mode="degree"), loss)
     raise AssertionError(name)
 
 

@@ -9,7 +9,8 @@ from repro.core import topology as T
 
 @pytest.mark.parametrize("kind,K", [
     ("ring", 5), ("ring", 20), ("full", 8), ("fedavg", 8),
-    ("erdos", 12), ("grid", 12),
+    ("erdos", 12), ("grid", 12), ("scale_free", 12), ("scale_free", 40),
+    ("small_world", 12), ("small_world", 40),
 ])
 def test_assumption1(kind, K):
     topo = T.make_topology(kind, K)
@@ -99,6 +100,71 @@ def test_is_primitive_doubling_semantics():
     assert not T.is_primitive(A9, max_power=5)   # needs length 8
     assert not T.is_primitive(A9, max_power=7)
     assert T.is_primitive(A9, max_power=8)
+
+
+def test_scale_free_structure():
+    """Barabási–Albert attachment: always connected (it grows from a
+    complete seed), degree-heterogeneous (hubs), deterministic per seed."""
+    adj = T.scale_free_adjacency(64, m=2, seed=3)
+    np.testing.assert_array_equal(adj, T.scale_free_adjacency(64, m=2,
+                                                              seed=3))
+    assert not np.array_equal(adj, T.scale_free_adjacency(64, m=2, seed=4))
+    assert T.is_primitive(T.metropolis_weights(adj))       # connected
+    deg = (adj & ~np.eye(64, dtype=bool)).sum(axis=1)
+    assert deg.min() >= 2                                  # every node has m
+    assert deg.max() >= 3 * deg.min()                      # hubs exist
+    # edge count: m edges per arriving node + the complete seed
+    assert adj.sum() - 64 == 2 * (3 + (64 - 3) * 2)
+    with pytest.raises(ValueError, match="K must be >= 2"):
+        T.scale_free_adjacency(1)
+
+
+def test_small_world_structure():
+    """Watts–Strogatz: rewire=0 is exactly the ring lattice; rewiring
+    keeps the graph connected and deterministic per seed."""
+    lattice = T.small_world_adjacency(20, hops=2, rewire=0.0, seed=0)
+    np.testing.assert_array_equal(lattice, T.ring_adjacency(20, hops=2))
+    adj = T.small_world_adjacency(20, hops=2, rewire=0.3, seed=1)
+    np.testing.assert_array_equal(
+        adj, T.small_world_adjacency(20, hops=2, rewire=0.3, seed=1))
+    assert not np.array_equal(adj, lattice)
+    assert T.is_primitive(T.metropolis_weights(adj))       # connected
+    # heavy rewiring + the connectivity fallback still yields a usable graph
+    heavy = T.small_world_adjacency(30, hops=2, rewire=1.0, seed=2)
+    assert T.is_primitive(T.metropolis_weights(heavy))
+    with pytest.raises(ValueError, match="K must be >= 3"):
+        T.small_world_adjacency(2)
+
+
+def test_make_topology_unknown_kind_lists_valid_kinds():
+    with pytest.raises(ValueError) as exc:
+        T.make_topology("hypercube", 8)
+    msg = str(exc.value)
+    for kind in T.TOPOLOGY_KINDS:
+        assert kind in msg, msg
+
+
+def test_spectral_gap_warns_on_disconnected():
+    two = np.kron(np.eye(2), np.ones((2, 2)) / 2)          # two components
+    with pytest.warns(UserWarning, match="disconnected"):
+        gap = T.spectral_gap(two)
+    assert gap <= 1e-12
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                     # connected: silent
+        assert T.spectral_gap(T.make_topology("ring", 8).A) > 0
+
+
+def test_neighbor_table_dmax_cap():
+    topo = T.make_topology("scale_free", 64, m=3, seed=0)
+    idx, valid = topo.neighbor_table()                     # uncapped: fine
+    assert idx.shape[0] == 64 and valid.shape == idx.shape
+    with pytest.raises(ValueError, match="neighbor-table cap"):
+        topo.neighbor_table(dmax_cap=max(2, topo.max_degree - 1))
+    # a cap the graph satisfies is a no-op
+    idx2, valid2 = topo.neighbor_table(dmax_cap=topo.max_degree)
+    np.testing.assert_array_equal(idx, idx2)
+    np.testing.assert_array_equal(valid, valid2)
 
 
 def test_metropolis_and_primitivity_cheap_at_K256():
